@@ -1,0 +1,32 @@
+"""Benchmark harness: one function per paper table. Prints
+``name,us_per_call,derived`` CSV rows (see tables.py for definitions)."""
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on table function names")
+    args = ap.parse_args()
+
+    from benchmarks.tables import ALL_TABLES
+    print("name,us_per_call,derived")
+    failures = 0
+    for fn in ALL_TABLES:
+        if args.only and args.only not in fn.__name__:
+            continue
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{fn.__name__}/ERROR,0,{type(e).__name__}: {e}",
+                  flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,246 @@
+"""Benchmark implementations — one function per paper table/figure.
+
+Each returns a list of (name, us_per_call, derived) rows; run.py prints CSV.
+
+  table1_archzoo    — Table 1 analog: the open-weight model zoo as runnable
+                      configs (reduced fwd-step timing per arch)
+  table2_signals    — Table 2(b): telemetry signal collection overhead
+  table3a/b/c       — Tables 3(a)/(b)/(c): per-row detection latency,
+                      hit/miss, and healthy-run false positives
+  mitigation_loop   — §5 closed loop: throughput/latency with mitigation
+                      off vs on
+  kernels_bench     — Pallas kernel hot spots vs jnp oracle (CPU interpret
+                      overhead is not meaningful; we time the oracle path
+                      and validate the kernel separately)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, n=5, warmup=2, **kw):
+    for _ in range(warmup):
+        fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn(*args, **kw)
+    return (time.perf_counter() - t0) / n * 1e6     # us
+
+
+# ----------------------------------------------------------------------
+
+def table1_archzoo() -> list[tuple]:
+    """Reduced-config forward-step timing for every assigned architecture."""
+    from repro.configs import ARCHS, ASSIGNED
+    from repro.models import build_model
+    rows = []
+    for arch in ASSIGNED:
+        cfg = ARCHS[arch].reduced()
+        m = build_model(cfg)
+        params = m.init(jax.random.key(0))
+        toks = jnp.ones((2, 32), jnp.int32)
+        batch = {"tokens": toks}
+        if cfg.family == "encdec":
+            batch["frontend"] = jnp.ones((2, 16, cfg.d_model))
+        if cfg.family == "vlm":
+            batch["frontend"] = jnp.ones((2, cfg.frontend_tokens,
+                                          cfg.d_model))
+        fwd = jax.jit(lambda p, b: m.forward(p, b)[0])
+        fwd(params, batch).block_until_ready()
+        us = _time(lambda: fwd(params, batch).block_until_ready(), n=5)
+        rows.append((f"table1/{arch}", us,
+                     f"params_full={ARCHS[arch].param_count():.3e}"))
+    return rows
+
+
+def table2_signals() -> list[tuple]:
+    """Telemetry plane overhead: ns/event with all 28 detectors live."""
+    import random
+    from repro.core import TelemetryPlane
+    from repro.core.events import Event, EventKind
+    rows = []
+    for tables, label in ((("3a",), "ns_table3a"),
+                          (("3a", "3b", "3c"), "full_28_detectors")):
+        plane = TelemetryPlane(n_nodes=4, mitigate=False, tables=tables)
+        rng = random.Random(0)
+        kinds = [EventKind.INGRESS_PKT, EventKind.EGRESS_PKT,
+                 EventKind.H2D_XFER, EventKind.D2H_XFER,
+                 EventKind.DISPATCH, EventKind.COLLECTIVE_BURST,
+                 EventKind.QUEUE_SAMPLE]
+        t = 0.0
+        t0 = time.perf_counter()
+        n = 30_000
+        for i in range(n):
+            t += rng.expovariate(20000.0)
+            plane.observe(Event(ts=t, kind=kinds[i % len(kinds)],
+                                node=i % 4, device=i % 4, flow=i % 64,
+                                size=4096, group=0, meta=i % 500))
+        wall = (time.perf_counter() - t0) / n * 1e6
+        rows.append((f"table2/{label}", wall,
+                     f"events={n};findings={len(plane.findings)}"))
+    return rows
+
+
+def _table3(table: str) -> list[tuple]:
+    from repro.core.runbooks import BY_TABLE
+    from repro.sim import SCENARIOS, run_scenario
+    rows = []
+    for entry in BY_TABLE[table]:
+        sc = SCENARIOS[entry.scenario]
+        t0 = time.perf_counter()
+        metrics, plane, _ = run_scenario(
+            dataclasses.replace(sc.fault), sc.params, sc.workload)
+        wall = (time.perf_counter() - t0) * 1e6
+        fired = {f.name for f in plane.findings}
+        hit = entry.row_id in fired
+        det_latency = (metrics.first_finding_ts - sc.fault.start
+                       if metrics.first_finding_ts > 0 else float("nan"))
+        rows.append((f"table{table}/{entry.row_id}", wall,
+                     f"hit={int(hit)};detect_latency_s={det_latency:.3f};"
+                     f"co_fired={len(fired - {entry.row_id})}"))
+    # healthy false-positive budget for this table's detectors
+    sc = SCENARIOS["healthy"]
+    _, plane, _ = run_scenario(dataclasses.replace(sc.fault), sc.params,
+                               sc.workload)
+    fps = [f for f in plane.findings
+           if any(e.row_id == f.name for e in BY_TABLE[table])]
+    rows.append((f"table{table}/healthy_false_positives", 0.0,
+                 f"count={len(fps)}"))
+    return rows
+
+
+def table3a() -> list[tuple]:
+    return _table3("3a")
+
+
+def table3b() -> list[tuple]:
+    return _table3("3b")
+
+
+def table3c() -> list[tuple]:
+    return _table3("3c")
+
+
+def mitigation_loop() -> list[tuple]:
+    """§5 closed loop: detection -> attribution -> actuation benefit."""
+    from repro.sim import SCENARIOS, run_scenario
+    rows = []
+    for name in ("early_completion", "decode_early_stop"):
+        sc = SCENARIOS[name]
+        off, _, _ = run_scenario(dataclasses.replace(sc.fault), sc.params,
+                                 sc.workload, mitigate=False)
+        on, plane, _ = run_scenario(dataclasses.replace(sc.fault),
+                                    sc.params, sc.workload, mitigate=True)
+        t_off = off.throughput(sc.params.duration)
+        t_on = on.throughput(sc.params.duration)
+        rows.append((f"mitigation/{name}", 0.0,
+                     f"tput_off={t_off:.0f};tput_on={t_on:.0f};"
+                     f"speedup={t_on / max(t_off, 1):.2f};"
+                     f"idle_off={off.idle_frac():.2f};"
+                     f"idle_on={on.idle_frac():.2f};"
+                     f"actions={len(plane.actions)}"))
+    return rows
+
+
+def serving_engine() -> list[tuple]:
+    """Live-engine throughput: continuous vs static batching (the paper's
+    early-completion pathology on the real JAX engine)."""
+    import random
+    from repro.configs import ARCHS
+    from repro.models import build_model
+    from repro.serving import EngineConfig, InferenceEngine, ServeRequest
+    cfg = ARCHS["qwen3-0.6b"].reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    rows = []
+    for continuous in (True, False):
+        rng = random.Random(1)
+        reqs = [ServeRequest(
+            req_id=i, arrival=0.0,
+            prompt=[rng.randrange(cfg.vocab) for _ in range(8)],
+            max_new_tokens=(40 if i % 4 == 0 else 4)) for i in range(12)]
+        eng = InferenceEngine(m, params, EngineConfig(
+            max_slots=4, max_seq=128, n_pages=256, telemetry=False))
+        eng.sched.set_continuous(continuous)
+        t0 = time.perf_counter()
+        rep = eng.run(reqs, max_steps=600)
+        wall = (time.perf_counter() - t0) * 1e6
+        label = "continuous" if continuous else "static"
+        rows.append((f"serving/{label}_batching", wall / max(rep['steps'], 1),
+                     f"steps={rep['steps']};tok_per_step="
+                     f"{rep['tokens_per_step']:.2f}"))
+    return rows
+
+
+def kernels_bench() -> list[tuple]:
+    """Hot-spot kernels: oracle timing + interpret-mode validation cost."""
+    from repro.kernels import ops, ref
+    ks = jax.random.split(jax.random.key(0), 4)
+    rows = []
+    q = jax.random.normal(ks[0], (2, 512, 8, 128), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 512, 2, 128), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 512, 2, 128), jnp.float32)
+    fa = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v,
+                                                         causal=True))
+    fa(q, k, v).block_until_ready()
+    rows.append(("kernels/flash_attention_ref_512", _time(
+        lambda: fa(q, k, v).block_until_ready()), "B2_S512_H8_D128"))
+
+    qd = jax.random.normal(ks[0], (8, 8, 128), jnp.float32)
+    kp = jax.random.normal(ks[1], (128, 16, 2, 128), jnp.float32)
+    vp = jax.random.normal(ks[2], (128, 16, 2, 128), jnp.float32)
+    tbl = jnp.arange(64, dtype=jnp.int32).reshape(8, 8)
+    lens = jnp.full((8,), 100, jnp.int32)
+    pa = jax.jit(ref.paged_attention_ref)
+    pa(qd, kp, vp, tbl, lens).block_until_ready()
+    rows.append(("kernels/paged_attention_ref", _time(
+        lambda: pa(qd, kp, vp, tbl, lens).block_until_ready()),
+        "B8_pages128"))
+
+    x = jax.random.normal(ks[0], (2, 512, 4, 64), jnp.float32)
+    a = -jnp.abs(jax.random.normal(ks[1], (2, 512, 4))) * 0.1
+    B = jax.random.normal(ks[2], (2, 512, 64), jnp.float32)
+    C = jax.random.normal(ks[3], (2, 512, 64), jnp.float32)
+    from repro.models.ssm import ssd_chunked
+    sc = jax.jit(lambda *a_: ssd_chunked(*a_, chunk=128)[0])
+    sc(x, a, B, C).block_until_ready()
+    rows.append(("kernels/ssd_chunked_512", _time(
+        lambda: sc(x, a, B, C).block_until_ready()), "B2_L512_H4_P64"))
+    return rows
+
+
+def roofline_readout() -> list[tuple]:
+    """Summarize the dry-run roofline artifacts (if present)."""
+    import glob
+    import json
+    import os
+    rows = []
+    for f in sorted(glob.glob("artifacts/roofline/*.json")):
+        try:
+            r = json.load(open(f))
+        except Exception:
+            continue
+        if not r.get("ok"):
+            continue
+        rl = r["roofline"]
+        rows.append((
+            f"roofline/{r['arch']}/{r['shape']}",
+            max(rl["compute_s"], rl["memory_s"], rl["collective_s"]) * 1e6,
+            f"dominant={rl['dominant']};frac={rl['roofline_fraction']:.3f};"
+            f"useful={rl['useful_flops_ratio']:.3f}"))
+    if not rows:
+        rows.append(("roofline/missing", 0.0,
+                     "run repro.launch.roofline first"))
+    return rows
+
+
+ALL_TABLES = [
+    table1_archzoo, table2_signals, table3a, table3b, table3c,
+    mitigation_loop, serving_engine, kernels_bench, roofline_readout,
+]

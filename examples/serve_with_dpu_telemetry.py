@@ -1,0 +1,63 @@
+"""Serving demo with an induced pathology on the LIVE engine: a skewed
+workload (a few very long generations among short ones) under static
+batching starves decode slots — the paper's 'early completion skew' — and
+the telemetry plane detects it and flips the engine to continuous batching
+(inflight remap), recovering throughput.
+
+Run:  PYTHONPATH=src python examples/serve_with_dpu_telemetry.py
+"""
+
+import random
+
+import jax
+
+from repro.configs import ARCHS
+from repro.models import build_model
+from repro.serving import EngineConfig, InferenceEngine, ServeRequest
+
+
+def make_requests(cfg, n=16):
+    rng = random.Random(7)
+    # one long generation per 4 short ones: under static batching the long
+    # one pins its batch while 3 slots idle for ~0.4 s — long enough for
+    # the windowed early-completion detector to confirm the decay
+    return [ServeRequest(
+        req_id=i, arrival=0.0,
+        prompt=[rng.randrange(cfg.vocab) for _ in range(8)],
+        max_new_tokens=(200 if i % 4 == 0 else 4)) for i in range(n)]
+
+
+def main() -> None:
+    cfg = ARCHS["qwen3-0.6b"].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    print("--- static batching (pathological: no remap of freed slots) ---")
+    eng = InferenceEngine(model, params, EngineConfig(
+        max_slots=4, max_seq=128, n_pages=256, telemetry=True,
+        mitigate=False))
+    eng.sched.set_continuous(False)
+    rep_static = eng.run(make_requests(cfg), max_steps=800)
+    print(f"steps={rep_static['steps']} "
+          f"tok/step={rep_static['tokens_per_step']:.2f} "
+          f"findings={rep_static['telemetry']['findings_by_row']}")
+
+    print("\n--- same workload, mitigation controller ON ---")
+    eng2 = InferenceEngine(model, params, EngineConfig(
+        max_slots=4, max_seq=128, n_pages=256, telemetry=True,
+        mitigate=True))
+    eng2.sched.set_continuous(False)       # starts in the pathological mode
+    rep_mit = eng2.run(make_requests(cfg), max_steps=800)
+    acts = rep_mit["telemetry"]["actions"]
+    print(f"steps={rep_mit['steps']} "
+          f"tok/step={rep_mit['tokens_per_step']:.2f} "
+          f"actions={[(round(t, 3), a) for t, a, _ in acts]}")
+    if rep_mit["steps"] < rep_static["steps"]:
+        print(f"\nmitigation recovered "
+              f"{rep_static['steps'] - rep_mit['steps']} decode steps "
+              f"({(1 - rep_mit['steps'] / rep_static['steps']) * 100:.0f}% "
+              "fewer): the closed loop works.")
+
+
+if __name__ == "__main__":
+    main()

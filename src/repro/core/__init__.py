@@ -1,0 +1,48 @@
+"""The paper's primary contribution: a DPU-analog telemetry, detection,
+attribution, and mitigation plane for distributed LLM inference/training.
+
+Public surface:
+  events       — DPU-observable event schema (the §4.3 boundary, enforced)
+  sketch       — O(1) streaming statistics (line-rate processing)
+  detectors    — 28 executable detectors, one per runbook row
+  runbooks     — Tables 3(a)/(b)/(c) as a declarative registry
+  attribution  — §4.2 cross-vantage root-cause attribution
+  mitigation   — §5 closed-loop controller
+  telemetry    — DPUAgent / TelemetryPlane tying it together
+"""
+
+from repro.core.attribution import Attribution, Attributor
+from repro.core.detectors import ALL_DETECTORS, Detector, DetectorConfig, Finding
+from repro.core.events import (
+    CollectiveOp,
+    Event,
+    EventKind,
+    EventStream,
+)
+from repro.core.mitigation import (
+    ACTIONS,
+    ActionRecord,
+    EngineControls,
+    MitigationController,
+    NullEngine,
+)
+from repro.core.runbooks import (
+    ALL_RUNBOOKS,
+    BY_ID,
+    BY_TABLE,
+    RUNBOOK_3A,
+    RUNBOOK_3B,
+    RUNBOOK_3C,
+    RunbookEntry,
+    build_detectors,
+)
+from repro.core.telemetry import DPUAgent, TelemetryPlane, TelemetryStats
+
+__all__ = [
+    "ACTIONS", "ALL_DETECTORS", "ALL_RUNBOOKS", "Attribution", "Attributor",
+    "BY_ID", "BY_TABLE", "CollectiveOp", "Detector", "DetectorConfig",
+    "DPUAgent", "EngineControls", "Event", "EventKind", "EventStream",
+    "Finding", "ActionRecord", "MitigationController", "NullEngine",
+    "RUNBOOK_3A", "RUNBOOK_3B", "RUNBOOK_3C", "RunbookEntry",
+    "TelemetryPlane", "TelemetryStats", "build_detectors",
+]

@@ -1,0 +1,1361 @@
+"""Executable detectors — one per row of the paper's Tables 3(a), 3(b), 3(c).
+
+Each detector consumes only DPU-observable events (``core.events``), keeps
+O(1)-per-key streaming state (``core.sketch``), and yields ``Finding`` records
+binding the paper's columns: signal -> lifecycle stage -> root cause ->
+mitigation directive.
+
+Detector contract:
+    d.interested : frozenset[EventKind]   events it wants
+    d.update(ev) : feed one event (line-rate path, must be cheap)
+    d.poll(now)  : -> list[Finding]       periodic evaluation (control path)
+
+Thresholds are deliberately self-calibrating (z-scores / CUSUM against learned
+baselines) so the same detector works on simulated traces and on the live JAX
+serving engine without per-workload tuning.  Absolute capacity thresholds
+(link saturation) take the capacity from ``DetectorConfig``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.events import (
+    CollectiveOp,
+    Event,
+    EventKind,
+)
+from repro.core.sketch import (
+    EWMA,
+    BurstMeter,
+    CUSUM,
+    GapTracker,
+    P2Quantile,
+    RateMeter,
+    SpreadTracker,
+    Welford,
+)
+
+# meta-field conventions (documented in events.py docstring-level contract):
+META_DIR_INGRESS = 0
+META_DIR_EGRESS = 1
+META_DIR_EW = 2          # east-west fabric retransmit
+META_FIN = 1             # EGRESS_PKT meta flag: final packet of flow
+META_P2P_INTRA = 0       # P2P_BURST inside one node (PCIe peer path)
+META_P2P_INTER = 1       # P2P_BURST between nodes (PP handoff)
+META_P2P_KV = 2          # P2P_BURST carrying KV-cache pages
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One detected pathological condition (a runbook row firing)."""
+
+    name: str              # runbook row id, e.g. "tp_straggler"
+    table: str             # "3a" | "3b" | "3c"
+    ts: float
+    severity: str          # "warn" | "critical"
+    node: int              # locus node (-1 = cluster-wide)
+    device: int            # locus device (-1 = n/a)
+    stage: str             # lifecycle stage affected (paper column 3)
+    root_cause: str        # likely root cause (paper column 5)
+    directive: str         # mitigation directive (paper column 6)
+    score: float           # detector-specific magnitude (z-score / ratio)
+    evidence: dict = field(default_factory=dict, compare=False)
+
+
+@dataclass
+class DetectorConfig:
+    """Shared capacity constants + sensitivity knobs."""
+
+    nic_gbps: float = 200.0          # NIC line rate (bytes/s derived below)
+    pcie_gBps: float = 64.0          # PCIe gen5 x16-ish GB/s
+    ici_gBps: float = 50.0           # per-link ICI GB/s (TPU v5e)
+    saturation_frac: float = 0.90    # "near link capacity"
+    z_warn: float = 3.0
+    z_crit: float = 6.0
+    skew_cv_warn: float = 0.35       # coefficient-of-variation skew threshold
+    skew_cv_crit: float = 0.70
+    jitter_warn: float = 1.5         # CV of inter-arrival gaps
+    jitter_crit: float = 3.0
+    starvation_factor: float = 8.0   # open gap vs learned p99 gap
+    min_events: int = 32             # warmup before a detector may fire
+
+    @property
+    def nic_Bps(self) -> float:
+        return self.nic_gbps * 1e9 / 8.0
+
+    @property
+    def pcie_Bps(self) -> float:
+        return self.pcie_gBps * 1e9
+
+    @property
+    def ici_Bps(self) -> float:
+        return self.ici_gBps * 1e9
+
+
+class Detector:
+    """Base class; subclasses fill the paper-row metadata and the logic."""
+
+    name: str = "abstract"
+    table: str = "?"
+    stage: str = "?"
+    root_cause: str = "?"
+    directive: str = "?"
+    interested: frozenset = frozenset()
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        self.cfg = cfg
+        self.events_seen = 0
+
+    def update(self, ev: Event) -> None:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def poll(self, now: float) -> list[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+    def _mk(self, now: float, score: float, node: int = -1, device: int = -1,
+            severity: str | None = None, **evidence) -> Finding:
+        sev = severity or ("critical" if score >= self.cfg.z_crit else "warn")
+        return Finding(
+            name=self.name, table=self.table, ts=now, severity=sev,
+            node=node, device=device, stage=self.stage,
+            root_cause=self.root_cause, directive=self.directive,
+            score=score, evidence=evidence,
+        )
+
+
+# ======================================================================
+# Table 3(a) — North-South runbook
+# ======================================================================
+
+
+class BurstAdmissionBacklog(Detector):
+    """3a.1 — sudden ingress spikes followed by queueing delay."""
+
+    name = "burst_admission_backlog"
+    table = "3a"
+    stage = "ingress (prefill/start)"
+    root_cause = "load spike from clients / front-end batching / NIC queue limits"
+    directive = "smooth input batching; rate-limit clients; increase NIC queue depth"
+    interested = frozenset({EventKind.INGRESS_PKT, EventKind.QUEUE_SAMPLE})
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        self.burst = BurstMeter()
+        self.queue = EWMA(0.05)
+        # bursts are much shorter than the poll interval: latch the peaks
+        # seen since the last poll (a DPU would export max-over-interval)
+        self.peak_burst = 0.0
+        self.peak_depth = 0
+
+    def update(self, ev: Event) -> None:
+        self.events_seen += 1
+        if ev.kind == EventKind.INGRESS_PKT:
+            self.burst.update(ev.ts, ev.size)
+            self.peak_burst = max(self.peak_burst,
+                                  self.burst.byte_burstiness())
+        elif ev.kind == EventKind.QUEUE_SAMPLE and ev.meta == META_DIR_INGRESS:
+            self.peak_depth = max(self.peak_depth, ev.depth)
+            self.queue.update(float(ev.depth))
+
+    def poll(self, now: float) -> list[Finding]:
+        if self.events_seen < self.cfg.min_events:
+            return []
+        b, depth = self.peak_burst, self.peak_depth
+        self.peak_burst, self.peak_depth = 0.0, 0
+        qz = self.queue.zscore(float(depth))
+        # burst alone is normal traffic; burst + REAL backlog is the
+        # pathology (absolute depth floor rejects transient 1-2 deep queues)
+        if b > 4.0 and qz > self.cfg.z_warn and depth >= 24:
+            return [self._mk(now, score=qz, burstiness=b, queue_depth=depth)]
+        return []
+
+
+class IngressStarvation(Detector):
+    """3a.2 — long gaps between ingress packets for some flows."""
+
+    name = "ingress_starvation"
+    table = "3a"
+    stage = "ingress -> PCIe feed"
+    root_cause = "upstream service jitter / uneven client distribution"
+    directive = "balance load-balancer hashing; check NIC RSS/flow steering"
+    interested = frozenset({EventKind.INGRESS_PKT})
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        self.per_node: dict[int, GapTracker] = {}
+
+    def update(self, ev: Event) -> None:
+        self.events_seen += 1
+        self.per_node.setdefault(ev.node, GapTracker()).update(ev.ts)
+
+    def poll(self, now: float) -> list[Finding]:
+        if self.events_seen < self.cfg.min_events:
+            return []
+        out = []
+        for node, gt in self.per_node.items():
+            base = max(gt.p99.value, 1e-6)
+            open_gap = gt.current_gap(now)
+            if gt.gaps.n >= 16 and open_gap > self.cfg.starvation_factor * base:
+                out.append(self._mk(now, score=open_gap / base, node=node,
+                                    open_gap=open_gap, p99_gap=base))
+        return out
+
+
+class FlowSkewAcrossSessions(Detector):
+    """3a.3 — some ingress flows high-volume, others sparse."""
+
+    name = "flow_skew_across_sessions"
+    table = "3a"
+    stage = "ingress (per-request)"
+    root_cause = "session-affinity mismatch / QUIC stream imbalance"
+    directive = "verify flow hashing; rebalance RPC streams"
+    interested = frozenset({EventKind.INGRESS_PKT})
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        self.flow_bytes: dict[int, int] = {}
+
+    def update(self, ev: Event) -> None:
+        self.events_seen += 1
+        if ev.flow >= 0:
+            self.flow_bytes[ev.flow] = self.flow_bytes.get(ev.flow, 0) + ev.size
+
+    def poll(self, now: float) -> list[Finding]:
+        if self.events_seen < self.cfg.min_events or len(self.flow_bytes) < 4:
+            return []
+        w = Welford()
+        for v in self.flow_bytes.values():
+            w.update(float(v))
+        cv = w.cv()
+        if cv > self.cfg.skew_cv_crit:
+            sev = "critical" if cv > 2 * self.cfg.skew_cv_crit else "warn"
+            return [self._mk(now, score=cv, severity=sev, cv=cv,
+                             n_flows=len(self.flow_bytes))]
+        return []
+
+
+class _RetransmitBase(Detector):
+    """Shared logic for retransmit-rate rows (3a.4, 3a.7, 3c.6).
+
+    Fires when the decayed retransmit rate exceeds a few percent of the
+    matching traffic's rate — the denominator is the traffic class the
+    retransmits belong to, not the whole event stream.
+    """
+
+    direction = META_DIR_INGRESS
+    traffic_kind = EventKind.INGRESS_PKT
+    interested = frozenset({EventKind.RETRANSMIT, EventKind.INGRESS_PKT,
+                            EventKind.EGRESS_PKT, EventKind.COLLECTIVE_BURST})
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        self.retx_rate = RateMeter(halflife=0.2)
+        self.traffic_rate = RateMeter(halflife=0.2)
+        self.retrans = 0
+        self.retrans_nodes: dict[int, int] = {}
+
+    def update(self, ev: Event) -> None:
+        self.events_seen += 1
+        if ev.kind == EventKind.RETRANSMIT and ev.meta == self.direction:
+            self.retrans += 1
+            self.retrans_nodes[ev.node] = self.retrans_nodes.get(ev.node, 0) + 1
+            self.retx_rate.update(ev.ts)
+        elif ev.kind == self.traffic_kind:
+            self.traffic_rate.update(ev.ts)
+
+    def poll(self, now: float) -> list[Finding]:
+        if self.events_seen < self.cfg.min_events or self.retrans < 8:
+            return []
+        ratio = self.retx_rate.rate / max(self.traffic_rate.rate, 1e-9)
+        if ratio > 0.02:
+            node = max(self.retrans_nodes, key=self.retrans_nodes.__getitem__,
+                       default=-1)
+            sev = "critical" if ratio > 0.10 else "warn"
+            return [self._mk(now, score=ratio * 100, node=node, severity=sev,
+                             retransmit_ratio=ratio,
+                             retransmits=self.retrans)]
+        return []
+
+
+class IngressDropRetransmit(_RetransmitBase):
+    """3a.4 — missing/retransmitted initial packets."""
+
+    name = "ingress_drop_retransmit"
+    table = "3a"
+    stage = "ingress (request birth)"
+    root_cause = "congestion / MTU mismatch / link errors"
+    directive = "enable NIC offloads (TSO/GRO); verify MTU; check cabling"
+    direction = META_DIR_INGRESS
+    traffic_kind = EventKind.INGRESS_PKT
+
+
+class EgressBacklogQueueing(Detector):
+    """3a.5 — responses accumulate in NIC queues before send."""
+
+    name = "egress_backlog_queueing"
+    table = "3a"
+    stage = "egress (response flush)"
+    root_cause = "CPU copy bottleneck / NIC buffer exhaustion"
+    directive = "offload checksums; zero-copy send; increase NIC buffers"
+    interested = frozenset({EventKind.QUEUE_SAMPLE})
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        self.per_node: dict[int, CUSUM] = {}
+        self.depths: dict[int, int] = {}
+
+    def update(self, ev: Event) -> None:
+        if ev.kind != EventKind.QUEUE_SAMPLE or ev.meta != META_DIR_EGRESS:
+            return
+        self.events_seen += 1
+        self.per_node.setdefault(ev.node, CUSUM(threshold=4.0)).update(
+            float(ev.depth))
+        self.depths[ev.node] = ev.depth
+
+    def poll(self, now: float) -> list[Finding]:
+        if self.events_seen < self.cfg.min_events:
+            return []
+        out = []
+        for node, cs in self.per_node.items():
+            if cs.stat > cs.threshold:
+                out.append(self._mk(now, score=cs.stat, node=node,
+                                    queue_depth=self.depths.get(node, 0)))
+        return out
+
+
+class EgressJitter(Detector):
+    """3a.6 — outgoing packets for a token stream spread unevenly."""
+
+    name = "egress_jitter"
+    table = "3a"
+    stage = "egress (decode outputs)"
+    root_cause = "scheduler variance / CPU<->NIC contention"
+    directive = "isolate runtime threads; pin NIC IRQs; widen batching window"
+    interested = frozenset({EventKind.EGRESS_PKT})
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        self.per_flow: dict[int, GapTracker] = {}
+
+    def update(self, ev: Event) -> None:
+        self.events_seen += 1
+        self.per_flow.setdefault(ev.flow, GapTracker()).update(ev.ts)
+
+    def poll(self, now: float) -> list[Finding]:
+        if self.events_seen < self.cfg.min_events:
+            return []
+        jittery, n = [], 0
+        for flow, gt in self.per_flow.items():
+            if gt.gaps.n < 16:
+                continue
+            n += 1
+            j = gt.jitter()
+            if j > 1.2 * self.cfg.jitter_warn:
+                jittery.append((flow, j))
+        if n > 0 and len(jittery) >= max(1, n // 4):
+            worst = max(j for _, j in jittery)
+            return [self._mk(now, score=worst, jittery_flows=len(jittery),
+                             flows_measured=n)]
+        return []
+
+
+class EgressDropRetransmit(_RetransmitBase):
+    """3a.7 — retransmissions/gaps in final response streams."""
+
+    name = "egress_drop_retransmit"
+    table = "3a"
+    stage = "egress"
+    root_cause = "NIC offload misconfig / fabric congestion / buffer underrun"
+    directive = "check offload settings; enable congestion control (ECN/PFC)"
+    direction = META_DIR_EGRESS
+    traffic_kind = EventKind.EGRESS_PKT
+
+
+class EarlyCompletionSkew(Detector):
+    """3a.8 — some egress flows terminate far earlier than peers."""
+
+    name = "early_completion_skew"
+    table = "3a"
+    stage = "egress (multi-stream decode)"
+    root_cause = "early-stop on short sequences; no remap of freed resources"
+    directive = "enable inflight remapping / load stealing for decode"
+    interested = frozenset({EventKind.EGRESS_PKT})
+
+    WINDOW = 0.05           # seconds per activity window
+    DECAY_WINDOWS = 6       # consecutive low windows before firing
+    LOW_FRAC = 0.5          # "low" = active flows < this fraction of peak
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        # per group: (window_start, flows_this_window, peak, low_streak)
+        self.state: dict[int, list] = {}
+        self.pending: dict[int, tuple[float, int, int]] = {}
+
+    def update(self, ev: Event) -> None:
+        self.events_seen += 1
+        st = self.state.get(ev.group)
+        if st is None:
+            # [window_start, flows, decayed_peak, low_streak, abs_peak]
+            st = [ev.ts, set(), 0.0, 0, 0]
+            self.state[ev.group] = st
+        if ev.ts - st[0] >= self.WINDOW:
+            n = len(st[1])
+            if n > 0:
+                # a healthy engine keeps slots refilled: the number of
+                # distinct streaming flows per window stays near its peak.
+                # Early-completion skew shows as a *sustained* decay while
+                # the group keeps emitting.
+                st[2] = max(st[2] * 0.995, float(n))
+                st[4] = max(st[4], n)
+                if n < self.LOW_FRAC * st[2] and st[4] >= 4:
+                    st[3] += 1
+                else:
+                    st[3] = 0
+                if st[3] >= self.DECAY_WINDOWS:
+                    self.pending[ev.group] = (ev.ts, n, st[4])
+            st[0] = ev.ts
+            st[1] = set()
+        st[1].add(ev.flow)
+
+    def poll(self, now: float) -> list[Finding]:
+        if self.events_seen < self.cfg.min_events or not self.pending:
+            return []
+        out = []
+        for g, (ts, n, peak) in self.pending.items():
+            done_frac = 1.0 - n / max(peak, 1)
+            out.append(self._mk(
+                now, score=done_frac * 10, node=-1,
+                severity="critical" if done_frac >= 0.7 else "warn",
+                group=g, active_flows=n, peak_flows=peak,
+                done_frac=done_frac))
+        self.pending.clear()
+        return out
+
+
+class BandwidthSaturation(Detector):
+    """3a.9 — NIC RX/TX at or near link capacity with queue buildup."""
+
+    name = "ingress_egress_bandwidth_saturation"
+    table = "3a"
+    stage = "ingress + egress"
+    root_cause = "shared NIC with storage/other jobs; insufficient link"
+    directive = "upgrade NIC; QoS partitioning; stagger workloads"
+    interested = frozenset({EventKind.INGRESS_PKT, EventKind.EGRESS_PKT,
+                            EventKind.QUEUE_SAMPLE})
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        # NIC-style byte counters: utilization = counter delta / interval.
+        # (Robust to interleaved event classes, unlike instantaneous rates.)
+        self.bytes: dict[int, int] = {}
+        self.depth: dict[int, int] = {}
+        self.last_poll: float | None = None
+
+    def update(self, ev: Event) -> None:
+        self.events_seen += 1
+        if ev.kind == EventKind.QUEUE_SAMPLE:
+            self.depth[ev.node] = max(self.depth.get(ev.node, 0), ev.depth)
+        else:
+            self.bytes[ev.node] = self.bytes.get(ev.node, 0) + ev.size
+
+    def poll(self, now: float) -> list[Finding]:
+        out: list[Finding] = []
+        if self.last_poll is not None and now > self.last_poll:
+            dt = now - self.last_poll
+            if self.events_seen >= self.cfg.min_events:
+                for node, nbytes in self.bytes.items():
+                    frac = nbytes / dt / self.cfg.nic_Bps
+                    if (frac > self.cfg.saturation_frac
+                            and self.depth.get(node, 0) > 0):
+                        out.append(self._mk(
+                            now, score=frac * 10, node=node,
+                            severity="critical" if frac > 1.0 else "warn",
+                            link_utilization=frac,
+                            queue_depth=self.depth.get(node, 0)))
+        self.last_poll = now
+        self.bytes.clear()
+        self.depth.clear()
+        return out
+
+
+# ======================================================================
+# Table 3(b) — PCIe observer runbook
+# ======================================================================
+
+
+class H2DDataStarvation(Detector):
+    """3b.1 — clustered H2D DMAs then long gaps before dispatches."""
+
+    name = "h2d_data_starvation"
+    table = "3b"
+    stage = "ingress -> PCIe (prefill & decode input feed)"
+    root_cause = "PCIe BW cap / NUMA miss / pageable (unpinned) host buffers"
+    directive = "pin memory; bind NUMA socket; verify PCIe link width/speed"
+    interested = frozenset({EventKind.H2D_XFER, EventKind.INGRESS_PKT})
+
+    REF_SAMPLES = 256    # freeze the healthy gap reference after this many
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        self.h2d_gap: dict[tuple[int, int], GapTracker] = {}
+        self.ref: dict[tuple[int, int], float] = {}
+        self.ingress_live: dict[int, float] = {}
+
+    def update(self, ev: Event) -> None:
+        self.events_seen += 1
+        if ev.kind == EventKind.INGRESS_PKT:
+            self.ingress_live[ev.node] = ev.ts
+        else:
+            key = (ev.node, ev.device)
+            gt = self.h2d_gap.setdefault(key, GapTracker())
+            gt.update(ev.ts)
+            if gt.gaps.n == self.REF_SAMPLES:
+                # freeze a healthy reference so a sustained stall can't
+                # teach the tracker that stalls are normal
+                self.ref[key] = max(gt.p99.value, 1e-6)
+
+    def poll(self, now: float) -> list[Finding]:
+        if self.events_seen < self.cfg.min_events:
+            return []
+        out = []
+        for (node, dev), gt in self.h2d_gap.items():
+            if gt.gaps.n < 16:
+                continue
+            base = self.ref.get((node, dev), max(gt.p99.value, 1e-6))
+            gap = max(gt.current_gap(now), gt.gaps.mean)
+            # "recent" on the ingress timescale (requests are sparser than
+            # per-step DMAs), not the H2D timescale
+            ingress_recent = now - self.ingress_live.get(node, -1e9) < 0.25
+            # starving: requests keep arriving but the device feed went quiet
+            if ingress_recent and gap > self.cfg.starvation_factor * base:
+                out.append(self._mk(now, score=gap / base, node=node,
+                                    device=dev, open_gap=gap, p99_gap=base))
+        return out
+
+
+class D2HReturnBottleneck(Detector):
+    """3b.2 — D2H DMAs linger; backlog after dispatches."""
+
+    name = "d2h_return_bottleneck"
+    table = "3b"
+    stage = "egress (logits/tokens back to host)"
+    root_cause = "PCIe saturation / IOMMU contention / CPU copy hotspots"
+    directive = "large pinned buffers; reduce copies; check IOMMU/ATS"
+    interested = frozenset({EventKind.DISPATCH, EventKind.D2H_XFER})
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        # dispatch->return latency per device
+        self.pending: dict[tuple[int, int], list[float]] = {}
+        self.lat: dict[tuple[int, int], CUSUM] = {}
+        self.last_lat: dict[tuple[int, int], float] = {}
+
+    def update(self, ev: Event) -> None:
+        self.events_seen += 1
+        key = (ev.node, ev.device)
+        if ev.kind == EventKind.DISPATCH:
+            q = self.pending.setdefault(key, [])
+            q.append(ev.ts)
+            if len(q) > 64:           # bounded state (DPU constraint)
+                del q[:32]
+        else:
+            q = self.pending.get(key)
+            if q:
+                lat = ev.ts - q.pop(0)
+                self.last_lat[key] = lat
+                self.lat.setdefault(
+                    key, CUSUM(threshold=6.0, rel_slack=0.2)).update(lat)
+
+    def poll(self, now: float) -> list[Finding]:
+        if self.events_seen < self.cfg.min_events:
+            return []
+        out = []
+        for key, cs in self.lat.items():
+            backlog = len(self.pending.get(key, []))
+            if cs.stat > cs.threshold:
+                out.append(self._mk(
+                    now, score=cs.stat, node=key[0], device=key[1],
+                    severity="critical" if backlog > 2 else "warn",
+                    backlog=backlog,
+                    last_latency=self.last_lat.get(key, 0.0)))
+                cs.stat *= 0.5   # hysteresis: decay after reporting
+        return out
+
+
+class KernelLaunchLatency(Detector):
+    """3b.3 — sporadic doorbells; idle gaps between H2D and next launch."""
+
+    name = "kernel_launch_control_latency"
+    table = "3b"
+    stage = "compute (device underutilized across prefill/decode)"
+    root_cause = "runtime overhead / CPU scheduler delays / too many tiny kernels"
+    directive = "batch ops; fuse kernels; raise launch queues; isolate CPU cores"
+    interested = frozenset({EventKind.DISPATCH, EventKind.H2D_XFER})
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        self.dispatch_gap: dict[tuple[int, int], GapTracker] = {}
+        self.h2d_last: dict[tuple[int, int], float] = {}
+        self.h2d_to_dispatch: dict[tuple[int, int], EWMA] = {}
+
+    def update(self, ev: Event) -> None:
+        self.events_seen += 1
+        key = (ev.node, ev.device)
+        if ev.kind == EventKind.H2D_XFER:
+            self.h2d_last[key] = ev.ts
+        else:
+            self.dispatch_gap.setdefault(key, GapTracker()).update(ev.ts)
+            if key in self.h2d_last:
+                self.h2d_to_dispatch.setdefault(key, EWMA(0.05)).update(
+                    ev.ts - self.h2d_last[key])
+
+    def poll(self, now: float) -> list[Finding]:
+        if self.events_seen < self.cfg.min_events:
+            return []
+        out = []
+        for key, gt in self.dispatch_gap.items():
+            lag = self.h2d_to_dispatch.get(key)
+            if gt.gaps.n < 16 or lag is None or lag.n < 8:
+                continue
+            # data arrived but launches are late & irregular
+            z = lag.zscore(lag.mean + lag.std * 0)  # stable baseline measure
+            if gt.jitter() > self.cfg.jitter_crit and lag.mean > 4 * max(
+                    gt.gaps.mean, 1e-9):
+                out.append(self._mk(now, score=gt.jitter(), node=key[0],
+                                    device=key[1], dispatch_jitter=gt.jitter(),
+                                    h2d_to_dispatch=lag.mean))
+        return out
+
+
+class IntraNodeGpuSkew(Detector):
+    """3b.4 — one device shows thin/irregular DMA while peers are steady."""
+
+    name = "intra_node_gpu_skew"
+    table = "3b"
+    stage = "compute (per-layer) -> propagates to internode"
+    root_cause = "uneven microbatching / memory pressure on a single device"
+    directive = "rebalance microbatches; unify stream priorities; check clocks"
+    interested = frozenset({EventKind.H2D_XFER, EventKind.D2H_XFER})
+
+    HALFLIFE = 1.0       # decay of per-device byte counters (seconds);
+                         # long enough that Poisson prefill-placement noise
+                         # averages out (~75 prefills/node per halflife)
+    PERSIST = 4          # consecutive skewed polls before firing
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        # node -> dev -> (decayed_bytes, last_ts)
+        self.bytes: dict[int, dict[int, list[float]]] = {}
+        self.streak: dict[int, int] = {}
+
+    def update(self, ev: Event) -> None:
+        self.events_seen += 1
+        devs = self.bytes.setdefault(ev.node, {})
+        cell = devs.get(ev.device)
+        if cell is None:
+            devs[ev.device] = [float(ev.size), ev.ts]
+        else:
+            decay = 0.5 ** ((ev.ts - cell[1]) / self.HALFLIFE)
+            cell[0] = cell[0] * decay + ev.size
+            cell[1] = ev.ts
+
+    def poll(self, now: float) -> list[Finding]:
+        if self.events_seen < self.cfg.min_events:
+            return []
+        out = []
+        for node, devs in self.bytes.items():
+            if len(devs) < 2:
+                continue
+            w = Welford()
+            vals = {}
+            for dev, (v, ts) in devs.items():
+                decayed = v * 0.5 ** ((now - ts) / self.HALFLIFE)
+                vals[dev] = decayed
+                w.update(decayed)
+            cv = w.cv()
+            if cv > self.cfg.skew_cv_warn:
+                self.streak[node] = self.streak.get(node, 0) + 1
+            else:
+                self.streak[node] = 0
+            # transient skew (a prefill burst landing on one device) washes
+            # out; persistent skew across polls is the pathology
+            if self.streak[node] >= self.PERSIST:
+                lagger = min(vals, key=vals.__getitem__)
+                sev = "critical" if cv > self.cfg.skew_cv_crit else "warn"
+                out.append(self._mk(now, score=cv * 10, node=node,
+                                    device=lagger, severity=sev, cv=cv))
+        return out
+
+
+class PCIeLinkSaturation(Detector):
+    """3b.5 — sustained near-peak PCIe throughput; periodic compute stalls."""
+
+    name = "pcie_link_saturation"
+    table = "3b"
+    stage = "ingress -> PCIe, egress"
+    root_cause = "oversubscribed PCIe switch / x8 link / competing DMAs"
+    directive = "verify x16 lanes; move devices off shared switch; stagger I/O"
+    interested = frozenset({EventKind.H2D_XFER, EventKind.D2H_XFER})
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        self.bytes: dict[int, int] = {}
+        self.sustained: dict[int, int] = {}
+        self.last_poll: float | None = None
+
+    def update(self, ev: Event) -> None:
+        self.events_seen += 1
+        self.bytes[ev.node] = self.bytes.get(ev.node, 0) + ev.size
+
+    def poll(self, now: float) -> list[Finding]:
+        out: list[Finding] = []
+        if self.last_poll is not None and now > self.last_poll:
+            dt = now - self.last_poll
+            if self.events_seen >= self.cfg.min_events:
+                for node, nbytes in self.bytes.items():
+                    frac = nbytes / dt / self.cfg.pcie_Bps
+                    if frac > self.cfg.saturation_frac:
+                        self.sustained[node] = self.sustained.get(node, 0) + 1
+                    else:
+                        self.sustained[node] = 0
+                    if self.sustained.get(node, 0) >= 3:  # sustained polls
+                        out.append(self._mk(now, score=frac * 10, node=node,
+                                            link_utilization=frac))
+        self.last_poll = now
+        self.bytes.clear()
+        return out
+
+
+class GpuP2PThrottling(Detector):
+    """3b.6 — intra-node P2P DMAs slow/variable (no NVLink path)."""
+
+    name = "gpu_p2p_throttling"
+    table = "3b"
+    stage = "compute (intra-box TP/PP)"
+    root_cause = "shared uplink on PCIe switch; ACS/ATS settings"
+    directive = "prefer NVLink/NVSwitch; same-switch placement; tune ACS/ATS"
+    interested = frozenset({EventKind.P2P_BURST})
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        # effective bandwidth per burst: size / duration(meta-encoded?) — the
+        # sim reports burst durations via paired events; here we use the gap
+        # between same-flow bursts vs size as a throughput proxy.
+        self.tput: dict[int, EWMA] = {}
+        self.last: dict[tuple[int, int], float] = {}
+        self.baseline = EWMA(0.02)
+
+    def update(self, ev: Event) -> None:
+        if ev.meta != META_P2P_INTRA:
+            return
+        self.events_seen += 1
+        key = (ev.node, ev.flow)
+        if key in self.last:
+            dt = max(ev.ts - self.last[key], 1e-9)
+            tput = ev.size / dt
+            self.tput.setdefault(ev.node, EWMA(0.1)).update(tput)
+            self.baseline.update(tput)
+        self.last[key] = ev.ts
+
+    def poll(self, now: float) -> list[Finding]:
+        if self.events_seen < self.cfg.min_events or self.baseline.n < 16:
+            return []
+        out = []
+        for node, ew in self.tput.items():
+            if ew.n < 8:
+                continue
+            # a node sustaining < half the cluster-median p2p throughput
+            if ew.mean < 0.5 * self.baseline.mean:
+                ratio = self.baseline.mean / max(ew.mean, 1e-9)
+                out.append(self._mk(now, score=ratio, node=node,
+                                    node_tput=ew.mean,
+                                    cluster_tput=self.baseline.mean))
+        return out
+
+
+class PinnedMemoryShortage(Detector):
+    """3b.7 — many small DMAs instead of large coalesced ones."""
+
+    name = "pinned_memory_shortage"
+    table = "3b"
+    stage = "ingress -> PCIe (feed) and egress (returns)"
+    root_cause = "insufficient pinned pools; fallback to pageable buffers"
+    directive = "pre-allocate larger pinned pools; coalesce transfers"
+    interested = frozenset({EventKind.H2D_XFER, EventKind.D2H_XFER})
+
+    LOG_SHRINK = 1.5   # fire when mean log-size drops this much (~4.5x)
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        # log-domain size tracking: the median-ish typical DMA size is what
+        # matters; log-mean is robust to the huge prefill-vs-decode spread
+        self.logsize: dict[int, EWMA] = {}
+        self.ref: dict[int, float] = {}
+        self.rate: dict[int, RateMeter] = {}
+
+    def update(self, ev: Event) -> None:
+        import math as _m
+        self.events_seen += 1
+        ew = self.logsize.setdefault(ev.node, EWMA(0.02))
+        ew.update(_m.log(max(ev.size, 1)))
+        if ew.n == 256:  # freeze a healthy-size reference after warmup
+            self.ref[ev.node] = ew.mean
+        self.rate.setdefault(ev.node, RateMeter(halflife=0.1)).update(ev.ts)
+
+    def poll(self, now: float) -> list[Finding]:
+        import math as _m
+        if self.events_seen < self.cfg.min_events:
+            return []
+        out = []
+        for node, ew in self.logsize.items():
+            ref = self.ref.get(node)
+            if ref is None:
+                continue
+            drop = ref - ew.mean
+            if drop > self.LOG_SHRINK:
+                out.append(self._mk(
+                    now, score=drop,
+                    severity="critical" if drop > 2.5 else "warn",
+                    node=node, typical_bytes=_m.exp(ew.mean),
+                    baseline_bytes=_m.exp(ref),
+                    dma_rate=self.rate[node].rate))
+        return out
+
+
+class HostCpuBottleneck(Detector):
+    """3b.8 — low DMA rate despite available PCIe bandwidth; late doorbells."""
+
+    name = "host_cpu_bottleneck"
+    table = "3b"
+    stage = "compute orchestration"
+    root_cause = "CPU contention / IRQ affinity / polling disabled"
+    directive = "isolate IRQs/threads; busy-poll; pin runtime threads"
+    interested = frozenset({EventKind.H2D_XFER, EventKind.DISPATCH,
+                            EventKind.INGRESS_PKT})
+
+    REF_SAMPLES = 256
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        self.dma_bytes: dict[int, int] = {}
+        self.dma_base: dict[int, EWMA] = {}
+        self.disp_gap: dict[int, GapTracker] = {}
+        self.disp_ref: dict[int, float] = {}
+        self.last_poll: float | None = None
+
+    def update(self, ev: Event) -> None:
+        self.events_seen += 1
+        if ev.kind == EventKind.H2D_XFER:
+            self.dma_bytes[ev.node] = self.dma_bytes.get(ev.node, 0) + ev.size
+        elif ev.kind == EventKind.DISPATCH:
+            gt = self.disp_gap.setdefault(ev.node, GapTracker())
+            gt.update(ev.ts)
+            if gt.gaps.n == self.REF_SAMPLES:
+                self.disp_ref[ev.node] = max(gt.p99.value, 1e-6)
+
+    def poll(self, now: float) -> list[Finding]:
+        out: list[Finding] = []
+        if self.last_poll is not None and now > self.last_poll:
+            dt = now - self.last_poll
+            for node, nbytes in self.dma_bytes.items():
+                cur = nbytes / dt
+                base = self.dma_base.setdefault(node, EWMA(0.2))
+                gt = self.disp_gap.get(node)
+                sagging = base.n >= 2 and cur < 0.4 * base.mean
+                if (sagging and self.events_seen >= self.cfg.min_events
+                        and gt is not None and gt.gaps.n > 8):
+                    pcie_headroom = cur < 0.3 * self.cfg.pcie_Bps
+                    ref = self.disp_ref.get(node, max(gt.p99.value, 1e-6))
+                    starved_dispatch = (
+                        max(gt.current_gap(now), gt.gaps.mean) > 3 * ref)
+                    if pcie_headroom and starved_dispatch:
+                        score = base.mean / max(cur, 1e-9)
+                        out.append(self._mk(
+                            now, score=min(score, 100.0), node=node,
+                            dma_byte_rate=cur, baseline=base.mean))
+                if base.n < 2 or not sagging:
+                    # never learn the baseline from a sagging window — the
+                    # pathology must not poison its own reference
+                    base.update(cur)
+        self.last_poll = now
+        self.dma_bytes.clear()
+        return out
+
+
+class MemoryRegistrationChurn(Detector):
+    """3b.9 — frequent map/unmap patterns around DMAs."""
+
+    name = "memory_registration_churn"
+    table = "3b"
+    stage = "ingress -> PCIe"
+    root_cause = "repeated registration of short-lived buffers"
+    directive = "reuse registered buffers; GPUDirect with persistent MR"
+    interested = frozenset({EventKind.MEM_REG, EventKind.H2D_XFER,
+                            EventKind.D2H_XFER})
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        self.reg: dict[int, int] = {}
+        self.dma: dict[int, int] = {}
+
+    def update(self, ev: Event) -> None:
+        self.events_seen += 1
+        if ev.kind == EventKind.MEM_REG:
+            self.reg[ev.node] = self.reg.get(ev.node, 0) + 1
+        else:
+            self.dma[ev.node] = self.dma.get(ev.node, 0) + 1
+
+    def poll(self, now: float) -> list[Finding]:
+        if self.events_seen < self.cfg.min_events:
+            return []
+        out = []
+        for node, regs in list(self.reg.items()):
+            dmas = self.dma.get(node, 0)
+            if dmas < 16:
+                continue
+            ratio = regs / dmas
+            if ratio > 0.5:  # healthy runtimes register once, DMA many times
+                out.append(self._mk(
+                    now, score=ratio * 10, node=node,
+                    severity="critical" if ratio > 1.0 else "warn",
+                    reg_per_dma=ratio, registrations=regs, dmas=dmas))
+            # exponential forgetting: judge recent windows, not all history
+            self.reg[node] = regs // 2
+            self.dma[node] = dmas // 2
+        return out
+
+
+class DecodeEarlyStopSkew(Detector):
+    """3b.10 — D2H drops off early on some streams/devices."""
+
+    name = "decode_early_stop_skew"
+    table = "3b"
+    stage = "compute (decode) -> egress"
+    root_cause = "sequence-length variance; scheduler not rebalancing"
+    directive = "inflight request remapping/packing; speculative decode policies"
+    interested = frozenset({EventKind.D2H_XFER})
+
+    REF_SAMPLES = 128
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        self.last: dict[tuple[int, int], float] = {}
+        self.gap: dict[tuple[int, int], GapTracker] = {}
+        self.ref: dict[tuple[int, int], float] = {}
+
+    def update(self, ev: Event) -> None:
+        self.events_seen += 1
+        key = (ev.node, ev.device)
+        self.last[key] = ev.ts
+        gt = self.gap.setdefault(key, GapTracker())
+        gt.update(ev.ts)
+        if gt.gaps.n == self.REF_SAMPLES:
+            self.ref[key] = max(gt.gaps.mean, 1e-6)
+
+    def poll(self, now: float) -> list[Finding]:
+        if self.events_seen < self.cfg.min_events or len(self.last) < 2:
+            return []
+        out = []
+        by_node: dict[int, list[tuple[int, float]]] = {}
+        for (node, dev), ts in self.last.items():
+            by_node.setdefault(node, []).append((dev, ts))
+        for node, devs in by_node.items():
+            if len(devs) < 2:
+                continue
+            tss = [t for _, t in devs]
+            newest = max(tss)
+            for dev, ts in devs:
+                gt = self.gap[(node, dev)]
+                if gt.gaps.n < 16:
+                    continue
+                typical = self.ref.get((node, dev), max(gt.gaps.mean, 1e-6))
+                silence = newest - ts
+                # device went silent many decode-steps ago while peers
+                # stream; the absolute floor rejects transient slot dips
+                # that continuous batching refills within a poll or two
+                if silence > max(self.cfg.starvation_factor * typical, 0.25):
+                    out.append(self._mk(now, score=silence / typical,
+                                        node=node, device=dev,
+                                        silence=silence, step_gap=typical))
+        return out
+
+
+# ======================================================================
+# Table 3(c) — East-West sensing runbook
+# ======================================================================
+
+
+class TPStraggler(Detector):
+    """3c.1 — wide arrival spread of collective bursts (max-min gap up)."""
+
+    name = "tp_straggler"
+    table = "3c"
+    stage = "compute (tensor-parallel collectives)"
+    root_cause = "skewed device load / PCIe starvation / memory imbalance on one node"
+    directive = "rebalance shards; check per-node PCIe feeds; adjust affinity"
+    interested = frozenset({EventKind.COLLECTIVE_BURST})
+
+    def __init__(self, cfg: DetectorConfig, group_size: int = 0) -> None:
+        super().__init__(cfg)
+        self.spread: dict[int, SpreadTracker] = {}
+        self.members: dict[int, set[int]] = {}
+        self.group_size = group_size
+
+    def update(self, ev: Event) -> None:
+        self.events_seen += 1
+        members = self.members.setdefault(ev.group, set())
+        members.add(ev.node)
+        st = self.spread.get(ev.group)
+        if st is None or st.expected != max(self.group_size, len(members)):
+            st = SpreadTracker(expected=max(self.group_size, len(members)))
+            self.spread[ev.group] = st
+        st.update(ev.meta, ev.node, ev.ts)   # meta carries the round id
+
+    def poll(self, now: float) -> list[Finding]:
+        if self.events_seen < self.cfg.min_events:
+            return []
+        out = []
+        for group, st in self.spread.items():
+            counted = sum(st.late_counts.values())
+            if st.rounds < 32 or counted < 16:
+                continue
+            worst = max(st.late_counts, key=st.late_counts.__getitem__)
+            frac = st.late_counts[worst] / counted
+            straggler = worst
+            # one participant is consistently last AND the spread is a large
+            # fraction of the inter-round period
+            if frac > 0.6 and st.spread.mean > 0:
+                z = st.spread.zscore(st.spread.mean + 2 * st.spread.std)
+                out.append(self._mk(
+                    now, score=frac * 10, node=straggler,
+                    severity="critical" if frac > 0.85 else "warn",
+                    group=group, straggler_frac=frac,
+                    mean_spread=st.spread.mean))
+        return out
+
+
+class PPBubble(Detector):
+    """3c.2 — large/growing gaps between stage-handoff bursts."""
+
+    name = "pp_bubble_stage_stall"
+    table = "3c"
+    stage = "pipeline parallel"
+    root_cause = "load imbalance across pipeline stages; early token-exit variance"
+    directive = "adjust microbatch partitioning; reassign stages; speculative fill"
+    interested = frozenset({EventKind.P2P_BURST})
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        self.gap: dict[int, GapTracker] = {}     # stage-pair group -> gaps
+        self.cusum: dict[int, CUSUM] = {}
+
+    def update(self, ev: Event) -> None:
+        if ev.meta != META_P2P_INTER:
+            return
+        self.events_seen += 1
+        g = ev.group
+        gap = self.gap.setdefault(g, GapTracker()).gaps
+        closed = self.gap[g].update(ev.ts)
+        if closed > 0:
+            self.cusum.setdefault(g, CUSUM(threshold=5.0)).update(closed)
+
+    def poll(self, now: float) -> list[Finding]:
+        if self.events_seen < self.cfg.min_events:
+            return []
+        out = []
+        for g, cs in self.cusum.items():
+            if cs.stat > cs.threshold:
+                gt = self.gap[g]
+                out.append(self._mk(now, score=cs.stat, group=g,
+                                    mean_gap=gt.gaps.mean,
+                                    max_gap=gt.max_gap))
+        return out
+
+
+class CrossNodeLoadSkew(Detector):
+    """3c.3 — uneven traffic volume per node for the same collective."""
+
+    name = "cross_node_load_skew"
+    table = "3c"
+    stage = "TP/PP compute -> internode"
+    root_cause = "shard imbalance; misaligned activation partitioning"
+    directive = "validate shard sizes; rebalance across nodes"
+    interested = frozenset({EventKind.COLLECTIVE_BURST})
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        self.bytes: dict[int, dict[int, float]] = {}   # group -> node -> bytes
+
+    def update(self, ev: Event) -> None:
+        self.events_seen += 1
+        nodes = self.bytes.setdefault(ev.group, {})
+        nodes[ev.node] = nodes.get(ev.node, 0.0) + ev.size
+
+    def poll(self, now: float) -> list[Finding]:
+        if self.events_seen < self.cfg.min_events:
+            return []
+        out = []
+        for group, nodes in self.bytes.items():
+            if len(nodes) < 2:
+                continue
+            w = Welford()
+            for v in nodes.values():
+                w.update(v)
+            cv = w.cv()
+            if cv > self.cfg.skew_cv_warn:
+                heavy = max(nodes, key=nodes.__getitem__)
+                sev = "critical" if cv > self.cfg.skew_cv_crit else "warn"
+                out.append(self._mk(now, score=cv * 10, node=heavy,
+                                    severity=sev, group=group, cv=cv))
+        return out
+
+
+class NetworkCongestion(Detector):
+    """3c.4 — periodic latency+jitter spikes across many links."""
+
+    name = "network_congestion_oversubscription"
+    table = "3c"
+    stage = "internode transfers (collectives & stage handoff)"
+    root_cause = "fat-tree oversubscription; ToR link hot spot"
+    directive = "check fabric counters; adaptive routing; spread ranks"
+    interested = frozenset({EventKind.COLLECTIVE_BURST, EventKind.P2P_BURST,
+                            EventKind.QUEUE_SAMPLE})
+
+    FABRIC_QUEUE = 2   # QUEUE_SAMPLE.meta for fabric queues
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        self.gap: dict[int, GapTracker] = {}       # per node
+        self.fabric_depth = EWMA(0.05)
+        self.last_depth = 0
+
+    def update(self, ev: Event) -> None:
+        self.events_seen += 1
+        if ev.kind == EventKind.QUEUE_SAMPLE:
+            if ev.meta == self.FABRIC_QUEUE:
+                self.fabric_depth.update(float(ev.depth))
+                self.last_depth = ev.depth
+            return
+        self.gap.setdefault(ev.node, GapTracker()).update(ev.ts)
+
+    def poll(self, now: float) -> list[Finding]:
+        if self.events_seen < self.cfg.min_events:
+            return []
+        jittery = 0
+        measured = 0
+        for gt in self.gap.values():
+            if gt.gaps.n < 16:
+                continue
+            measured += 1
+            if gt.jitter() > self.cfg.jitter_warn:
+                jittery += 1
+        qz = self.fabric_depth.zscore(float(self.last_depth))
+        # cluster-wide: more than half the measured nodes turn jittery together
+        if measured >= 2 and jittery >= max(2, measured // 2 + 1):
+            score = jittery / measured * 10 + max(qz, 0.0)
+            return [self._mk(now, score=score, jittery_nodes=jittery,
+                             measured_nodes=measured,
+                             fabric_queue_z=qz)]
+        return []
+
+
+class HeadOfLineBlocking(Detector):
+    """3c.5 — some streams stall while others flow; out-of-order bursts."""
+
+    name = "head_of_line_blocking"
+    table = "3c"
+    stage = "collective streams / P2P flows"
+    root_cause = "shared queue-depth exhaustion; RoCE/NIC queue imbalance"
+    directive = "increase NIC queue depth; QoS/ECN; verify fair sharing"
+    interested = frozenset({EventKind.P2P_BURST, EventKind.COLLECTIVE_BURST})
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        self.flow_gap: dict[int, GapTracker] = {}
+
+    def update(self, ev: Event) -> None:
+        self.events_seen += 1
+        key = ev.flow if ev.flow >= 0 else ev.group
+        self.flow_gap.setdefault(key, GapTracker()).update(ev.ts)
+
+    def poll(self, now: float) -> list[Finding]:
+        if self.events_seen < self.cfg.min_events:
+            return []
+        stalled, flowing = [], 0
+        for flow, gt in self.flow_gap.items():
+            if gt.gaps.n < 8:
+                continue
+            base = max(gt.p99.value, 1e-6)
+            if gt.current_gap(now) > self.cfg.starvation_factor * base:
+                stalled.append(flow)
+            else:
+                flowing += 1
+        # HoL signature: a strict subset stalls while the rest flows
+        if stalled and flowing > 0:
+            frac = len(stalled) / (len(stalled) + flowing)
+            if 0.05 < frac < 0.9:
+                return [self._mk(now, score=len(stalled),
+                                 severity="warn" if frac < 0.5 else "critical",
+                                 stalled_flows=len(stalled),
+                                 flowing_flows=flowing)]
+        return []
+
+
+class EWRetransmitStorm(_RetransmitBase):
+    """3c.6 — gaps + duplicate traffic or sudden retransmit storms."""
+
+    name = "retransmissions_packet_loss"
+    table = "3c"
+    stage = "all distributed phases"
+    root_cause = "fabric errors / congestion collapse / misconfigured PFC"
+    directive = "verify lossless config; tune buffer thresholds; check optics"
+    direction = META_DIR_EW
+    traffic_kind = EventKind.COLLECTIVE_BURST
+
+
+class CreditStarvation(Detector):
+    """3c.7 — long silences until remote credit updates arrive."""
+
+    name = "credit_starvation"
+    table = "3c"
+    stage = "internode (RDMA ops)"
+    root_cause = "too-small RDMA window; NIC credit depletion"
+    directive = "increase QP window; tune flow-control params"
+    interested = frozenset({EventKind.CREDIT_UPDATE, EventKind.P2P_BURST,
+                            EventKind.COLLECTIVE_BURST})
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        self.credit_gap: dict[int, GapTracker] = {}
+        self.traffic: dict[int, RateMeter] = {}
+        self.credits: dict[int, int] = {}
+
+    def update(self, ev: Event) -> None:
+        self.events_seen += 1
+        if ev.kind == EventKind.CREDIT_UPDATE:
+            self.credit_gap.setdefault(ev.node, GapTracker()).update(ev.ts)
+            self.credits[ev.node] = ev.depth
+        else:
+            self.traffic.setdefault(ev.node, RateMeter(0.1)).update(
+                ev.ts, ev.size)
+
+    def poll(self, now: float) -> list[Finding]:
+        if self.events_seen < self.cfg.min_events:
+            return []
+        out = []
+        for node, gt in self.credit_gap.items():
+            if gt.gaps.n < 8:
+                continue
+            base = max(gt.gaps.mean, 1e-6)
+            open_gap = gt.current_gap(now)
+            low_credit = self.credits.get(node, 1 << 30) <= 1
+            tr = self.traffic.get(node)
+            link_quiet = tr is None or tr.byte_rate < 0.1 * self.cfg.ici_Bps
+            if low_credit and link_quiet and open_gap > 4 * base:
+                out.append(self._mk(now, score=open_gap / base, node=node,
+                                    credit_gap=open_gap,
+                                    credits=self.credits.get(node, 0)))
+        return out
+
+
+class KVCacheTransferBottleneck(Detector):
+    """3c.8 — repeated large KV bursts for some tokens, others silent."""
+
+    name = "kv_cache_transfer_bottleneck"
+    table = "3c"
+    stage = "decode phase (PP handoff)"
+    root_cause = "sharded KV too large for link budget; non-uniform lengths"
+    directive = "compress KV; shard differently; apply caching policies"
+    interested = frozenset({EventKind.P2P_BURST})
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        self.flow_bytes: dict[int, float] = {}
+        self.burst_size = EWMA(0.05)
+        self.rate = RateMeter(0.1)
+
+    def update(self, ev: Event) -> None:
+        if ev.meta != META_P2P_KV:
+            return
+        self.events_seen += 1
+        self.flow_bytes[ev.flow] = self.flow_bytes.get(ev.flow, 0.0) + ev.size
+        self.burst_size.update(float(ev.size))
+        self.rate.update(ev.ts, ev.size)
+
+    def poll(self, now: float) -> list[Finding]:
+        if self.events_seen < self.cfg.min_events or len(self.flow_bytes) < 4:
+            return []
+        w = Welford()
+        for v in self.flow_bytes.values():
+            w.update(v)
+        cv = w.cv()
+        link_frac = self.rate.byte_rate / self.cfg.ici_Bps
+        if cv > self.cfg.skew_cv_crit and link_frac > 0.3:
+            return [self._mk(now, score=cv * 10, cv=cv,
+                             link_utilization=link_frac,
+                             mean_burst=self.burst_size.mean)]
+        return []
+
+
+class EarlyStopSkewAcrossNodes(Detector):
+    """3c.9 — some nodes stop sending mid-iteration while others continue."""
+
+    name = "early_stop_skew_across_nodes"
+    table = "3c"
+    stage = "decode (multi-node)"
+    root_cause = "sequence-length divergence; scheduler not masking early exits"
+    directive = "enable dynamic remapping; mask early-stop ranks"
+    # collective participation is the signal; a stopped rank may still move
+    # unrelated P2P traffic, so only COLLECTIVE_BURST counts as "sending"
+    interested = frozenset({EventKind.COLLECTIVE_BURST})
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        self.last: dict[int, float] = {}
+        self.gap: dict[int, GapTracker] = {}
+
+    def update(self, ev: Event) -> None:
+        self.events_seen += 1
+        self.last[ev.node] = ev.ts
+        self.gap.setdefault(ev.node, GapTracker()).update(ev.ts)
+
+    def poll(self, now: float) -> list[Finding]:
+        if self.events_seen < self.cfg.min_events or len(self.last) < 2:
+            return []
+        newest = max(self.last.values())
+        out = []
+        silent, active = [], 0
+        for node, ts in self.last.items():
+            gt = self.gap[node]
+            if gt.gaps.n < 8:
+                continue
+            typical = max(gt.gaps.mean, 1e-6)
+            if newest - ts > self.cfg.starvation_factor * typical:
+                silent.append((node, (newest - ts) / typical))
+            else:
+                active += 1
+        if silent and active > 0:
+            worst = max(s for _, s in silent)
+            node = max(silent, key=lambda x: x[1])[0]
+            out.append(self._mk(now, score=worst, node=node,
+                                silent_nodes=[n for n, _ in silent],
+                                active_nodes=active))
+        return out
+
+
+ALL_DETECTORS: tuple[type[Detector], ...] = (
+    # 3(a)
+    BurstAdmissionBacklog, IngressStarvation, FlowSkewAcrossSessions,
+    IngressDropRetransmit, EgressBacklogQueueing, EgressJitter,
+    EgressDropRetransmit, EarlyCompletionSkew, BandwidthSaturation,
+    # 3(b)
+    H2DDataStarvation, D2HReturnBottleneck, KernelLaunchLatency,
+    IntraNodeGpuSkew, PCIeLinkSaturation, GpuP2PThrottling,
+    PinnedMemoryShortage, HostCpuBottleneck, MemoryRegistrationChurn,
+    DecodeEarlyStopSkew,
+    # 3(c)
+    TPStraggler, PPBubble, CrossNodeLoadSkew, NetworkCongestion,
+    HeadOfLineBlocking, EWRetransmitStorm, CreditStarvation,
+    KVCacheTransferBottleneck, EarlyStopSkewAcrossNodes,
+)

@@ -1,0 +1,176 @@
+"""DPU-visible event schema — the paper's observability boundary, enforced.
+
+The paper (§4.1-4.3) is precise about what an out-of-band observer (a DPU
+inline with the NIC and sitting as a PCIe peer) can and cannot see:
+
+CAN see   : every ingress/egress packet (sub-microsecond timestamps, sizes,
+            retransmit flags), every host<->device DMA transaction, doorbell
+            writes (timing only), RDMA/collective bursts on the wire, NIC and
+            queue depths.
+CANNOT see: intra-device compute (matmuls, attention math, kernel utilization,
+            HBM traffic), NVLink-only collectives, CPU-only work (§4.3).
+
+This module encodes that boundary in the type system: there is deliberately NO
+event kind that carries intra-device compute information.  Detectors consume
+only these events; tests assert the enum stays closed.
+
+On TPU the vantage points map as (see DESIGN.md §2):
+  N-S  -> serving front-end request taps,
+  PCIe -> host<->device transfer taps around the JAX runtime boundary,
+  E-W  -> ICI collective bursts (sizes statically exact from compiled HLO,
+          timing from per-host step beacons).
+"""
+
+from __future__ import annotations
+
+import enum
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, Iterator
+
+
+class EventKind(enum.IntEnum):
+    """Closed set of DPU-observable event kinds.
+
+    Order groups the three vantage points of the paper's three runbooks.
+    """
+
+    # --- North-South (NIC inline; Table 3a) ---
+    INGRESS_PKT = 0       # request bytes arriving from clients
+    EGRESS_PKT = 1        # response/token bytes leaving toward clients
+    RETRANSMIT = 2        # observed retransmission / duplicate ACK
+    QUEUE_SAMPLE = 3      # periodic NIC / scheduler queue-depth sample
+
+    # --- PCIe peer (host<->device path; Table 3b) ---
+    H2D_XFER = 4          # host-to-device DMA (bytes, device, flow)
+    D2H_XFER = 5          # device-to-host DMA (bytes, device, flow)
+    DISPATCH = 6          # doorbell-analog: a launch happened (timing ONLY)
+    MEM_REG = 7           # memory map/unmap (registration churn)
+
+    # --- East-West (inter-node wire; Table 3c) ---
+    COLLECTIVE_BURST = 8  # collective traffic burst (op kind, bytes, group)
+    P2P_BURST = 9         # point-to-point transfer (PP handoff, KV migration)
+    CREDIT_UPDATE = 10    # RDMA flow-control credit grant observed
+
+
+#: Kinds belonging to each vantage point (used by the attribution engine).
+NORTH_SOUTH = frozenset(
+    {EventKind.INGRESS_PKT, EventKind.EGRESS_PKT, EventKind.RETRANSMIT,
+     EventKind.QUEUE_SAMPLE}
+)
+PCIE = frozenset(
+    {EventKind.H2D_XFER, EventKind.D2H_XFER, EventKind.DISPATCH,
+     EventKind.MEM_REG}
+)
+EAST_WEST = frozenset(
+    {EventKind.COLLECTIVE_BURST, EventKind.P2P_BURST, EventKind.CREDIT_UPDATE}
+)
+
+
+class CollectiveOp(enum.IntEnum):
+    ALL_REDUCE = 0
+    ALL_GATHER = 1
+    REDUCE_SCATTER = 2
+    ALL_TO_ALL = 3
+    PERMUTE = 4
+
+
+@dataclass(frozen=True, slots=True)
+class Event:
+    """One observation at the DPU vantage point.
+
+    Fields are the superset a BlueField-class observer exports; unused fields
+    default to neutral values so the record stays a flat, cheap struct.
+    """
+
+    ts: float                 # seconds; sub-microsecond resolution in the sim
+    kind: EventKind
+    node: int                 # host/node id where observed
+    device: int = -1          # local device id (PCIe events), -1 = n/a
+    flow: int = -1            # request/flow/session id, -1 = n/a
+    size: int = 0             # bytes on the wire / DMA transaction size
+    depth: int = 0            # queue depth (QUEUE_SAMPLE) or credit count
+    op: int = -1              # CollectiveOp for COLLECTIVE_BURST, -1 otherwise
+    group: int = -1           # collective/TP/PP group id
+    meta: int = 0             # small free int (e.g. stage id, retry count)
+
+    def vantage(self) -> str:
+        if self.kind in NORTH_SOUTH:
+            return "north-south"
+        if self.kind in PCIE:
+            return "pcie"
+        return "east-west"
+
+
+# Forbidden concepts: the schema must never grow fields/kinds that expose
+# intra-device compute.  Tests grep these names against the module source.
+FORBIDDEN_OBSERVABLES = (
+    "flops", "kernel_name", "hbm_bytes", "sm_util", "mxu_util",
+    "arithmetic_intensity", "register", "warp", "occupancy",
+)
+
+
+class EventStream:
+    """Append-only event buffer with cheap filtered iteration.
+
+    The simulator and the live engine both write Events here; detectors read.
+    Kept deliberately simple (list-backed) — line-rate constraints are modeled
+    by the *sketches* (O(1) memory), not by this container, which exists so
+    tests/benchmarks can replay and slice traces.
+    """
+
+    __slots__ = ("_events", "_subscribers")
+
+    def __init__(self) -> None:
+        self._events: list[Event] = []
+        self._subscribers: list[Callable[[Event], None]] = []
+
+    def emit(self, event: Event) -> None:
+        self._events.append(event)
+        for sub in self._subscribers:
+            sub(event)
+
+    def subscribe(self, fn: Callable[[Event], None]) -> None:
+        """Register a line-rate consumer (a detector's update hook)."""
+        self._subscribers.append(fn)
+
+    def extend(self, events: Iterable[Event]) -> None:
+        for e in events:
+            self.emit(e)
+
+    def __len__(self) -> int:
+        return len(self._events)
+
+    def __iter__(self) -> Iterator[Event]:
+        return iter(self._events)
+
+    def select(
+        self,
+        kind: EventKind | None = None,
+        node: int | None = None,
+        device: int | None = None,
+        flow: int | None = None,
+        t0: float = float("-inf"),
+        t1: float = float("inf"),
+    ) -> list[Event]:
+        out = []
+        for e in self._events:
+            if kind is not None and e.kind != kind:
+                continue
+            if node is not None and e.node != node:
+                continue
+            if device is not None and e.device != device:
+                continue
+            if flow is not None and e.flow != flow:
+                continue
+            if not (t0 <= e.ts <= t1):
+                continue
+            out.append(e)
+        return out
+
+    def merged(*streams: "EventStream") -> list[Event]:
+        """Time-ordered merge of several per-node streams (cluster view)."""
+        return sorted(
+            itertools.chain.from_iterable(s._events for s in streams),
+            key=lambda e: e.ts,
+        )

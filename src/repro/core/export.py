@@ -1,0 +1,36 @@
+"""Render the paper's Tables 3(a)/(b)/(c) back out of the executable
+registry — documentation stays generated from the single source of truth.
+
+  PYTHONPATH=src python -m repro.core.export > RUNBOOKS.md
+"""
+
+from __future__ import annotations
+
+from repro.core.mitigation import ACTIONS
+from repro.core.runbooks import BY_TABLE
+
+TITLES = {
+    "3a": "Table 3(a) — North-South Runbook",
+    "3b": "Table 3(b) — PCIe Observer Runbook",
+    "3c": "Table 3(c) — East-West Sensing Runbook",
+}
+
+
+def render() -> str:
+    out = ["# Runbooks (generated from repro.core.runbooks)\n"]
+    for table in ("3a", "3b", "3c"):
+        out.append(f"\n## {TITLES[table]}\n")
+        out.append("| Skew/Imbalance | Signal (Red Flag) | Lifecycle "
+                   "Stages | Likely Root Cause | Mitigation Directives | "
+                   "Detector | Controller Action |")
+        out.append("|---|---|---|---|---|---|---|")
+        for e in BY_TABLE[table]:
+            out.append(
+                f"| {e.title} | {e.signal} | {e.stages} | {e.root_cause} "
+                f"| {e.mitigation} | `{e.detector_cls.__name__}` "
+                f"| `{e.action}`: {ACTIONS[e.action]} |")
+    return "\n".join(out) + "\n"
+
+
+if __name__ == "__main__":
+    print(render(), end="")

@@ -1,0 +1,371 @@
+"""Line-rate streaming statistics for the DPU-analog telemetry plane.
+
+A DPU processing packets at line rate cannot buffer traces; it keeps O(1)
+per-flow state.  Every statistic detectors rely on is therefore implemented
+as a constant-memory streaming sketch:
+
+  EWMA          — exponentially weighted mean (+variance, Welford-style)
+  P2Quantile    — Jain & Chlamtac's P² algorithm: quantile without storage
+  CUSUM         — one-sided cumulative-sum change-point detector
+  RateMeter     — events/bytes per second over a sliding decay window
+  GapTracker    — inter-arrival gap stats (starvation / jitter signals)
+  SpreadTracker — max-min arrival spread within tagged groups (straggler signal)
+  BurstMeter    — short-window burst magnitude vs long-window baseline
+
+All pure Python / float math — no JAX — because these run on the host telemetry
+path, off the accelerator critical path (the paper's "offload to the DPU").
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+
+class EWMA:
+    """Exponentially weighted moving average and variance."""
+
+    __slots__ = ("alpha", "mean", "var", "n")
+
+    def __init__(self, alpha: float = 0.05) -> None:
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        self.alpha = alpha
+        self.mean = 0.0
+        self.var = 0.0
+        self.n = 0
+
+    def update(self, x: float) -> float:
+        self.n += 1
+        if self.n == 1:
+            self.mean = x
+            self.var = 0.0
+        else:
+            delta = x - self.mean
+            self.mean += self.alpha * delta
+            # EW variance (West 1979): decays old variance, adds new deviation.
+            self.var = (1.0 - self.alpha) * (self.var + self.alpha * delta * delta)
+        return self.mean
+
+    @property
+    def std(self) -> float:
+        return math.sqrt(max(self.var, 0.0))
+
+    def zscore(self, x: float) -> float:
+        """How anomalous is x against the learned baseline."""
+        if self.n < 2 or self.std == 0.0:
+            return 0.0
+        return (x - self.mean) / self.std
+
+
+class P2Quantile:
+    """P² algorithm (Jain & Chlamtac 1985): streaming quantile in O(1) memory.
+
+    Tracks a single quantile q with five markers; no sample storage.  Accuracy
+    is within a few percent for smooth distributions — exactly the trade a DPU
+    makes.
+    """
+
+    __slots__ = ("q", "n", "heights", "pos", "desired", "incr", "count")
+
+    def __init__(self, q: float = 0.99) -> None:
+        if not 0.0 < q < 1.0:
+            raise ValueError(f"quantile must be in (0,1), got {q}")
+        self.q = q
+        self.heights: list[float] = []
+        self.pos = [1.0, 2.0, 3.0, 4.0, 5.0]
+        self.desired = [1.0, 1.0 + 2.0 * q, 1.0 + 4.0 * q, 3.0 + 2.0 * q, 5.0]
+        self.incr = [0.0, q / 2.0, q, (1.0 + q) / 2.0, 1.0]
+        self.count = 0
+
+    def update(self, x: float) -> None:
+        self.count += 1
+        if len(self.heights) < 5:
+            self.heights.append(x)
+            self.heights.sort()
+            return
+        h = self.heights
+        # locate cell k
+        if x < h[0]:
+            h[0] = x
+            k = 0
+        elif x >= h[4]:
+            h[4] = x
+            k = 3
+        else:
+            k = 0
+            for i in range(1, 4):
+                if x < h[i]:
+                    k = i - 1
+                    break
+            else:
+                k = 3
+        for i in range(k + 1, 5):
+            self.pos[i] += 1.0
+        for i in range(5):
+            self.desired[i] += self.incr[i]
+        # adjust interior markers with parabolic interpolation
+        for i in range(1, 4):
+            d = self.desired[i] - self.pos[i]
+            if (d >= 1.0 and self.pos[i + 1] - self.pos[i] > 1.0) or (
+                d <= -1.0 and self.pos[i - 1] - self.pos[i] < -1.0
+            ):
+                s = 1.0 if d >= 0 else -1.0
+                hp = self._parabolic(i, s)
+                if h[i - 1] < hp < h[i + 1]:
+                    h[i] = hp
+                else:
+                    h[i] = self._linear(i, s)
+                self.pos[i] += s
+
+    def _parabolic(self, i: int, s: float) -> float:
+        h, p = self.heights, self.pos
+        return h[i] + s / (p[i + 1] - p[i - 1]) * (
+            (p[i] - p[i - 1] + s) * (h[i + 1] - h[i]) / (p[i + 1] - p[i])
+            + (p[i + 1] - p[i] - s) * (h[i] - h[i - 1]) / (p[i] - p[i - 1])
+        )
+
+    def _linear(self, i: int, s: float) -> float:
+        h, p = self.heights, self.pos
+        j = i + int(s)
+        return h[i] + s * (h[j] - h[i]) / (p[j] - p[i])
+
+    @property
+    def value(self) -> float:
+        if not self.heights:
+            return 0.0
+        if len(self.heights) < 5:
+            # exact small-sample quantile
+            idx = min(int(self.q * len(self.heights)), len(self.heights) - 1)
+            return sorted(self.heights)[idx]
+        return self.heights[2]
+
+
+class CUSUM:
+    """One-sided cumulative-sum change detector on a drifting baseline.
+
+    Fires when the cumulative positive deviation from (baseline + slack)
+    exceeds ``threshold`` standard-ish units.  Self-calibrating: the baseline
+    is an EWMA of the input, so detectors need no per-workload tuning.
+    """
+
+    __slots__ = ("baseline", "slack", "rel_slack", "threshold", "stat",
+                 "fired_at", "n")
+
+    def __init__(self, slack: float = 0.5, threshold: float = 5.0,
+                 alpha: float = 0.02, rel_slack: float = 0.05) -> None:
+        self.baseline = EWMA(alpha)
+        self.slack = slack
+        # floor the deviation scale at rel_slack * |mean| so near-constant
+        # streams (std -> 0) don't turn numeric noise into huge z-scores
+        self.rel_slack = rel_slack
+        self.threshold = threshold
+        self.stat = 0.0
+        self.fired_at: int | None = None
+        self.n = 0
+
+    def update(self, x: float) -> bool:
+        self.n += 1
+        if self.baseline.n >= 8:  # need a warm baseline before accumulating
+            scale = max(self.baseline.std,
+                        self.rel_slack * abs(self.baseline.mean), 1e-9)
+            dev = (x - self.baseline.mean) / scale - self.slack
+            self.stat = max(0.0, self.stat + dev)
+        self.baseline.update(x)
+        fired = self.stat > self.threshold
+        if fired and self.fired_at is None:
+            self.fired_at = self.n
+        return fired
+
+    def reset(self) -> None:
+        self.stat = 0.0
+        self.fired_at = None
+
+
+class RateMeter:
+    """Decayed events/sec and bytes/sec meter (token-bucket style)."""
+
+    __slots__ = ("halflife", "_rate", "_brate", "_last_ts")
+
+    def __init__(self, halflife: float = 0.1) -> None:
+        self.halflife = halflife
+        self._rate = 0.0
+        self._brate = 0.0
+        self._last_ts: float | None = None
+
+    def update(self, ts: float, nbytes: int = 0) -> None:
+        if self._last_ts is None:
+            self._last_ts = ts
+            self._rate = 0.0
+            self._brate = 0.0
+            return
+        dt = max(ts - self._last_ts, 1e-9)
+        decay = 0.5 ** (dt / self.halflife)
+        self._rate = self._rate * decay + (1.0 - decay) / dt
+        self._brate = self._brate * decay + (1.0 - decay) * nbytes / dt
+        self._last_ts = ts
+
+    @property
+    def rate(self) -> float:
+        return self._rate
+
+    @property
+    def byte_rate(self) -> float:
+        return self._brate
+
+    def rate_at(self, now: float) -> float:
+        """Event rate with decay applied up to ``now`` (for stale reads)."""
+        if self._last_ts is None:
+            return 0.0
+        return self._rate * 0.5 ** (max(now - self._last_ts, 0.0)
+                                    / self.halflife)
+
+    def byte_rate_at(self, now: float) -> float:
+        if self._last_ts is None:
+            return 0.0
+        return self._brate * 0.5 ** (max(now - self._last_ts, 0.0)
+                                     / self.halflife)
+
+
+class GapTracker:
+    """Inter-arrival gap statistics: mean/EW-variance + running max gap.
+
+    Starvation red flags ("long gaps between ingress packets", Table 3a row 2;
+    "doorbells sporadic", 3b row 3) and jitter ("packets spread unevenly over
+    time", 3a row 6) both reduce to gap statistics.
+    """
+
+    __slots__ = ("gaps", "last_ts", "max_gap", "p99")
+
+    def __init__(self, alpha: float = 0.05) -> None:
+        self.gaps = EWMA(alpha)
+        self.p99 = P2Quantile(0.99)
+        self.last_ts: float | None = None
+        self.max_gap = 0.0
+
+    def update(self, ts: float) -> float:
+        """Returns the gap that just closed (0.0 for the first event)."""
+        if self.last_ts is None:
+            self.last_ts = ts
+            return 0.0
+        gap = ts - self.last_ts
+        self.last_ts = ts
+        self.gaps.update(gap)
+        self.p99.update(gap)
+        self.max_gap = max(self.max_gap, gap)
+        return gap
+
+    def current_gap(self, now: float) -> float:
+        """Open gap since the last event — the live starvation signal."""
+        if self.last_ts is None:
+            return 0.0
+        return now - self.last_ts
+
+    def jitter(self) -> float:
+        """Coefficient of variation of inter-arrival gaps."""
+        if self.gaps.n < 2 or self.gaps.mean <= 0.0:
+            return 0.0
+        return self.gaps.std / self.gaps.mean
+
+
+class SpreadTracker:
+    """Max-min arrival spread within tagged rounds (the straggler statistic).
+
+    Table 3c row 1 (TP straggler): "wide arrival spread of collective bursts
+    (max-min arrival gap up)".  Each collective round r collects one arrival
+    timestamp per participant; spread(r) = max - min.  We keep an EWMA of the
+    spread plus the worst offender identity counts.
+    """
+
+    __slots__ = ("spread", "arrivals", "late_counts", "expected", "rounds")
+
+    def __init__(self, expected: int, alpha: float = 0.1) -> None:
+        self.expected = expected
+        self.spread = EWMA(alpha)
+        self.arrivals: dict[int, dict[int, float]] = {}
+        self.late_counts: dict[int, int] = {}
+        self.rounds = 0
+
+    MIN_SPREAD = 1e-6   # ignore tie rounds: a zero/near-zero spread has no
+                        # meaningful "slowest" participant
+
+    def update(self, round_id: int, participant: int, ts: float) -> float | None:
+        """Record an arrival; returns the spread when the round completes."""
+        arr = self.arrivals.setdefault(round_id, {})
+        arr[participant] = ts
+        if len(arr) < self.expected:
+            return None
+        self.rounds += 1
+        tss = arr.values()
+        spread = max(tss) - min(tss)
+        if spread > self.MIN_SPREAD:
+            slowest = max(arr, key=arr.__getitem__)
+            self.late_counts[slowest] = self.late_counts.get(slowest, 0) + 1
+        self.spread.update(spread)
+        del self.arrivals[round_id]
+        return spread
+
+    def dominant_straggler(self) -> tuple[int, float]:
+        """(participant, fraction of rounds it was slowest)."""
+        if not self.late_counts or self.rounds == 0:
+            return (-1, 0.0)
+        worst = max(self.late_counts, key=self.late_counts.__getitem__)
+        return worst, self.late_counts[worst] / self.rounds
+
+
+class BurstMeter:
+    """Short-window rate vs long-window baseline — the microburst statistic.
+
+    Table 3a row 1 (burst admission backlog) and §4.1 "early detection of
+    microbursts".  burstiness() >> 1 means a short spike well above sustained
+    load.
+    """
+
+    __slots__ = ("fast", "slow")
+
+    def __init__(self, fast_halflife: float = 0.005,
+                 slow_halflife: float = 0.5) -> None:
+        self.fast = RateMeter(fast_halflife)
+        self.slow = RateMeter(slow_halflife)
+
+    def update(self, ts: float, nbytes: int = 0) -> None:
+        self.fast.update(ts, nbytes)
+        self.slow.update(ts, nbytes)
+
+    def burstiness(self) -> float:
+        if self.slow.rate <= 1e-9:
+            return 0.0
+        return self.fast.rate / self.slow.rate
+
+    def byte_burstiness(self) -> float:
+        if self.slow.byte_rate <= 1e-9:
+            return 0.0
+        return self.fast.byte_rate / self.slow.byte_rate
+
+
+@dataclass
+class Welford:
+    """Exact running mean/variance (for finite populations, e.g. per-node
+    volume skew where the population is the node set, not a stream)."""
+
+    n: int = 0
+    mean: float = 0.0
+    m2: float = 0.0
+
+    def update(self, x: float) -> None:
+        self.n += 1
+        d = x - self.mean
+        self.mean += d / self.n
+        self.m2 += d * (x - self.mean)
+
+    @property
+    def var(self) -> float:
+        return self.m2 / self.n if self.n > 1 else 0.0
+
+    @property
+    def std(self) -> float:
+        return math.sqrt(max(self.var, 0.0))
+
+    def cv(self) -> float:
+        """Coefficient of variation — the load-skew statistic (3c row 3)."""
+        return self.std / self.mean if self.mean > 0 else 0.0

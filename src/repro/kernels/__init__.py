@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the compute hot spots + jnp oracles.
+
+flash_attention — prefill attention (GQA/SWA), VMEM-tiled online softmax
+paged_attention — decode over paged KV cache (block tables, scalar prefetch)
+ssd_scan        — Mamba2 SSD chunk scan (sequential grid carries the state)
+"""

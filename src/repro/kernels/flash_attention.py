@@ -1,0 +1,166 @@
+"""Pallas TPU flash attention (prefill hot spot).
+
+Design (TPU-native, not a CUDA port):
+  - grid = (batch * n_q_heads, n_q_blocks, n_kv_blocks); the TPU executes
+    the grid sequentially minor-most first, so the kv-block axis acts as
+    the online-softmax reduction loop.
+  - BlockSpec tiles q/k/v into VMEM: q (1, TQ, D), k/v (1, TK, D); the
+    output block (1, TQ, D) is revisited across the kv axis while the
+    running max / sum / accumulator live in VMEM scratch.
+  - GQA without materializing repeated KV: the k/v index_map divides the
+    q-head grid coordinate by the group size, so all G query heads of a
+    group stream the SAME kv rows from HBM.
+  - causal + sliding-window masking by absolute positions; kv blocks
+    entirely beyond the diagonal (or outside the window) are skipped with
+    pl.when (no MXU work, no VMEM traffic).
+
+Default 128x128 blocks are MXU-aligned; the working set
+(q + k + v + acc at 128x128xf32 = 256 KiB) sits comfortably in a v5e
+core's ~16 MiB VMEM, leaving room for double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  causal: bool, window: int, sm_scale: float,
+                  block_q: int, block_k: int, kv_len: int,
+                  n_kv_blocks: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # block-level skip: fully-masked kv blocks do no work
+    last_q = iq * block_q + block_q - 1
+    first_q = iq * block_q
+    first_k = ik * block_k
+    last_k = first_k + block_k - 1
+    live = first_k < kv_len
+    if causal:
+        live = jnp.logical_and(live, first_k <= last_q)
+    if window > 0:
+        live = jnp.logical_and(live, last_k > first_q - window)
+
+    @pl.when(live)
+    def _compute():
+        q_pos = iq * block_q + jax.lax.iota(jnp.int32, block_q)
+        k_pos = ik * block_k + jax.lax.iota(jnp.int32, block_k)
+        q = q_ref[0].astype(jnp.float32)              # (TQ, D)
+        k = k_ref[0].astype(jnp.float32)              # (TK, D)
+        v = v_ref[0].astype(jnp.float32)              # (TK, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale  # (TQ, TK)
+        mask = k_pos[None, :] < kv_len
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window > 0:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                           # (TQ,)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        # guard fully-masked rows: exp(-inf - -inf) would NaN
+        safe_m = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        p = jnp.where(mask, jnp.exp(s - safe_m[:, None]), 0.0)
+        alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0,
+                          jnp.exp(m_prev - safe_m))
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int = 0,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D) -> (B, Sq, Hq, D).
+
+    Supports GQA (Hq a multiple of Hkv); D and S are padded to block
+    multiples internally and un-padded on return.
+    """
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    sm_scale = 1.0 / math.sqrt(d)
+
+    block_q = min(block_q, max(128, 1 << (sq - 1).bit_length()))
+    block_q = min(block_q, 128 if sq >= 128 else _pow2(sq))
+    block_k = min(block_k, 128 if skv >= 128 else _pow2(skv))
+
+    dp = (-d) % 128
+    qp = (-sq) % block_q
+    kp = (-skv) % block_k
+    if dp or qp:
+        q = jnp.pad(q, ((0, 0), (0, qp), (0, 0), (0, dp)))
+    if dp or kp:
+        k = jnp.pad(k, ((0, 0), (0, kp), (0, 0), (0, dp)))
+        v = jnp.pad(v, ((0, 0), (0, kp), (0, 0), (0, dp)))
+    sq_p, skv_p, d_p = sq + qp, skv + kp, d + dp
+
+    # (B, S, H, D) -> (B*H, S, D); kv rows shared across each q group
+    qr = q.transpose(0, 2, 1, 3).reshape(b * hq, sq_p, d_p)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * hkv, skv_p, d_p)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * hkv, skv_p, d_p)
+
+    n_q_blocks = sq_p // block_q
+    n_kv_blocks = skv_p // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, window=window, sm_scale=sm_scale,
+        block_q=block_q, block_k=block_k, kv_len=skv,
+        n_kv_blocks=n_kv_blocks)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hq, n_q_blocks, n_kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d_p), lambda h, iq, ik: (h, iq, 0)),
+            pl.BlockSpec((1, block_k, d_p),
+                         lambda h, iq, ik: (h // g, ik, 0)),
+            pl.BlockSpec((1, block_k, d_p),
+                         lambda h, iq, ik: (h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d_p),
+                               lambda h, iq, ik: (h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq_p, d_p), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d_p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+
+    out = out.reshape(b, hq, sq_p, d_p).transpose(0, 2, 1, 3)
+    return out[:, :sq, :, :d]
+
+
+def _pow2(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p

@@ -1,0 +1,55 @@
+"""Jit'd dispatch wrappers: Pallas kernel on TPU, pure-jnp oracle elsewhere.
+
+The rest of the framework calls these entry points; the backend decision is
+made once here.  ``interpret=True`` forces the Pallas path with the
+interpreter (CPU validation — what the kernel tests use).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.paged_attention import paged_attention_kernel
+from repro.kernels.ssd_scan import ssd_scan_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window",
+                                             "force_kernel", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    force_kernel: bool = False, interpret: bool = False):
+    if force_kernel or interpret or _on_tpu():
+        return flash_attention_kernel(q, k, v, causal=causal,
+                                      window=window, interpret=interpret
+                                      or not _on_tpu())
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("force_kernel", "interpret"))
+def paged_attention(q, k_pages, v_pages, block_table, lengths, *,
+                    force_kernel: bool = False, interpret: bool = False):
+    if force_kernel or interpret or _on_tpu():
+        return paged_attention_kernel(q, k_pages, v_pages, block_table,
+                                      lengths, interpret=interpret
+                                      or not _on_tpu())
+    return ref.paged_attention_ref(q, k_pages, v_pages, block_table,
+                                   lengths)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "force_kernel",
+                                             "interpret"))
+def ssd_scan(x, a, B, C, *, chunk: int = 128, force_kernel: bool = False,
+             interpret: bool = False):
+    if force_kernel or interpret or _on_tpu():
+        y, _ = ssd_scan_kernel(x, a, B, C, chunk=chunk,
+                               interpret=interpret or not _on_tpu())
+        return y
+    y, _ = ref.ssd_scan_ref(x, a, B, C)
+    return y

@@ -1,0 +1,134 @@
+"""Pallas TPU paged-attention decode kernel (the serving hot spot).
+
+One query token per sequence attends over a paged KV cache (vLLM-style
+block tables — the paper's §3.1 PagedAttention discussion).  TPU-native
+structure:
+
+  - PrefetchScalarGridSpec prefetches the block table and sequence lengths
+    into SMEM so BlockSpec index_maps can address *physical* pages: the
+    page gather happens in the DMA engine, not as kernel compute.
+  - grid = (batch, pages_per_seq); the page axis is the online-softmax
+    reduction, running stats in VMEM scratch (same pattern as flash
+    attention — sequential grid is the TPU's reduction loop).
+  - GQA handled in-register: q is viewed (Hkv, G, D) and batched against
+    the page's (Hkv, page, D) keys via dot_general over the kv-head dim.
+  - pages past a sequence's length are skipped entirely with pl.when —
+    short sequences cost proportionally less DMA and MXU time.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *,
+                  page: int, g: int, sm_scale: float, per_seq: int):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    seq_len = len_ref[b]
+    live = j * page < seq_len
+
+    @pl.when(live)
+    def _compute():
+        hq, d = q_ref.shape[1], q_ref.shape[2]
+        hkv = hq // g
+        q = q_ref[0].astype(jnp.float32)                  # (Hq, D)
+        k = k_ref[0].astype(jnp.float32)                  # (page, Hkv, D)
+        v = v_ref[0].astype(jnp.float32)
+        qg = q.reshape(hkv, g, d)
+        kk = k.transpose(1, 0, 2)                         # (Hkv, page, D)
+        vv = v.transpose(1, 0, 2)
+        # batched over kv heads: (Hkv, G, page)
+        s = jax.lax.dot_general(
+            qg, kk, (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32) * sm_scale
+        pos = j * page + jax.lax.iota(jnp.int32, page)
+        mask = (pos < seq_len)[None, None, :]
+        s = jnp.where(mask, s, NEG_INF)
+
+        sh = s.reshape(hq, page)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(sh, axis=-1))
+        safe_m = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        p = jnp.where(mask.reshape(1, page),
+                      jnp.exp(sh - safe_m[:, None]), 0.0)  # (Hq, page)
+        alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0,
+                          jnp.exp(m_prev - safe_m))
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p.reshape(hkv, g, page), vv,
+            (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)           # (Hkv, G, D)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + pv.reshape(hq, d))
+        m_ref[...] = m_new
+
+    @pl.when(j == per_seq - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_attention_kernel(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, block_table: jax.Array,
+                           lengths: jax.Array, *,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, D); k/v_pages: (P, page, Hkv, D);
+    block_table: (B, per_seq) int32; lengths: (B,) int32 -> (B, Hq, D)."""
+    b, hq, d = q.shape
+    n_pages, page, hkv, _ = k_pages.shape
+    per_seq = block_table.shape[1]
+    g = hq // hkv
+    sm_scale = 1.0 / math.sqrt(d)
+
+    dp = (-d) % 128
+    if dp:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, dp)))
+        k_pages = jnp.pad(k_pages, ((0, 0), (0, 0), (0, 0), (0, dp)))
+        v_pages = jnp.pad(v_pages, ((0, 0), (0, 0), (0, 0), (0, dp)))
+    d_p = d + dp
+
+    kernel = functools.partial(_paged_kernel, page=page, g=g,
+                               sm_scale=sm_scale, per_seq=per_seq)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, per_seq),
+        in_specs=[
+            pl.BlockSpec((1, hq, d_p), lambda b, j, tbl, ln: (b, 0, 0)),
+            pl.BlockSpec((1, page, hkv, d_p),
+                         lambda b, j, tbl, ln: (tbl[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, page, hkv, d_p),
+                         lambda b, j, tbl, ln: (tbl[b, j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, hq, d_p),
+                               lambda b, j, tbl, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((hq,), jnp.float32),
+            pltpu.VMEM((hq,), jnp.float32),
+            pltpu.VMEM((hq, d_p), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hq, d_p), q.dtype),
+        interpret=interpret,
+    )(block_table, lengths, q, k_pages, v_pages)
+    return out[:, :, :d]

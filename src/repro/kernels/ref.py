@@ -1,0 +1,101 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+These are the semantics the kernels must match; tests sweep shapes/dtypes
+and assert allclose against these.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def _repeat_kv(kv: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return kv
+    b, s, h, d = kv.shape
+    return jnp.broadcast_to(kv[:, :, :, None, :],
+                            (b, s, h, n_rep, d)).reshape(b, s, h * n_rep, d)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0) -> jax.Array:
+    """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D)."""
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    k = _repeat_kv(k, hq // hkv)
+    v = _repeat_kv(v, hq // hkv)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)   # fully-masked rows
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array,
+                        v_pages: jax.Array, block_table: jax.Array,
+                        lengths: jax.Array) -> jax.Array:
+    """Decode attention over a paged KV cache.
+
+    q:           (B, Hq, D)        one query token per sequence
+    k/v_pages:   (P, page, Hkv, D) physical page pool
+    block_table: (B, pages_per_seq) int32 physical page ids
+    lengths:     (B,) int32 current sequence lengths
+    returns      (B, Hq, D)
+    """
+    b, hq, d = q.shape
+    n_pages, page, hkv, _ = k_pages.shape
+    per_seq = block_table.shape[1]
+    g = hq // hkv
+    # gather each sequence's logical KV: (B, per_seq*page, Hkv, D)
+    k = k_pages[block_table].reshape(b, per_seq * page, hkv, d)
+    v = v_pages[block_table].reshape(b, per_seq * page, hkv, d)
+    k = _repeat_kv(k, g)
+    v = _repeat_kv(v, g)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    pos = jnp.arange(per_seq * page)[None, :]
+    mask = pos < lengths[:, None]
+    s = jnp.where(mask[:, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    out = jnp.einsum("bhk,bkhd->bhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_scan_ref(x: jax.Array, a: jax.Array, B: jax.Array, C: jax.Array,
+                 init_state: jax.Array | None = None
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Sequential SSD recurrence (the exact semantics).
+
+    x: (b, l, h, p); a: (b, l, h) log-decay; B/C: (b, l, n).
+    state: (b, h, p, n).  y_t = C_t · s_t,  s_t = exp(a_t)·s_{t-1} + x_t⊗B_t
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    s0 = (init_state if init_state is not None
+          else jnp.zeros((b, h, p, n), jnp.float32))
+
+    def step(s, inp):
+        xt, at, Bt, Ct = inp
+        s = s * jnp.exp(at)[..., None, None] + jnp.einsum(
+            "bhp,bn->bhpn", xt.astype(jnp.float32),
+            Bt.astype(jnp.float32))
+        y = jnp.einsum("bhpn,bn->bhp", s, Ct.astype(jnp.float32))
+        return s, y
+
+    s, ys = jax.lax.scan(
+        step, s0, (x.transpose(1, 0, 2, 3), a.transpose(1, 0, 2),
+                   B.transpose(1, 0, 2), C.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2, 3), s

@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — smoke tests see 1 CPU device; only
+dryrun.py forces 512 host devices via XLA_FLAGS before any jax import.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 two-pod (512 chips) mesh."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int | None = None):
+    """Small mesh over whatever devices exist (CPU tests, smoke runs)."""
+    n = len(jax.devices())
+    model = model or 1
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,236 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""Roofline analysis with layer-count extrapolation.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop (lax.scan) bodies ONCE
+regardless of trip count, so the raw numbers from the scan-over-layers
+production lowering undercount per-layer work.  We therefore lower each
+(arch x shape) cell a few more times with SMALL UNROLLED layer counts at
+full production width, fit the exact linear model
+
+    flops(L) = out + L * per_layer            (dense/moe/vlm: 2 lowerings)
+    flops(e, d) = out + e*enc + d*dec         (encdec: 3 lowerings)
+    flops(s, k) = out + s*shared + s*k*mamba  (hybrid: 3 lowerings)
+
+and extrapolate to the production depth.  The same model corrects bytes and
+collective bytes (collectives inside loop bodies appear once in the HLO
+text too).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI.
+
+    compute term    = flops_per_device / peak_flops
+    memory term     = bytes_per_device / hbm_bw
+    collective term = collective_bytes_per_device / ici_bw
+"""
+
+import argparse
+import dataclasses
+import json
+
+from repro.configs import ARCHS, SHAPES, cells
+from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import make_production_mesh
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+
+def _with(cfg, **kw):
+    return dataclasses.replace(cfg, **kw)
+
+
+def _lower_variant(arch_cfg, shape_name: str, mesh, **rules_kw) -> dict:
+    """Lower a config variant and return its raw record."""
+    name = arch_cfg.name
+    ARCHS[name] = arch_cfg          # registry override (restored by caller)
+    try:
+        return lower_cell(name, shape_name, mesh, **rules_kw)
+    finally:
+        pass
+
+
+def calibration_plan(cfg):
+    """Returns list of (tag, variant_cfg) lowerings + solver fn."""
+    base = _with(cfg, unroll_layers=True, name=cfg.name)
+    if cfg.family == "hybrid":
+        v = [
+            ("s1k1", _with(base, n_layers=1, attn_every=1)),
+            ("s1k2", _with(base, n_layers=2, attn_every=2)),
+            ("s2k1", _with(base, n_layers=2, attn_every=1)),
+        ]
+
+        def solve(f):
+            mamba = f["s1k2"] - f["s1k1"]
+            shared = f["s2k1"] - f["s1k1"] - mamba
+            out = f["s1k1"] - shared - mamba
+            n_super = cfg.n_layers // cfg.attn_every
+            return out + n_super * shared + cfg.n_layers * mamba
+        return v, solve
+    if cfg.family == "encdec":
+        v = [
+            ("e1d1", _with(base, enc_layers=1, n_layers=1)),
+            ("e2d1", _with(base, enc_layers=2, n_layers=1)),
+            ("e1d2", _with(base, enc_layers=1, n_layers=2)),
+        ]
+
+        def solve(f):
+            enc = f["e2d1"] - f["e1d1"]
+            dec = f["e1d2"] - f["e1d1"]
+            out = f["e1d1"] - enc - dec
+            return out + cfg.enc_layers * enc + cfg.n_layers * dec
+        return v, solve
+    if cfg.family == "ssm" and cfg.xlstm:
+        v = [
+            ("p1", _with(base, n_layers=2)),    # 1 pair
+            ("p2", _with(base, n_layers=4)),    # 2 pairs
+        ]
+
+        def solve(f):
+            pair = f["p2"] - f["p1"]
+            out = f["p1"] - pair
+            return out + (cfg.n_layers // 2) * pair
+        return v, solve
+    # dense / moe / vlm
+    v = [
+        ("l1", _with(base, n_layers=1)),
+        ("l2", _with(base, n_layers=2)),
+    ]
+
+    def solve(f):
+        layer = f["l2"] - f["l1"]
+        out = f["l1"] - layer
+        return out + cfg.n_layers * layer
+    return v, solve
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE); decode D=batch."""
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * cfg.active_param_count() * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * cfg.active_param_count() * d
+    return 2.0 * cfg.active_param_count() * shape.global_batch
+
+
+def analyze_cell(arch: str, shape_name: str, mesh, calibrate: bool = True,
+                 prod_record: dict | None = None, **rules_kw) -> dict:
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    prod = prod_record or lower_cell(arch, shape_name, mesh, **rules_kw)
+    n_dev = prod["n_devices"]
+
+    corrected_flops = prod["flops_per_device"]
+    corrected_bytes = prod["bytes_per_device"]
+    corrected_coll = dict(prod["collective_bytes"])
+    calib = {}
+    if calibrate:
+        variants, solve = calibration_plan(cfg)
+        recs = {}
+        orig = ARCHS[arch]
+        try:
+            for tag, vcfg in variants:
+                recs[tag] = _lower_variant(vcfg, shape_name, mesh,
+                                           **rules_kw)
+        finally:
+            ARCHS[arch] = orig
+        corrected_flops = solve({t: r["flops_per_device"]
+                                 for t, r in recs.items()})
+        corrected_bytes = solve({t: r["bytes_per_device"]
+                                 for t, r in recs.items()})
+        ops = set()
+        for r in recs.values():
+            ops |= set(r["collective_bytes"])
+        corrected_coll = {
+            op: max(0.0, solve({t: r["collective_bytes"].get(op, 0.0)
+                                for t, r in recs.items()}))
+            for op in ops
+        }
+        calib = {t: {"flops": r["flops_per_device"],
+                     "compile_s": r["compile_s"]}
+                 for t, r in recs.items()}
+
+    coll_total = sum(corrected_coll.values())
+    # collective bytes parsed from the per-device program text are already
+    # per-device traffic
+    compute_t = corrected_flops / PEAK_FLOPS
+    memory_t = corrected_bytes / HBM_BW
+    coll_t = coll_total / ICI_BW
+    terms = {"compute_s": compute_t, "memory_s": memory_t,
+             "collective_s": coll_t}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    bound_s = max(terms.values())
+    useful_frac = (mf / n_dev) / PEAK_FLOPS / bound_s if bound_s else 0.0
+
+    return {
+        **prod,
+        "corrected": {
+            "flops_per_device": corrected_flops,
+            "bytes_per_device": corrected_bytes,
+            "collective_bytes": corrected_coll,
+        },
+        "roofline": {
+            **terms,
+            "dominant": dominant,
+            "model_flops_total": mf,
+            "useful_flops_ratio": mf / (corrected_flops * n_dev)
+            if corrected_flops else 0.0,
+            "roofline_fraction": useful_frac,
+        },
+        "calibration": calib,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/roofline")
+    ap.add_argument("--prod-dir", default="artifacts/dryrun",
+                    help="reuse production records from the dry-run sweep")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    mesh = make_production_mesh(multi_pod=False)
+    todo = ([(a, s) for a, s, st in cells() if st == "run"] if args.all
+            else [(args.arch, args.shape)])
+    for arch, shape in todo:
+        out_path = os.path.join(args.out, f"{arch}__{shape}.json")
+        if os.path.exists(out_path):
+            print(f"[skip-cached] {arch} {shape}")
+            continue
+        prod = None
+        prod_path = os.path.join(args.prod_dir,
+                                 f"{arch}__{shape}__single.json")
+        if os.path.exists(prod_path):
+            with open(prod_path) as f:
+                cand = json.load(f)
+            if cand.get("ok"):
+                prod = cand
+        print(f"[roofline] {arch} {shape} ...", flush=True)
+        try:
+            rec = analyze_cell(arch, shape, mesh, prod_record=prod)
+            r = rec["roofline"]
+            print(f"  compute={r['compute_s']*1e3:.2f}ms "
+                  f"memory={r['memory_s']*1e3:.2f}ms "
+                  f"coll={r['collective_s']*1e3:.2f}ms "
+                  f"dominant={r['dominant']} "
+                  f"roofline_frac={r['roofline_fraction']:.3f}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            rec = {"arch": arch, "shape": shape, "ok": False,
+                   "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+            print(f"  FAIL {rec['error']}", flush=True)
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

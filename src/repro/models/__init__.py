@@ -1,0 +1,4 @@
+"""Model zoo: one composable stack covering all ten assigned architectures."""
+from repro.models.config import ModelConfig
+from repro.models.model import Model, ShapeSpec, build_model
+__all__ = ["Model", "ModelConfig", "ShapeSpec", "build_model"]

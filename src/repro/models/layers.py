@@ -1,0 +1,221 @@
+"""Core transformer layers: RMSNorm, RoPE, GQA attention (SWA / qk-norm),
+SwiGLU MLP.  Pure function style: params are dict pytrees, shapes explicit.
+
+Conventions:
+  activations x : (batch, seq, d_model)
+  attention     : q (B,S,Hq,D), k/v (B,S,Hkv,D); GQA repeats kv heads
+  KV cache      : dict(k=(B,max_seq,Hkv,D), v=..., pos=int32 scalar)
+All matmuls accumulate in float32 (preferred_element_type) for MXU accuracy.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ----------------------------------------------------------------------
+# init helpers
+# ----------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32)
+            * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------------
+# RMSNorm
+# ----------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                     # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,D/2)
+    if angles.ndim == 2:  # (S, D/2) -> broadcast batch
+        angles = angles[None]
+    cos = jnp.cos(angles)[..., None, :]                    # (B,S,1,D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# Attention (GQA + optional SWA + optional qk-norm)
+# ----------------------------------------------------------------------
+
+def attention_init(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    dt = dtype_of(cfg)
+    d, hd = cfg.d_model, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd, dt),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, dt),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, dt),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d, dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dt)
+        p["k_norm"] = rmsnorm_init(hd, dt)
+    return p
+
+
+def _causal_mask(q_len: int, kv_len: int, swa: int,
+                 q_offset) -> jax.Array:
+    """Boolean mask (q_len, kv_len): True = attend."""
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    k_pos = jnp.arange(kv_len)[None, :]
+    mask = k_pos <= q_pos
+    if swa > 0:
+        mask &= k_pos > q_pos - swa
+    return mask
+
+
+def sdpa(q: jax.Array, k: jax.Array, v: jax.Array,
+         mask: jax.Array | None, shard=None) -> jax.Array:
+    """Grouped-query scaled-dot-product attention (no KV materialization).
+
+    q: (B,Sq,Hq,D), k/v: (B,Skv,Hkv,D) with Hq a multiple of Hkv;
+    mask: (Sq,Skv) or (B,1,1,Sq,Skv) broadcastable boolean.
+    shard: optional Sharder — constrains the logits' kv dim onto the TP
+    axis so a sequence-sharded KV cache is reduced in place (distributed
+    softmax) instead of being all-gathered."""
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32)
+    if shard is not None:
+        logits = shard.act(logits, "attn_logits")
+    logits = logits / math.sqrt(d)
+    if mask is not None:
+        if mask.ndim == 2:
+            mask = mask[None, None, None]
+        logits = jnp.where(mask, logits, jnp.float32(-1e30))
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def attention_fwd(p: dict, cfg: ModelConfig, x: jax.Array,
+                  positions: jax.Array,
+                  kv_cache: dict | None = None,
+                  kv_source: jax.Array | None = None,
+                  use_kernel: bool = False) -> tuple[jax.Array, dict | None]:
+    """Self- or cross-attention with optional ring-buffer KV cache.
+
+    kv_cache (decode/prefill-with-state):
+        {"k"/"v": (B, max, Hkv, D),
+         "slots": (s,) ring slots to write (precomputed by the caller),
+         "kpos": (max,) absolute position per slot AFTER this write
+                 (-1 = empty),
+         "q_pos": (s,) absolute positions of the incoming tokens}
+    When s >= max (prefill longer than a sliding-window cache), the slab is
+    attended in-slab (window <= s makes that exact for pos==0) and only the
+    last ``max`` tokens are stored.
+    kv_source: encoder output for cross-attention (no cache).
+    """
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = x @ p["wq"]
+    src = kv_source if kv_source is not None else x
+    k = src @ p["wk"]
+    v = src @ p["wv"]
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, src.shape[1], cfg.n_kv_heads, hd)
+    v = v.reshape(b, src.shape[1], cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if kv_source is None:  # RoPE only for self-attention
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if kv_cache is not None and kv_source is None:
+        max_seq = kv_cache["k"].shape[1]
+        cdt = kv_cache["k"].dtype
+        if s >= max_seq:
+            # prefill slab covers the whole (window-bounded) cache
+            mask = _causal_mask(s, s, cfg.swa_window, 0)
+            out = sdpa(q, k, v, mask)
+            ck = k[:, s - max_seq:].astype(cdt)
+            cv = v[:, s - max_seq:].astype(cdt)
+            new_cache = {"k": ck, "v": cv}
+        else:
+            slots = kv_cache["slots"]
+            ck = kv_cache["k"].at[:, slots].set(k.astype(cdt))
+            cv = kv_cache["v"].at[:, slots].set(v.astype(cdt))
+            new_cache = {"k": ck, "v": cv}
+            kpos = kv_cache["kpos"]          # (max,), post-write
+            q_pos = kv_cache["q_pos"]        # (s,)
+            mask = (kpos[None, :] >= 0) & (kpos[None, :] <= q_pos[:, None])
+            if cfg.swa_window > 0:
+                mask &= kpos[None, :] > q_pos[:, None] - cfg.swa_window
+            out = sdpa(q, ck, cv, mask, shard=kv_cache.get("shard"))
+    elif kv_source is not None:
+        out = sdpa(q, k, v, None)            # full cross-attention
+    else:
+        if use_kernel or cfg.use_kernels:
+            from repro.kernels import ops as kops
+            out = kops.flash_attention(q, k, v, causal=True,
+                                       window=cfg.swa_window)
+        else:
+            mask = _causal_mask(s, s, cfg.swa_window, 0)
+            out = sdpa(q, k, v, mask)
+    out = out.reshape(b, s, cfg.n_heads * hd)
+    return out @ p["wo"], new_cache
+
+
+# ----------------------------------------------------------------------
+# SwiGLU MLP
+# ----------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d_model, d_ff, dtype),
+        "w_up": dense_init(ks[1], d_model, d_ff, dtype),
+        "w_down": dense_init(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def mlp_fwd(p: dict, x: jax.Array) -> jax.Array:
+    gate = jax.nn.silu((x @ p["w_gate"]).astype(jnp.float32))
+    up = (x @ p["w_up"]).astype(jnp.float32)
+    return ((gate * up).astype(x.dtype)) @ p["w_down"]

@@ -1,0 +1,129 @@
+"""Mixture-of-Experts layer: shared experts + routed top-k, GShard-style
+capacity dispatch via one-hot einsums (MXU-friendly; SPMD emits all-to-all
+when experts are sharded over the 'model'/'expert' mesh axis).
+
+Covers qwen2-moe (60 routed top-4 + 4 shared) and granite-moe (40 routed
+top-8, no shared).  Router aux losses: load-balancing (Switch) + z-loss.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, dtype_of, mlp_fwd, mlp_init
+
+
+def moe_init(key, cfg: ModelConfig) -> dict:
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 5)
+    d, e_ff = cfg.d_model, cfg.expert_d_ff
+    p = {
+        "router": dense_init(ks[0], d, cfg.n_experts, jnp.float32),
+        "w_gate": jax.random.normal(
+            ks[1], (cfg.n_experts, d, e_ff), jnp.float32
+        ).astype(dt) / (d ** 0.5),
+        "w_up": jax.random.normal(
+            ks[2], (cfg.n_experts, d, e_ff), jnp.float32
+        ).astype(dt) / (d ** 0.5),
+        "w_down": jax.random.normal(
+            ks[3], (cfg.n_experts, e_ff, d), jnp.float32
+        ).astype(dt) / (e_ff ** 0.5),
+    }
+    if cfg.n_shared_experts > 0:
+        p["shared"] = mlp_init(ks[4], d, cfg.n_shared_experts * e_ff, dt)
+    return p
+
+
+MOE_GROUP = 1024   # tokens per dispatch group (GShard/GLaM-style)
+
+
+def moe_fwd(p: dict, cfg: ModelConfig, x: jax.Array,
+            group_size: int = MOE_GROUP,
+            shard=None) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss).
+
+    GROUPED capacity dispatch (GShard/Switch/GLaM): tokens are processed in
+    groups of ``group_size``; each expert takes up to
+    C = group * cf * k / E tokens *per group*.  The one-hot dispatch tensor
+    is (G, group, E, C) — linear in T — instead of the naive (T, E, C)
+    which is O(T^2/E) and explodes at training shapes (T = 1M tokens =>
+    5e18 elements).  Group-local capacity is the canonical TPU idiom
+    precisely because the MXU-friendly one-hot dispatch requires a bounded
+    per-group C.
+    """
+    b, s, d = x.shape
+    t = b * s
+    e = cfg.n_experts
+    k = cfg.top_k
+    group = min(group_size, t)
+    n_g = t // group
+    # ragged tail folds into the last group's capacity headroom
+    if n_g * group != t:
+        n_g += 1
+        pad = n_g * group - t
+        xt = jnp.pad(x.reshape(t, d), ((0, pad), (0, 0)))
+    else:
+        pad = 0
+        xt = x.reshape(t, d)
+    xg = xt.reshape(n_g, group, d)
+
+    logits = (xg.astype(jnp.float32) @ p["router"])        # (G, g, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # --- aux losses (over real tokens only) ---
+    top1 = jnp.argmax(probs, axis=-1)
+    f = jnp.mean(jax.nn.one_hot(top1, e, dtype=jnp.float32), axis=(0, 1))
+    pbar = jnp.mean(probs, axis=(0, 1))
+    aux = cfg.router_aux_coef * e * jnp.sum(f * pbar)
+    z = cfg.router_z_coef * jnp.mean(
+        jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    aux_loss = aux + z
+
+    # --- top-k routing with per-group capacity ---
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)          # (G, g, k)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, axis=-1,
+                                     keepdims=True) + 1e-9)
+    cap = int(max(k, round(group * cfg.capacity_factor * k / e)))
+
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)  # (G, g, k, E)
+    flat = onehot.reshape(n_g, group * k, e)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat        # (G, g*k, E)
+    pos = jnp.sum(pos_in_expert * flat, axis=-1).reshape(n_g, group, k)
+    keep = pos < cap                                       # capacity drop
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    # dispatch: (G, g, E, C) one-hot
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, cap), cap + 1,
+                            dtype=xt.dtype)[..., :cap]     # (G, g, k, C)
+    disp = jnp.einsum("gtke,gtkc->gtec", onehot.astype(xt.dtype), pos_oh)
+    expert_in = jnp.einsum("gtd,gtec->gecd", xg, disp)     # (G, E, C, d)
+    if shard is not None:
+        # EP: groups stay on their DP shard, experts live on the TP axis
+        expert_in = shard.act(expert_in, "moe_inner")
+
+    # expert MLPs (batched over G x E)
+    gate = jax.nn.silu(jnp.einsum(
+        "gecd,edf->gecf", expert_in, p["w_gate"],
+        preferred_element_type=jnp.float32))
+    up = jnp.einsum("gecd,edf->gecf", expert_in, p["w_up"],
+                    preferred_element_type=jnp.float32)
+    hidden = (gate * up).astype(xt.dtype)
+    expert_out = jnp.einsum("gecf,efd->gecd", hidden, p["w_down"],
+                            preferred_element_type=jnp.float32)
+    if shard is not None:
+        expert_out = shard.act(expert_out.astype(xt.dtype), "moe_inner")
+
+    # combine: weight each kept (token, choice) by its gate value
+    comb = jnp.einsum("gtec,gtk,gtke->gtec", disp,
+                      gate_vals.astype(xt.dtype),
+                      onehot.astype(xt.dtype))
+    out = jnp.einsum("gecd,gtec->gtd", expert_out.astype(xt.dtype), comb)
+    out = out.reshape(n_g * group, d)
+    if pad:
+        out = out[:t]
+
+    if "shared" in p:
+        out = out + mlp_fwd(p["shared"], xt[:t] if pad else xt)
+    return out.reshape(b, s, d), aux_loss

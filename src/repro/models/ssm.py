@@ -1,0 +1,294 @@
+"""State-space and recurrent blocks: Mamba2 (SSD) and xLSTM (mLSTM + sLSTM).
+
+Mamba2 follows the minimal-SSD formulation (Dao & Gu 2024): chunked
+intra-block quadratic attention-like computation + inter-chunk linear
+recurrence.  Decode is an O(1) state update — this is what makes the
+``long_500k`` shape tractable for the hybrid/ssm architectures.
+
+xLSTM (Beck et al. 2024): mLSTM has a matrix memory with exponential gating
+(recurrent scan over time; O(1) decode state), sLSTM a scalar memory with
+hidden-state recurrence.  Blocks alternate per ``cfg.slstm_every``.
+
+Simplifications vs the reference CUDA implementations (documented in
+DESIGN.md): no short conv1d in front of Mamba2's x/B/C (a 4-tap depthwise
+conv; negligible FLOPs, removed to keep decode state = SSM state only), and
+sLSTM uses per-head dense recurrent gates rather than block-diagonal ones.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, dtype_of, rmsnorm, rmsnorm_init
+
+
+# ======================================================================
+# Mamba2 / SSD
+# ======================================================================
+
+def mamba2_init(key, cfg: ModelConfig) -> dict:
+    dt = dtype_of(cfg)
+    d, di = cfg.d_model, cfg.d_inner
+    n, h = cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 4)
+    return {
+        # in_proj -> [z (di), x (di), B (n), C (n), dt (h)]
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * n + h, dt),
+        "out_proj": dense_init(ks[1], di, d, dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": rmsnorm_init(di, dt),
+    }
+
+
+def _split_mamba_proj(cfg: ModelConfig, proj: jax.Array):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    x = proj[..., di:2 * di]
+    B = proj[..., 2 * di:2 * di + n]
+    C = proj[..., 2 * di + n:2 * di + 2 * n]
+    dt = proj[..., 2 * di + 2 * n:]
+    return z, x, B, C, dt
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: (..., T) -> (..., T, T) lower-triangular segment sums."""
+    T = x.shape[-1]
+    csum = jnp.cumsum(x, axis=-1)
+    s = csum[..., :, None] - csum[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    return jnp.where(mask, s, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, a: jax.Array, B: jax.Array, C: jax.Array,
+                chunk: int, init_state: jax.Array | None = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """Minimal SSD.
+
+    x: (b, l, h, p)  — per-head inputs (dt already folded in)
+    a: (b, l, h)     — log-decay per step (dt * A, negative)
+    B: (b, l, n)     — input projection (single group, shared across heads)
+    C: (b, l, n)     — output projection
+    Returns y: (b, l, h, p) and final state (b, h, p, n).
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    nc = l // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    ac = a.reshape(b, nc, chunk, h).transpose(0, 3, 1, 2)     # (b,h,c,L)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+
+    a_cum = jnp.cumsum(ac, axis=-1)                           # (b,h,c,L)
+    # 1) intra-chunk (diagonal blocks)
+    Lmat = jnp.exp(_segsum(ac))                               # (b,h,c,L,L)
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp",
+                        Cc, Bc, Lmat, xc,
+                        preferred_element_type=jnp.float32)
+    # 2) per-chunk final states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)           # (b,h,c,L)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn",
+                        Bc, decay_states, xc,
+                        preferred_element_type=jnp.float32)
+    # 3) inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(a_cum[..., -1])                     # (b,h,c)
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(carry, inp):
+        dec, st = inp                                         # (b,h), (b,h,p,n)
+        new = carry * dec[..., None, None] + st
+        return new, carry
+
+    final, prev = jax.lax.scan(
+        step, init_state,
+        (chunk_decay.transpose(2, 0, 1), states.transpose(1, 0, 2, 3, 4)))
+    prev = prev.transpose(1, 0, 2, 3, 4)                      # (b,c,h,p,n)
+    # 4) inter-chunk contribution to outputs
+    out_decay = jnp.exp(a_cum)                                # (b,h,c,L)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp",
+                       Cc, prev, out_decay,
+                       preferred_element_type=jnp.float32)
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, final
+
+
+def mamba2_fwd(p: dict, cfg: ModelConfig, u: jax.Array,
+               state: jax.Array | None = None, chunk: int = 128
+               ) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence Mamba2 block. u: (b, l, d) -> (y, final_state)."""
+    b, l, d = u.shape
+    h, pdim = cfg.ssm_heads, cfg.ssm_head_dim
+    proj = u @ p["in_proj"]
+    z, x, B, C, dt = _split_mamba_proj(cfg, proj)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (b,l,h)
+    A = -jnp.exp(p["A_log"])                                      # (h,)
+    a = dt * A                                                    # (b,l,h)
+    xh = x.reshape(b, l, h, pdim).astype(jnp.float32)
+    xh = xh * dt[..., None]                                       # fold dt
+    pad = (-l) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    y, final = ssd_chunked(xh, a, B.astype(jnp.float32),
+                           C.astype(jnp.float32), chunk, state)
+    y = y[:, :l]
+    y = y + xh[:, :l] * p["D"][None, None, :, None]
+    y = y.reshape(b, l, cfg.d_inner).astype(u.dtype)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype)
+    return y @ p["out_proj"], final
+
+
+def mamba2_step(p: dict, cfg: ModelConfig, u: jax.Array,
+                state: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """O(1) decode step. u: (b, 1, d); state: (b, h, p, n)."""
+    b = u.shape[0]
+    h, pdim = cfg.ssm_heads, cfg.ssm_head_dim
+    proj = u[:, 0] @ p["in_proj"]                                 # (b, ·)
+    z, x, B, C, dt = _split_mamba_proj(cfg, proj)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (b,h)
+    A = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt * A)                                          # (b,h)
+    xh = x.reshape(b, h, pdim).astype(jnp.float32) * dt[..., None]
+    # state: s = s * da + x ⊗ B
+    new_state = (state * da[..., None, None]
+                 + jnp.einsum("bhp,bn->bhpn", xh, B.astype(jnp.float32)))
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C.astype(jnp.float32))
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(b, cfg.d_inner).astype(u.dtype)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype)
+    return (y @ p["out_proj"])[:, None], new_state
+
+
+# ======================================================================
+# xLSTM: mLSTM + sLSTM
+# ======================================================================
+
+def mlstm_init(key, cfg: ModelConfig) -> dict:
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": dense_init(ks[0], d, d, dt),
+        "wk": dense_init(ks[1], d, d, dt),
+        "wv": dense_init(ks[2], d, d, dt),
+        "w_i": dense_init(ks[3], d, h, jnp.float32),
+        "w_f": dense_init(ks[4], d, h, jnp.float32),
+        "w_o": dense_init(ks[5], d, d, dt),
+        "w_up": dense_init(ks[6], d, d, dt),   # output gate path
+        "f_bias": jnp.full((h,), 3.0, jnp.float32),  # forget-by-default
+    }
+
+
+def _mlstm_scan(q, k, v, i_pre, f_pre, state):
+    """Recurrent stabilized mLSTM over time.
+    q,k,v: (b, l, h, dh); i_pre/f_pre: (b, l, h) pre-activations.
+    state: (C (b,h,dh,dh), n (b,h,dh), m (b,h)).
+    """
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, it, ft = inp                       # (b,h,dh)...
+        log_f = -jax.nn.softplus(-ft)                  # log sigmoid(f)
+        m_new = jnp.maximum(log_f + m, it)
+        i_s = jnp.exp(it - m_new)                      # (b,h)
+        f_s = jnp.exp(log_f + m - m_new)
+        C = f_s[..., None, None] * C + i_s[..., None, None] * (
+            vt[..., :, None] * kt[..., None, :])       # (b,h,dv,dk)
+        n = f_s[..., None] * n + i_s[..., None] * kt
+        num = jnp.einsum("bhvk,bhk->bhv", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)),
+                          jnp.exp(-m_new))[..., None]
+        h_t = num / den
+        return (C, n, m_new), h_t
+
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), i_pre.transpose(1, 0, 2),
+          f_pre.transpose(1, 0, 2))
+    state, hs = jax.lax.scan(step, state, xs)
+    return hs.transpose(1, 0, 2, 3), state            # (b,l,h,dh)
+
+
+def mlstm_fwd(p: dict, cfg: ModelConfig, x: jax.Array,
+              state: tuple | None = None) -> tuple[jax.Array, tuple]:
+    b, l, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    q = (x @ p["wq"]).reshape(b, l, h, dh).astype(jnp.float32) / math.sqrt(dh)
+    k = (x @ p["wk"]).reshape(b, l, h, dh).astype(jnp.float32) / math.sqrt(dh)
+    v = (x @ p["wv"]).reshape(b, l, h, dh).astype(jnp.float32)
+    i_pre = x.astype(jnp.float32) @ p["w_i"]
+    f_pre = x.astype(jnp.float32) @ p["w_f"] + p["f_bias"]
+    if state is None:
+        state = (jnp.zeros((b, h, dh, dh), jnp.float32),
+                 jnp.zeros((b, h, dh), jnp.float32),
+                 jnp.full((b, h), -1e30, jnp.float32))
+    hs, state = _mlstm_scan(q, k, v, i_pre, f_pre, state)
+    gate = jax.nn.silu((x @ p["w_up"]).astype(jnp.float32))
+    out = (hs.reshape(b, l, d) * gate).astype(x.dtype) @ p["w_o"]
+    return out, state
+
+
+def slstm_init(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 6)
+    scale = 1.0 / math.sqrt(d)
+    rscale = 1.0 / math.sqrt(dh)
+    return {
+        # input weights for gates z,i,f,o stacked: (d, 4d)
+        "w_x": (jax.random.normal(ks[0], (d, 4 * d), jnp.float32)
+                * scale),
+        # per-head recurrent weights: (h, dh, 4*dh)
+        "r_h": (jax.random.normal(ks[1], (h, dh, 4 * dh), jnp.float32)
+                * rscale),
+        "bias": jnp.concatenate([jnp.zeros((2 * d,), jnp.float32),
+                                 jnp.full((d,), 3.0, jnp.float32),
+                                 jnp.zeros((d,), jnp.float32)]),
+        "w_o": dense_init(ks[2], d, d, dtype_of(cfg)),
+    }
+
+
+def slstm_fwd(p: dict, cfg: ModelConfig, x: jax.Array,
+              state: tuple | None = None) -> tuple[jax.Array, tuple]:
+    """Scalar-memory LSTM with hidden-state recurrence (per head)."""
+    b, l, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    pre_x = x.astype(jnp.float32) @ p["w_x"] + p["bias"]    # (b,l,4d)
+    if state is None:
+        state = (jnp.zeros((b, d), jnp.float32),    # c
+                 jnp.zeros((b, d), jnp.float32),    # n
+                 jnp.zeros((b, d), jnp.float32),    # h
+                 jnp.full((b, d), -1e30, jnp.float32))  # m
+
+    def step(carry, xt):
+        c, n, hprev, m = carry
+        hh = hprev.reshape(b, h, dh)
+        rec = jnp.einsum("bhd,hde->bhe", hh, p["r_h"]).reshape(b, 4 * d)
+        pre = xt + rec
+        zt, it, ft, ot = jnp.split(pre, 4, axis=-1)
+        zt = jnp.tanh(zt)
+        log_f = -jax.nn.softplus(-ft)
+        m_new = jnp.maximum(log_f + m, it)
+        i_s = jnp.exp(it - m_new)
+        f_s = jnp.exp(log_f + m - m_new)
+        c_new = f_s * c + i_s * zt
+        n_new = f_s * n + i_s
+        h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    state, hs = jax.lax.scan(step, state, pre_x.transpose(1, 0, 2))
+    out = hs.transpose(1, 0, 2).astype(x.dtype) @ p["w_o"]
+    return out, state

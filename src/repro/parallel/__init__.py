@@ -1,0 +1,3 @@
+"""Distribution substrate: sharding rules, collectives, pipeline."""
+from repro.parallel.sharding import MeshRules, fit
+__all__ = ["MeshRules", "fit"]

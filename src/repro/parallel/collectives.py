@@ -1,0 +1,70 @@
+"""Distributed-optimization helpers: gradient compression with error
+feedback, and microbatched gradient accumulation that overlaps the
+per-microbatch reduction with the next microbatch's compute.
+
+On a real pod the bf16 cast halves all-reduce bytes (XLA reduces in the
+operand dtype); the error-feedback buffer makes the compression unbiased
+over time (Seide et al. / Karimireddy et al.).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_with_feedback(grads, error_buf):
+    """bf16 compression with error feedback.
+
+    Returns (compressed grads [bf16], new error buffer [f32 residual]).
+    """
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        gc = gf.astype(jnp.bfloat16)
+        return gc, gf - gc.astype(jnp.float32)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error_buf)
+    cs, es = zip(*[one(g, e) for g, e in zip(flat_g, flat_e)])
+    return (jax.tree.unflatten(treedef, list(cs)),
+            jax.tree.unflatten(treedef, list(es)))
+
+
+def init_error_buf(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def accumulate_grads(loss_fn, params, microbatches, *,
+                     compress: bool = False, error_buf=None):
+    """Gradient accumulation over microbatches via lax.scan.
+
+    Each microbatch's gradient is (optionally) compressed before joining
+    the accumulator — modeling per-microbatch reduce-scatter that overlaps
+    the next microbatch's compute (the scan pipeline gives XLA the overlap
+    opportunity; on TPU the async collective scheduler exploits it).
+
+    microbatches: pytree with leading axis n_micro.
+    Returns (mean loss, accumulated grads [f32], new error buffer).
+    """
+    n_micro = jax.tree.leaves(microbatches)[0].shape[0]
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    if error_buf is None:
+        error_buf = init_error_buf(params)
+
+    def body(carry, mb):
+        acc, ebuf, loss_sum = carry
+        loss, g = grad_fn(params, mb)
+        if compress:
+            g, ebuf = compress_with_feedback(g, ebuf)
+        acc = jax.tree.map(lambda a, gg: a + gg.astype(jnp.float32),
+                           acc, g)
+        return (acc, ebuf, loss_sum + loss), None
+
+    (acc, ebuf, loss_sum), _ = jax.lax.scan(
+        body, (zeros, error_buf, jnp.zeros((), jnp.float32)), microbatches)
+    grads = jax.tree.map(lambda a: a / n_micro, acc)
+    return loss_sum / n_micro, grads, ebuf

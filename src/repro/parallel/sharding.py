@@ -1,0 +1,256 @@
+"""Sharding rules: logical parameter/activation/cache layouts -> PartitionSpec.
+
+Mesh axes: ('data', 'model') single-pod, ('pod', 'data', 'model') multi-pod.
+  - batch dims shard over ('pod', 'data')           [DP across pods]
+  - attention heads / d_ff / vocab over 'model'     [TP]
+  - params additionally over 'data' when fsdp=True  [FSDP / ZeRO]
+  - KV caches shard the *sequence* dim over 'model' (robust for GQA where
+    n_kv_heads < TP degree; softmax reductions over the sharded seq are
+    handled by SPMD with all-reduces)
+  - MoE experts shard over 'model'                  [EP == TP axis]
+
+``fit()`` drops any axis that does not divide a dim, so the same rules serve
+every (arch x shape) cell — e.g. batch=1 long-context decode simply loses
+its batch sharding instead of failing.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def fit(mesh: Mesh, shape: tuple[int, ...], spec: tuple) -> P:
+    """Drop axes that don't divide their dim; returns a valid PartitionSpec."""
+    fixed = []
+    for dim, axes in zip(shape, spec):
+        if axes is None:
+            fixed.append(None)
+            continue
+        cand = (axes,) if isinstance(axes, str) else tuple(axes)
+        kept = []
+        size = dim
+        for a in cand:
+            if a in mesh.shape and size % mesh.shape[a] == 0:
+                kept.append(a)
+                size //= mesh.shape[a]
+        fixed.append(tuple(kept) if len(kept) > 1 else
+                     (kept[0] if kept else None))
+    # trailing dims beyond spec -> replicated
+    fixed += [None] * (len(shape) - len(fixed))
+    return P(*fixed)
+
+
+@dataclass
+class MeshRules:
+    """Bound to a mesh; produces shardings for params/acts/caches/batches.
+
+    Optimization variants (see EXPERIMENTS.md §Perf):
+      seq_parallel — residual-stream activations shard their sequence dim
+        over 'model' (Korthikanti-style sequence parallelism): the
+        per-layer TP combine becomes reduce-scatter (+ all-gather before
+        qkv) instead of a full all-reduce.
+      decode_2d — weight-stationary decode sharding: FFN weights live 2D
+        over (data x model) and are NEVER gathered; the tiny decode
+        activations move instead (vs ZeRO-inference all-gathering the
+        whole model every step).
+    """
+
+    mesh: Mesh
+    fsdp: bool = True
+    seq_parallel: bool = False
+    decode_2d: bool = False
+
+    @property
+    def batch_axes(self):
+        return (("pod", "data") if "pod" in self.mesh.shape else ("data",))
+
+    @property
+    def fsdp_axis(self):
+        return "data" if self.fsdp else None
+
+    # ------------------------------------------------------------------
+    # activation constraints (Sharder protocol for the model stacks)
+    # ------------------------------------------------------------------
+
+    def act(self, x: jax.Array, kind: str) -> jax.Array:
+        if x.ndim == 3:
+            if kind == "logits":
+                spec = fit(self.mesh, x.shape,
+                           (self.batch_axes, None, "model"))
+            elif self.seq_parallel and kind == "act" and x.shape[1] > 1:
+                spec = fit(self.mesh, x.shape,
+                           (self.batch_axes, "model", None))
+            elif self.decode_2d and kind == "ffn_in" and x.shape[1] == 1:
+                # weight-stationary FFN: move the (tiny) decode activation
+                # onto the weights' 'data' shards; weights never move
+                spec = fit(self.mesh, x.shape, (None, None, "data"))
+            else:
+                spec = fit(self.mesh, x.shape, (self.batch_axes, None, None))
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(self.mesh, spec))
+        if x.ndim == 4 and kind == "moe_inner":
+            # (G, E, C, d): groups over DP, experts over TP (EP)
+            spec = fit(self.mesh, x.shape,
+                       (self.batch_axes, "model", None, None))
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(self.mesh, spec))
+        if x.ndim == 5 and kind == "attn_logits" and x.shape[3] == 1:
+            # decode logits (B, Hkv, G, 1, S): keep the kv/seq dim on the
+            # TP axis — distributed softmax over the seq-sharded cache
+            # instead of all-gathering KV every step
+            spec = fit(self.mesh, x.shape,
+                       (self.batch_axes, None, None, None, "model"))
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(self.mesh, spec))
+        return x
+
+    # ------------------------------------------------------------------
+    # parameter specs
+    # ------------------------------------------------------------------
+
+    def param_specs(self, params: Any) -> Any:
+        """Pytree of PartitionSpec matching the params pytree."""
+        fs = self.fsdp_axis
+
+        def leaf_spec(path, arr) -> P:
+            keys = [getattr(k, "key", getattr(k, "idx", None))
+                    for k in path]
+            name = next((k for k in reversed(keys)
+                         if isinstance(k, str)), "")
+            in_moe = "moe" in keys and "shared" not in keys
+            nd = arr.ndim
+            if nd == 0:
+                return P()
+            if self.decode_2d:
+                # weight-stationary decode: never gather weights; FFN 2D
+                # over (data x model), attention column/row over model only
+                spec2d = self._decode_2d_spec(name, in_moe, nd)
+                if spec2d is not None:
+                    lead = nd - len(spec2d)
+                    return fit(self.mesh, arr.shape,
+                               (None,) * max(lead, 0) + spec2d[:nd])
+            if name in ("scale", "A_log", "D", "dt_bias", "f_bias",
+                        "bias"):
+                trailing = (None,) * 1
+            elif name == "embed":
+                trailing = ("model", fs)
+            elif name == "lm_head":
+                trailing = (fs, "model")
+            elif in_moe and name in ("w_gate", "w_up"):
+                trailing = ("model", fs, None)       # experts over TP axis
+            elif in_moe and name == "w_down":
+                trailing = ("model", None, fs)
+            elif in_moe and name == "router":
+                trailing = (None, None)
+            elif name in ("wq", "wk", "wv", "w_gate", "w_up", "in_proj",
+                          "w_x", "w_i", "w_f"):
+                trailing = (fs, "model")             # column parallel
+            elif name in ("wo", "w_down", "out_proj", "w_o"):
+                trailing = ("model", fs)             # row parallel
+            elif name == "r_h":
+                trailing = ("model", None, None)
+            else:
+                trailing = (None,) * min(nd, 2)
+            lead = nd - len(trailing)
+            spec = (None,) * max(lead, 0) + trailing[:nd]
+            return fit(self.mesh, arr.shape, spec)
+
+        return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+    @staticmethod
+    def _decode_2d_spec(name: str, in_moe: bool, nd: int):
+        """Weight-stationary decode layouts (None = fall through)."""
+        if name in ("w_gate", "w_up") and not in_moe:
+            # contracting dim over 'data' (pairs with the ffn_in activation
+            # constraint), output over 'model' — never gathered
+            return ("data", "model")
+        if name == "w_down" and not in_moe:
+            # row-parallel over 'model'; output dim replicated over data so
+            # the batch-sharded residual consumer never gathers the weight
+            return ("model", None)
+        if in_moe and name in ("w_gate", "w_up"):
+            return ("model", "data", None)
+        if in_moe and name == "w_down":
+            return ("model", None, "data")
+        if name in ("wq", "wk", "wv", "in_proj", "w_x", "w_i", "w_f"):
+            return (None, "model")
+        if name in ("wo", "out_proj", "w_o"):
+            return ("model", None)
+        if name == "embed":
+            return ("model", None)
+        if name == "lm_head":
+            return (None, "model")
+        return None
+
+    def param_shardings(self, params: Any) -> Any:
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            self.param_specs(params),
+                            is_leaf=lambda x: isinstance(x, P))
+
+    # ------------------------------------------------------------------
+    # batch / cache specs
+    # ------------------------------------------------------------------
+
+    def batch_specs(self, batch: Any) -> Any:
+        ba = self.batch_axes
+
+        def leaf(arr) -> P:
+            return fit(self.mesh, arr.shape,
+                       (ba,) + (None,) * (arr.ndim - 1))
+
+        return jax.tree.map(leaf, batch)
+
+    def cache_specs(self, cache: Any) -> Any:
+        """KV/state cache layouts (leading layer-stack dims replicated)."""
+        ba = self.batch_axes
+
+        def leaf(path, arr) -> P:
+            keys = [getattr(k, "key", None) for k in path]
+            name = next((k for k in reversed(keys)
+                         if isinstance(k, str)), "")
+            if arr.ndim == 0:      # pos scalar
+                return P()
+            if name in ("k", "v"):
+                # (L, B, S, Hkv, hd) or (n_super, B, S, Hkv, hd):
+                # batch over DP, SEQUENCE over TP (robust to Hkv < TP)
+                return fit(self.mesh, arr.shape,
+                           (None, ba, "model", None, None))
+            if name == "enc_out":  # (B, S_src, d)
+                return fit(self.mesh, arr.shape, (ba, None, None))
+            if name in ("ssm", "ssm_tail"):
+                # (..., B, H, P, N): heads over TP
+                spec = (None,) * (arr.ndim - 4) + (ba, "model", None, None)
+                return fit(self.mesh, arr.shape, spec)
+            if name == "mlstm":
+                # tuple leaves: (n_pairs, B, h, dh[, dh]) — shard dh
+                if arr.ndim >= 4:
+                    return fit(self.mesh, arr.shape,
+                               (None, ba, None, "model") +
+                               (None,) * (arr.ndim - 4))
+                return fit(self.mesh, arr.shape, (None, ba, None))
+            if name == "slstm":    # (n_pairs, B, d)
+                return fit(self.mesh, arr.shape, (None, ba, "model"))
+            spec = (None,) + (ba,) + (None,) * (arr.ndim - 2)
+            return fit(self.mesh, arr.shape, spec[:arr.ndim])
+
+        return jax.tree_util.tree_map_with_path(leaf, cache)
+
+    def shardings_of(self, specs: Any) -> Any:
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs,
+                            is_leaf=lambda x: isinstance(x, P))

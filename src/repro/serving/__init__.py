@@ -1,0 +1,7 @@
+"""Serving substrate: paged KV accounting, continuous batching, telemetry-
+integrated inference engine."""
+from repro.serving.engine import EngineConfig, InferenceEngine
+from repro.serving.kvcache import PagedKVPool
+from repro.serving.scheduler import Scheduler, SchedulerConfig, ServeRequest
+__all__ = ["EngineConfig", "InferenceEngine", "PagedKVPool", "Scheduler",
+           "SchedulerConfig", "ServeRequest"]

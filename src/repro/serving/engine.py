@@ -1,0 +1,251 @@
+"""InferenceEngine: continuous-batching serving loop with the DPU-analog
+telemetry plane wired through it (the paper's architecture, live).
+
+Per-slot KV caches are a stacked pytree; the decode step is the Model's
+single-sequence step vmapped over slots, so every slot carries its own
+position/ring state (true continuous batching).  Telemetry taps emit the
+exact event schema the detectors consume: INGRESS on request arrival, H2D
+around prefill feeds, DISPATCH per step, D2H per step, EGRESS per token,
+QUEUE_SAMPLE per scheduler tick — and the engine implements EngineControls
+so the mitigation controller can close the loop (§5).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.detectors import META_DIR_EGRESS, META_DIR_INGRESS, META_FIN
+from repro.core.events import Event, EventKind
+from repro.core.mitigation import MitigationController
+from repro.core.telemetry import TelemetryPlane
+from repro.models import Model
+from repro.serving.kvcache import PagedKVPool
+from repro.serving.scheduler import Scheduler, SchedulerConfig, ServeRequest
+
+
+@dataclass
+class EngineConfig:
+    max_slots: int = 8
+    max_seq: int = 256
+    page_size: int = 16
+    n_pages: int = 512
+    node: int = 0
+    telemetry: bool = True
+    mitigate: bool = True
+    greedy: bool = True
+
+
+class InferenceEngine:
+    """Single-host serving engine (smoke scale on CPU, shardable on TPU)."""
+
+    def __init__(self, model: Model, params, cfg: EngineConfig | None = None,
+                 plane: TelemetryPlane | None = None) -> None:
+        self.model = model
+        self.params = params
+        self.cfg = cfg or EngineConfig()
+        self.sched = Scheduler(SchedulerConfig(max_slots=self.cfg.max_slots))
+        self.pool = PagedKVPool(self.cfg.n_pages, self.cfg.page_size)
+        self.plane = plane
+        if self.plane is None and self.cfg.telemetry:
+            self.plane = TelemetryPlane(n_nodes=1, mitigate=self.cfg.mitigate)
+        if self.plane is not None and self.plane.controller is not None:
+            self.plane.controller.engine = self
+        # stacked per-slot caches: leaf shape (slots, ...)
+        single = model.init_cache(1, self.cfg.max_seq)
+        self.slot_cache = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (self.cfg.max_slots,) + a.shape)
+            .copy(), single)
+        self._decode_vmapped = jax.jit(jax.vmap(
+            lambda tok, cache: model.decode_step(self.params, tok, cache),
+            in_axes=(0, 0)))
+        self._prefill_jit: dict[int, callable] = {}
+        self.clock = 0.0
+        self.completed: list[ServeRequest] = []
+        self.kv_compress = False
+        self.stats = {"steps": 0, "tokens": 0, "prefills": 0}
+
+    # ------------------------------------------------------------------
+    # EngineControls (mitigation actuation surface)
+    # ------------------------------------------------------------------
+
+    def apply_action(self, action: str, node: int, detail: dict) -> bool:
+        if action == "inflight_remap":
+            self.sched.set_continuous(True)
+            return True
+        if action == "widen_batch_window":
+            self.sched.set_batch_window(
+                max(self.sched.cfg.batch_window * 2, 2e-3))
+            return True
+        if action == "admission_control":
+            self.sched.pause_admission(self.clock + 0.05)
+            return True
+        if action == "smooth_admission":
+            self.sched.set_batch_window(
+                max(self.sched.cfg.batch_window, 1e-3))
+            return True
+        if action == "compress_kv":
+            self.kv_compress = True
+            return True
+        if action in ("rebalance_microbatches", "rebalance_shards",
+                      "rebalance_frontend", "pin_and_coalesce",
+                      "batch_launches"):
+            return True     # accepted; no-op at single-host smoke scale
+        return False
+
+    # ------------------------------------------------------------------
+    # request path
+    # ------------------------------------------------------------------
+
+    def submit(self, req: ServeRequest) -> None:
+        self.sched.submit(req)
+        self._emit(EventKind.INGRESS_PKT, flow=req.req_id,
+                   size=2 * req.prompt_len, meta=META_DIR_INGRESS)
+
+    def _emit(self, kind: EventKind, **kw) -> None:
+        if self.plane is not None:
+            self.plane.observe(Event(ts=self.clock, kind=kind,
+                                     node=self.cfg.node, **kw))
+
+    def _prefill_fn(self, bucket: int):
+        if bucket not in self._prefill_jit:
+            model = self.model
+
+            def prefill_one(params, tokens, cache):
+                return model.prefill(params, tokens, cache)
+
+            self._prefill_jit[bucket] = jax.jit(prefill_one)
+        return self._prefill_jit[bucket]
+
+    def _admit_loop(self) -> None:
+        while True:
+            if not self.sched.queue:
+                break
+            head = self.sched.queue[0]
+            need = head.prompt_len + head.max_new_tokens
+            if not self.pool.can_admit(need):
+                # paper §5: early KV eviction under pressure
+                if self.pool.evict_lru() is None:
+                    break
+                continue
+            got = self.sched.admit(self.clock)
+            if got is None:
+                break
+            slot, req = got
+            self.pool.allocate(req.req_id, need)
+            self._prefill(slot, req)
+
+    def _prefill(self, slot: int, req: ServeRequest) -> None:
+        bucket = self.sched.bucket_len(req.prompt_len)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, -req.prompt_len:] = req.prompt    # left-pad into bucket
+        toks = jnp.asarray(toks)
+        self._emit(EventKind.H2D_XFER, device=slot % 4,
+                   size=int(toks.size * 4), flow=req.req_id)
+        fresh = self.model.init_cache(1, self.cfg.max_seq)
+        self._emit(EventKind.DISPATCH, device=slot % 4)
+        logits, cache = self._prefill_fn(bucket)(self.params, toks, fresh)
+        # first-token logits return to the host (pairs with the dispatch)
+        self._emit(EventKind.D2H_XFER, device=slot % 4,
+                   size=int(logits.size * 4), flow=req.req_id)
+        # write the per-slot cache
+        self.slot_cache = jax.tree.map(
+            lambda full, one: full.at[slot].set(one[...]),
+            self.slot_cache, cache)
+        nxt = int(jnp.argmax(logits[0, -1]))
+        req.tokens_out = 0
+        req.first_token = -1.0
+        self._slot_next_token[slot] = nxt
+        self.stats["prefills"] += 1
+
+    # ------------------------------------------------------------------
+    # decode loop
+    # ------------------------------------------------------------------
+
+    _slot_next_token: dict
+
+    def run(self, requests: list[ServeRequest], max_steps: int = 2000,
+            step_time: float = 2e-3) -> dict:
+        """Drive the engine until all requests finish (or step budget)."""
+        self._slot_next_token = {}
+        pending = sorted(requests, key=lambda r: r.arrival)
+        i = 0
+        for step in range(max_steps):
+            self.clock += step_time
+            while i < len(pending) and pending[i].arrival <= self.clock:
+                self.submit(pending[i])
+                i += 1
+            self._emit(EventKind.QUEUE_SAMPLE,
+                       depth=self.sched.queue_depth(),
+                       meta=META_DIR_INGRESS)
+            self._admit_loop()
+            if self.sched.running:
+                self._step()
+            if i >= len(pending) and not self.sched.running \
+                    and not self.sched.queue:
+                break
+        return self.report()
+
+    def _step(self) -> None:
+        slots = sorted(self.sched.running)
+        toks = np.zeros((self.cfg.max_slots, 1, 1), np.int32)
+        for s in slots:
+            toks[s, 0, 0] = self._slot_next_token.get(s, 0)
+        self._emit(EventKind.DISPATCH, device=0)
+        logits, new_cache = self._decode_vmapped(jnp.asarray(toks),
+                                                 self.slot_cache)
+        self.slot_cache = new_cache
+        self._emit(EventKind.D2H_XFER, device=0,
+                   size=len(slots) * 4)
+        self.stats["steps"] += 1
+        nxt = np.asarray(jnp.argmax(logits[:, 0, -1], axis=-1))
+        for s in slots:
+            req = self.sched.running[s]
+            if req.first_token < 0:
+                req.first_token = self.clock
+            req.tokens_out += 1
+            self.stats["tokens"] += 1
+            self.pool.extend(req.req_id)
+            self._slot_next_token[s] = int(nxt[s])
+            fin = req.tokens_out >= req.max_new_tokens
+            self._emit(EventKind.EGRESS_PKT, flow=req.req_id,
+                       size=8 if not self.kv_compress else 4,
+                       group=self.cfg.node,
+                       meta=META_FIN if fin else 0)
+            if fin:
+                self.sched.release(s, self.clock)
+                self.pool.free(req.req_id)
+                self.completed.append(req)
+        # KV occupancy sample (Table 2b)
+        self._emit(EventKind.QUEUE_SAMPLE,
+                   depth=int(self.pool.occupancy() * 100),
+                   meta=META_DIR_EGRESS if False else 3)
+
+    # ------------------------------------------------------------------
+
+    def report(self) -> dict:
+        lats = sorted(r.latency for r in self.completed)
+        ttfts = sorted(r.ttft for r in self.completed)
+
+        def pct(xs, q):
+            return xs[min(int(q * len(xs)), len(xs) - 1)] if xs else None
+        rep = {
+            "completed": len(self.completed),
+            "steps": self.stats["steps"],
+            "tokens": self.stats["tokens"],
+            "tokens_per_step": self.stats["tokens"]
+            / max(self.stats["steps"], 1),
+            "p50_latency": pct(lats, 0.5),
+            "p99_latency": pct(lats, 0.99),
+            "p50_ttft": pct(ttfts, 0.5),
+            "kv_occupancy": self.pool.occupancy(),
+            "evictions": self.pool.stats.evictions,
+        }
+        if self.plane is not None:
+            rep["telemetry"] = self.plane.report()
+        return rep

@@ -1,0 +1,11 @@
+"""Cluster simulator: pathology injection + closed-loop validation substrate."""
+
+from repro.sim.cluster import ClusterSim, FaultSpec, SimMetrics, SimParams, run_scenario
+from repro.sim.faults import SCENARIOS, Scenario, make_scenarios
+from repro.sim.workload import Request, WorkloadSpec, generate
+
+__all__ = [
+    "ClusterSim", "FaultSpec", "SCENARIOS", "Scenario", "SimMetrics",
+    "SimParams", "Request", "WorkloadSpec", "generate", "make_scenarios",
+    "run_scenario",
+]

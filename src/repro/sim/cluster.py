@@ -1,0 +1,581 @@
+"""Discrete-event cluster simulator for pathology injection and validation.
+
+Models an LLM inference cluster the way the paper's DPU sees it: every
+request's lifecycle is rendered as the event sequence a NIC-inline / PCIe-peer
+observer would record — ingress packets, H2D/D2H DMA bursts, dispatch
+doorbells, TP collective bursts, PP stage handoffs, KV-cache migrations,
+egress token packets, credit updates, queue-depth samples.
+
+The simulator serves three purposes:
+  1. *Per-row validation*: each runbook row has a fault injector
+     (``sim.faults``); we assert the bound detector fires and attribution
+     names the right locus.
+  2. *Closed-loop evaluation* (§5): the sim implements ``EngineControls``;
+     the mitigation controller's actions actually remove the fault effect,
+     so throughput/latency deltas quantify the benefit.
+  3. *Benchmark substrate* for Tables 3(a)/(b)/(c).
+
+Fidelity notes: timing constants approximate a TP-sharded decode loop at a
+2 ms step cadence.  The sim is NOT a queueing-theoretic model of a specific
+fabric — it is a *signal generator* whose statistics carry the pathologies'
+signatures (that is exactly the DPU's view: distributions of timestamps,
+sizes, and gaps).
+"""
+
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass, field
+
+from repro.core.detectors import (
+    META_DIR_EGRESS,
+    META_DIR_EW,
+    META_DIR_INGRESS,
+    META_FIN,
+    META_P2P_INTER,
+    META_P2P_INTRA,
+    META_P2P_KV,
+)
+from repro.core.events import CollectiveOp, Event, EventKind
+from repro.core.telemetry import TelemetryPlane
+from repro.sim.workload import Request, WorkloadSpec, generate
+
+
+@dataclass
+class SimParams:
+    n_nodes: int = 4
+    devices_per_node: int = 4
+    slots_per_node: int = 8          # max concurrent decode sequences
+    duration: float = 2.0
+    decode_step: float = 2e-3        # healthy decode round cadence
+    compute_frac: float = 0.35       # fraction of step before collective
+    egress_frac: float = 0.75        # fraction of step when tokens egress
+    mtu: int = 4096
+    h2d_tok_bytes: int = 8192        # embedding bytes per prompt token
+    d2h_tok_bytes: int = 1024        # logits/token id bytes per step
+    egress_tok_bytes: int = 512
+    collective_bytes: int = 1 << 21  # per node per round (TP all-reduce)
+    p2p_intra_bytes: int = 1 << 19
+    kv_page_bytes: int = 1 << 16
+    queue_sample_every: float = 4e-3
+    credit_every: float = 8e-3
+    # True = healthy engine (vLLM-style continuous batching).  The early-stop
+    # pathologies (paper: "no remap of freed resources") set this False.
+    continuous_batching: bool = True
+    seed: int = 0
+
+
+@dataclass
+class FaultSpec:
+    """Knobs a fault injector can turn.  All default to healthy values."""
+
+    name: str = "healthy"
+    row_id: str = ""                   # runbook row this fault realizes
+    start: float = 0.8                 # activation time (baseline warmup)
+    # --- north-south ---
+    ingress_starve_node: int = -1      # node whose ingress dries up
+    ingress_retx_p: float = 0.0
+    egress_retx_p: float = 0.0
+    ew_retx_p: float = 0.0
+    egress_jitter_mult: float = 1.0
+    egress_backlog_rate: float = 0.0   # queue growth per round
+    nic_background_frac: float = 0.0   # extra NIC load as frac of capacity
+    # --- pcie ---
+    h2d_stall_node: int = -1           # node whose device feed stalls
+    h2d_stall_mult: float = 10.0
+    h2d_split: int = 1                 # split every H2D into n tiny DMAs
+    d2h_delay_mult: float = 1.0
+    dispatch_jitter_mult: float = 1.0
+    dispatch_delay: float = 0.0
+    skew_device: tuple[int, int] | None = None   # (node, device) starved
+    skew_factor: float = 0.15          # starved device's share multiplier
+    pcie_background_frac: float = 0.0
+    p2p_slow_node: int = -1
+    reg_churn: bool = False
+    host_slow_node: int = -1           # CPU-bottlenecked node
+    # --- east-west ---
+    straggler_node: int = -1
+    straggler_delay: float = 0.0       # added collective delay (s)
+    collective_bytes_node: int = -1    # node that oversends
+    collective_bytes_mult: float = 1.0
+    stage_gap_growth: float = 0.0      # PP handoff gap growth per round (s)
+    fabric_jitter: float = 0.0         # stddev added to all E-W arrivals (s)
+    hol_stall_frac: float = 0.0        # fraction of flows stalled in bursts
+    credit_starve: bool = False
+    kv_heavy: bool = False
+    node_stop: int = -1                # node that exits mid-iteration
+    node_stop_at: float = 1.2
+    # --- workload shaping ---
+    early_stop_skew: bool = False      # extreme decode-length divergence
+
+    mitigated: bool = False            # controller flips this
+
+    def active(self, t: float) -> bool:
+        return t >= self.start and not self.mitigated
+
+
+@dataclass
+class SimMetrics:
+    completed: int = 0
+    latencies: list = field(default_factory=list)
+    tokens_out: int = 0
+    slot_rounds_busy: int = 0
+    slot_rounds_idle: int = 0          # idle WHILE queue nonempty (waste)
+    first_finding_ts: float = -1.0
+    actions_applied: list = field(default_factory=list)
+
+    def p(self, q: float) -> float:
+        if not self.latencies:
+            return float("nan")
+        s = sorted(self.latencies)
+        return s[min(int(q * len(s)), len(s) - 1)]
+
+    def throughput(self, duration: float) -> float:
+        return self.tokens_out / duration
+
+    def idle_frac(self) -> float:
+        tot = self.slot_rounds_busy + self.slot_rounds_idle
+        return self.slot_rounds_idle / tot if tot else 0.0
+
+
+class ClusterSim:
+    """Round-driven simulator; implements EngineControls for the closed loop."""
+
+    def __init__(self, params: SimParams, workload: WorkloadSpec,
+                 fault: FaultSpec | None = None,
+                 plane: TelemetryPlane | None = None) -> None:
+        self.p = params
+        self.fault = fault or FaultSpec()
+        self.plane = plane
+        self.rng = random.Random(params.seed ^ 0xD0)
+        self.requests = generate(workload)
+        if self.fault.early_stop_skew:
+            self._skew_decode_lengths()
+        self.pending: list[Request] = sorted(self.requests,
+                                             key=lambda r: r.arrival)
+        self.queues: list[list[Request]] = [[] for _ in range(params.n_nodes)]
+        self.active: list[list[Request]] = [[] for _ in range(params.n_nodes)]
+        self.batch_open: list[bool] = [True] * params.n_nodes
+        self.metrics = SimMetrics()
+        self.round = 0
+        self._next_queue_sample = 0.0
+        self._next_credit = 0.0
+        self._egress_backlog = [0.0] * params.n_nodes
+        self._pp_extra_gap = 0.0
+        self._events: list[Event] = []
+        self._continuous = params.continuous_batching
+        self._rr = 0
+
+    # ------------------------------------------------------------------
+    # EngineControls
+    # ------------------------------------------------------------------
+
+    def apply_action(self, action: str, node: int, detail: dict) -> bool:
+        """Mitigation actuation: matching action neutralizes the fault."""
+        self.metrics.actions_applied.append((action, node))
+        from repro.core.runbooks import BY_ID
+        entry = BY_ID.get(self.fault.row_id)
+        if entry is not None and entry.action == action:
+            self.fault.mitigated = True
+            if action == "inflight_remap":
+                self._continuous = True  # enable continuous batching
+            return True
+        # generic actions that help regardless
+        if action == "inflight_remap":
+            self._continuous = True
+            return True
+        return False
+
+    # ------------------------------------------------------------------
+    # main loop
+    # ------------------------------------------------------------------
+
+    def run(self) -> SimMetrics:
+        t = 0.0
+        p = self.p
+        while t < p.duration:
+            self._events.clear()
+            self._admit(t)
+            self._sample_queues(t)
+            self._decode_round(t)
+            self._credits(t)
+            self._events.sort(key=lambda e: e.ts)
+            if self.plane is not None:
+                for ev in self._events:
+                    self.plane.observe(ev)
+                if (self.metrics.first_finding_ts < 0 and self.plane.findings):
+                    for f in self.plane.findings:
+                        if f.name == self.fault.row_id:
+                            self.metrics.first_finding_ts = f.ts
+                            break
+            self.round += 1
+            t += p.decode_step
+        return self.metrics
+
+    # ------------------------------------------------------------------
+    # request admission / ingress path
+    # ------------------------------------------------------------------
+
+    def _skew_decode_lengths(self) -> None:
+        # randomized so stragglers land on every node (a modular pattern
+        # would alias with round-robin placement)
+        rng = random.Random(0xBEEF)
+        for r in self.requests:
+            r.decode_len = 400 if rng.random() < 0.25 else 8
+
+    def _emit(self, ev: Event) -> None:
+        self._events.append(ev)
+
+    def _node_for(self, r: Request) -> int:
+        self._rr += 1
+        return self._rr % self.p.n_nodes
+
+    def _admit(self, t: float) -> None:
+        p, f = self.p, self.fault
+        while self.pending and self.pending[0].arrival <= t:
+            r = self.pending.pop(0)
+            node = self._node_for(r)
+            if f.active(t) and f.ingress_starve_node == node:
+                # upstream dried up: this node's share silently vanishes
+                continue
+            r.node = node
+            self._ingress_packets(r, t)
+            self.queues[node].append(r)
+
+    def _ingress_packets(self, r: Request, t: float) -> None:
+        p, f = self.p, self.fault
+        nbytes = r.prompt_len * 2  # token ids on the wire
+        npkt = max(1, min(8, math.ceil(nbytes / p.mtu)))
+        base = max(r.arrival, t - p.decode_step)
+        for j in range(npkt):
+            ts = base + j * 2e-5 + self.rng.random() * 1e-5
+            self._emit(Event(ts=ts, kind=EventKind.INGRESS_PKT, node=r.node,
+                             flow=r.flow, size=min(nbytes, p.mtu),
+                             group=r.node))
+            if f.active(ts) and self.rng.random() < f.ingress_retx_p:
+                self._emit(Event(ts=ts + 5e-4, kind=EventKind.RETRANSMIT,
+                                 node=r.node, flow=r.flow, size=p.mtu,
+                                 meta=META_DIR_INGRESS))
+
+    def _sample_queues(self, t: float) -> None:
+        p, f = self.p, self.fault
+        if t < self._next_queue_sample:
+            return
+        self._next_queue_sample = t + p.queue_sample_every
+        for node in range(p.n_nodes):
+            depth = len(self.queues[node])
+            self._emit(Event(ts=t, kind=EventKind.QUEUE_SAMPLE, node=node,
+                             depth=depth, meta=META_DIR_INGRESS))
+            if f.active(t) and f.egress_backlog_rate > 0:
+                self._egress_backlog[node] += f.egress_backlog_rate
+            else:
+                self._egress_backlog[node] = max(
+                    0.0, self._egress_backlog[node] - 2.0)
+            self._emit(Event(ts=t, kind=EventKind.QUEUE_SAMPLE, node=node,
+                             depth=int(self._egress_backlog[node]),
+                             meta=META_DIR_EGRESS))
+            if f.active(t) and f.fabric_jitter > 0:
+                self._emit(Event(ts=t, kind=EventKind.QUEUE_SAMPLE, node=node,
+                                 depth=20 + self.rng.randrange(20), meta=2))
+
+    # ------------------------------------------------------------------
+    # decode round: the heart of the sim
+    # ------------------------------------------------------------------
+
+    def _decode_round(self, t: float) -> None:
+        p, f = self.p, self.fault
+        for node in range(p.n_nodes):
+            # a CPU-bottlenecked host can't admit/prefill either
+            if not (f.active(t) and f.host_slow_node == node
+                    and (self.round % 6) != 0):
+                self._refill_slots(node, t)
+            act = self.active[node]
+            busy = len(act)
+            self.metrics.slot_rounds_busy += busy
+            if self.queues[node]:
+                self.metrics.slot_rounds_idle += p.slots_per_node - busy
+            # background NIC load rides the wire regardless of decode state
+            if f.active(t) and f.nic_background_frac > 0:
+                cap = 200e9 / 8  # matches DetectorConfig.nic_Bps
+                per_round = f.nic_background_frac * cap * p.decode_step
+                for j in range(8):
+                    self._emit(Event(
+                        ts=t + (j + self.rng.random()) * p.decode_step / 8,
+                        kind=EventKind.INGRESS_PKT, node=node, flow=-1,
+                        size=int(per_round / 8)))
+            if not act:
+                continue
+            stopped = (f.active(t) and f.node_stop == node
+                       and t >= f.node_stop_at)
+            # a CPU-bottlenecked host orchestrates every decode step; when
+            # it stalls, the node's whole loop runs at 1/6 cadence — DMA
+            # rate sags, doorbells go sparse, and it straggles collectives
+            host_stalled = (f.active(t) and f.host_slow_node == node
+                            and (self.round % 6) != 0)
+            if host_stalled:
+                # still answers the TP collective, late (bunched dispatch)
+                self._collective_phase(node, t, t + 6e-3)
+                continue
+
+            # ---- H2D feed (decode inputs) per device ----
+            self._h2d_phase(node, t, busy)
+
+            # ---- dispatch (doorbell): only devices that hold work ----
+            live_devs = sorted({r.device for r in act if r.device >= 0})
+            disp_t = self._dispatch_phase(node, t, live_devs)
+
+            # ---- TP collective burst (east-west) ----
+            if not stopped:
+                self._collective_phase(node, t, disp_t)
+
+            # ---- PP stage handoff (nodes pair up across stages) ----
+            self._pp_phase(node, t)
+
+            # ---- intra-node P2P ----
+            self._p2p_intra_phase(node, t)
+
+            # ---- D2H returns + egress ----
+            self._d2h_egress_phase(node, t, stopped)
+
+            # ---- KV transfers ----
+            self._kv_phase(node, t)
+
+    def _refill_slots(self, node: int, t: float) -> None:
+        p = self.p
+        act = self.active[node]
+        if self._continuous:
+            while len(act) < p.slots_per_node and self.queues[node]:
+                r = self.queues[node].pop(0)
+                self._prefill(r, t)
+                act.append(r)
+        else:
+            # static batching: only admit when the whole batch drained
+            if not act and self.queues[node]:
+                while len(act) < p.slots_per_node and self.queues[node]:
+                    r = self.queues[node].pop(0)
+                    self._prefill(r, t)
+                    act.append(r)
+
+    def _prefill(self, r: Request, t: float) -> None:
+        p = self.p
+        r.start_decode = t
+        # scheduler places the sequence on the least-loaded device slot
+        counts = [0] * p.devices_per_node
+        for q in self.active[r.node]:
+            if q.device >= 0:
+                counts[q.device] += 1
+        r.device = counts.index(min(counts))
+        nbytes = r.prompt_len * p.h2d_tok_bytes
+        self._emit_h2d(r.node, r.device, t + 1e-4, nbytes, flow=r.flow)
+
+    def _emit_h2d(self, node: int, dev: int, ts: float, nbytes: int,
+                  flow: int = -1) -> None:
+        p, f = self.p, self.fault
+        split = f.h2d_split if f.active(ts) else 1
+        if f.active(ts) and f.skew_device == (node, dev):
+            nbytes = int(nbytes * f.skew_factor)
+        per = max(1, nbytes // split)
+        for j in range(split):
+            self._emit(Event(ts=ts + j * 1e-5, kind=EventKind.H2D_XFER,
+                             node=node, device=dev, flow=flow, size=per))
+            if f.active(ts) and f.reg_churn:
+                # short-lived buffers: map before + unmap after every DMA
+                self._emit(Event(ts=ts + j * 1e-5 - 2e-6,
+                                 kind=EventKind.MEM_REG, node=node,
+                                 device=dev, size=per))
+                self._emit(Event(ts=ts + j * 1e-5 + 2e-6,
+                                 kind=EventKind.MEM_REG, node=node,
+                                 device=dev, size=per))
+        # PCIe background load (saturation fault)
+        if f.active(ts) and f.pcie_background_frac > 0:
+            cap = 64e9
+            per_round = f.pcie_background_frac * cap * p.decode_step
+            self._emit(Event(ts=ts + 2e-4, kind=EventKind.H2D_XFER, node=node,
+                             device=dev, size=int(per_round)))
+
+    def _h2d_phase(self, node: int, t: float, busy: int) -> None:
+        p, f = self.p, self.fault
+        stall = (f.active(t) and f.h2d_stall_node == node)
+        if stall and (self.round % int(f.h2d_stall_mult)) != 0:
+            return   # feed goes quiet for most rounds -> open gap grows
+        for dev in range(p.devices_per_node):
+            nbytes = busy * p.h2d_tok_bytes // p.devices_per_node + 1
+            self._emit_h2d(node, dev, t + self.rng.random() * 1e-4, nbytes)
+
+    def _dispatch_phase(self, node: int, t: float,
+                        live_devs: list[int]) -> float:
+        p, f = self.p, self.fault
+        delay = 2e-4
+        if f.active(t):
+            delay += f.dispatch_delay
+            if f.dispatch_jitter_mult > 1.0:
+                delay += self.rng.expovariate(1.0 / (
+                    f.dispatch_jitter_mult * 2e-4))
+        ts = t + delay
+        for dev in live_devs:
+            self._emit(Event(ts=ts + dev * 1e-6, kind=EventKind.DISPATCH,
+                             node=node, device=dev))
+        return ts
+
+    def _collective_phase(self, node: int, t: float, disp_t: float) -> None:
+        p, f = self.p, self.fault
+        # realistic per-node arrival jitter (no exact ties)
+        arrive = (disp_t + p.compute_frac * p.decode_step
+                  + self.rng.random() * 4e-5)
+        nbytes = p.collective_bytes
+        if f.active(t):
+            if f.straggler_node == node:
+                arrive += f.straggler_delay
+            if f.collective_bytes_node == node:
+                nbytes = int(nbytes * f.collective_bytes_mult)
+            if f.fabric_jitter > 0:
+                arrive += abs(self.rng.gauss(0.0, f.fabric_jitter))
+            if self.rng.random() < f.ew_retx_p:
+                self._emit(Event(ts=arrive + 3e-4,
+                                 kind=EventKind.RETRANSMIT, node=node,
+                                 size=p.mtu, meta=META_DIR_EW))
+        self._emit(Event(ts=arrive, kind=EventKind.COLLECTIVE_BURST,
+                         node=node, size=nbytes,
+                         op=int(CollectiveOp.ALL_REDUCE), group=0,
+                         meta=self.round))
+
+    def _pp_phase(self, node: int, t: float) -> None:
+        p, f = self.p, self.fault
+        half = p.n_nodes // 2
+        if half == 0 or node >= half:
+            return
+        gap_extra = 0.0
+        if f.active(t) and f.stage_gap_growth > 0:
+            self._pp_extra_gap += f.stage_gap_growth / max(half, 1)
+            gap_extra = self._pp_extra_gap
+        ts = t + 0.6 * p.decode_step + gap_extra
+        if ts > t + 5 * p.decode_step:
+            # stalled stage: usually emit nothing this round (bubble widens)
+            if self.rng.random() < 0.8:
+                return
+            ts = t + 5 * p.decode_step   # clamp near the round
+        self._emit(Event(ts=ts, kind=EventKind.P2P_BURST, node=node,
+                         size=p.collective_bytes // 2, group=100 + node,
+                         meta=META_P2P_INTER))
+
+    def _hol_stalled(self, node: int, t: float) -> bool:
+        """HoL fault: a subset of nodes' streams freeze in 0.3 s windows."""
+        f = self.fault
+        if not (f.active(t) and f.hol_stall_frac > 0):
+            return False
+        n_stalled = max(1, int(f.hol_stall_frac * self.p.n_nodes))
+        return node < n_stalled and (int(t / 0.3) % 2) == 1
+
+    def _p2p_intra_phase(self, node: int, t: float) -> None:
+        p, f = self.p, self.fault
+        slow = f.active(t) and f.p2p_slow_node == node
+        # same size, but a slow node's bursts come at 1/3 cadence -> the
+        # size/dt throughput proxy drops 3x
+        if slow and (self.round % 3) != 0:
+            return
+        if self._hol_stalled(node, t):
+            return
+        self._emit(Event(ts=t + 0.4 * p.decode_step,
+                         kind=EventKind.P2P_BURST, node=node,
+                         device=self.round % p.devices_per_node,
+                         flow=10 + node, size=p.p2p_intra_bytes,
+                         meta=META_P2P_INTRA))
+
+    def _d2h_egress_phase(self, node: int, t: float, stopped: bool) -> None:
+        p, f = self.p, self.fault
+        act = self.active[node]
+        done: list[Request] = []
+        base = t + p.egress_frac * p.decode_step
+        d2h_delay = 0.0
+        if f.active(t) and f.d2h_delay_mult > 1.0:
+            d2h_delay = (f.d2h_delay_mult - 1.0) * 5e-4
+        # one aggregated D2H (logits/sampled ids) per device per step, the
+        # way a real outfeed looks on the bus
+        if not stopped:
+            per_dev: dict[int, int] = {}
+            for r in act:
+                per_dev[r.device] = per_dev.get(r.device, 0) + p.d2h_tok_bytes
+            for dev, nbytes in per_dev.items():
+                self._emit(Event(ts=base + d2h_delay + dev * 1e-6,
+                                 kind=EventKind.D2H_XFER, node=node,
+                                 device=dev, size=nbytes))
+        for i, r in enumerate(act):
+            r.tokens_out += 1
+            self.metrics.tokens_out += 1
+            fin = r.tokens_out >= r.decode_len
+            ts = base + 2e-4 + i * 2e-6
+            if f.active(t) and f.egress_jitter_mult > 1.0:
+                # cap so event time stays near the round (the plane's clock
+                # follows event timestamps)
+                ts += min(self.rng.expovariate(
+                    1.0 / (f.egress_jitter_mult * 2e-4)), 10e-3)
+            ts += min(self._egress_backlog[node], 40.0) * 1e-4
+            self._emit(Event(ts=ts, kind=EventKind.EGRESS_PKT, node=node,
+                             flow=r.flow, size=p.egress_tok_bytes,
+                             group=node, meta=META_FIN if fin else 0))
+            if f.active(t) and self.rng.random() < f.egress_retx_p:
+                self._emit(Event(ts=ts + 4e-4, kind=EventKind.RETRANSMIT,
+                                 node=node, flow=r.flow, size=p.mtu,
+                                 meta=META_DIR_EGRESS))
+            if fin:
+                r.finish = ts
+                self.metrics.completed += 1
+                self.metrics.latencies.append(r.latency)
+                done.append(r)
+        for r in done:
+            act.remove(r)
+
+    def _kv_phase(self, node: int, t: float) -> None:
+        p, f = self.p, self.fault
+        if self._hol_stalled(node, t):
+            return
+        # healthy background: steady small page migrations, stable stream id
+        if self.round % 16 == 0 and self.active[node]:
+            self._emit(Event(ts=t + 0.5 * p.decode_step,
+                             kind=EventKind.P2P_BURST, node=node,
+                             flow=50 + node, size=p.kv_page_bytes,
+                             meta=META_P2P_KV))
+        if f.active(t) and f.kv_heavy:
+            # one flow per node repeatedly migrates big KV slabs, hogging
+            # the link while the regular page streams starve
+            self._emit(Event(ts=t + 0.55 * p.decode_step,
+                             kind=EventKind.P2P_BURST, node=node,
+                             flow=node * 1000,
+                             size=192 * p.kv_page_bytes, meta=META_P2P_KV))
+
+    def _credits(self, t: float) -> None:
+        p, f = self.p, self.fault
+        if t < self._next_credit:
+            return
+        self._next_credit = t + p.credit_every
+        for node in range(p.n_nodes):
+            if f.active(t) and f.credit_starve:
+                # credits trickle in rarely and empty
+                if self.rng.random() < 0.1:
+                    self._emit(Event(ts=t, kind=EventKind.CREDIT_UPDATE,
+                                     node=node, depth=0))
+            else:
+                self._emit(Event(ts=t, kind=EventKind.CREDIT_UPDATE,
+                                 node=node, depth=32))
+
+
+def run_scenario(fault: FaultSpec,
+                 params: SimParams | None = None,
+                 workload: WorkloadSpec | None = None,
+                 mitigate: bool = False,
+                 tables: tuple[str, ...] = ("3a", "3b", "3c"),
+                 ) -> tuple[SimMetrics, TelemetryPlane, ClusterSim]:
+    """Run one fault scenario with the full telemetry plane attached."""
+    import dataclasses
+    params = params or SimParams()
+    workload = workload or WorkloadSpec()
+    # arrivals must span the whole sim: a workload that simply *ends* is
+    # indistinguishable from ingress starvation at the DPU vantage point
+    workload = dataclasses.replace(workload, duration=params.duration * 0.98)
+    plane = TelemetryPlane(n_nodes=params.n_nodes, mitigate=mitigate)
+    sim = ClusterSim(params, workload, fault, plane)
+    if mitigate and plane.controller is not None:
+        plane.controller.engine = sim
+    metrics = sim.run()
+    return metrics, plane, sim

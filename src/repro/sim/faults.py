@@ -1,0 +1,128 @@
+"""Fault injectors — one scenario per runbook row.
+
+``SCENARIOS`` maps scenario name (as referenced by
+``runbooks.RunbookEntry.scenario``) to a factory returning the
+``FaultSpec`` + any workload override that realizes that row's pathology.
+The registry is complete by construction: a test asserts every runbook row's
+scenario exists here.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.sim.cluster import FaultSpec, SimParams
+from repro.sim.workload import WorkloadSpec
+
+
+@dataclass
+class Scenario:
+    name: str
+    row_id: str                    # runbook row this validates
+    fault: FaultSpec
+    workload: WorkloadSpec = field(default_factory=lambda: WorkloadSpec())
+    params: SimParams = field(default_factory=lambda: SimParams())
+
+
+def _wl(**kw) -> WorkloadSpec:
+    base = dict(rate=260.0, duration=1.8, decode_mean=48, seed=7)
+    base.update(kw)
+    return WorkloadSpec(**base)
+
+
+def _pm(**kw) -> SimParams:
+    base = dict(duration=2.0, seed=3)
+    base.update(kw)
+    return SimParams(**base)
+
+
+def make_scenarios() -> dict[str, Scenario]:
+    s: dict[str, Scenario] = {}
+
+    def add(name: str, row_id: str, fault: FaultSpec,
+            workload: WorkloadSpec | None = None,
+            params: SimParams | None = None) -> None:
+        fault.name = name
+        fault.row_id = row_id
+        s[name] = Scenario(name=name, row_id=row_id, fault=fault,
+                           workload=workload or _wl(),
+                           params=params or _pm())
+
+    # ---------------- Table 3(a) ----------------
+    add("burst_admission", "burst_admission_backlog",
+        FaultSpec(start=0.8),
+        workload=_wl(burst_factor=24.0, burst_start=0.8, rate=260.0))
+    add("ingress_starvation", "ingress_starvation",
+        FaultSpec(ingress_starve_node=1))
+    add("flow_skew", "flow_skew_across_sessions",
+        FaultSpec(start=0.0),
+        workload=_wl(flow_skew=1.5))
+    add("ingress_retransmit", "ingress_drop_retransmit",
+        FaultSpec(ingress_retx_p=0.25))
+    add("egress_backlog", "egress_backlog_queueing",
+        FaultSpec(egress_backlog_rate=3.0))
+    add("egress_jitter", "egress_jitter",
+        FaultSpec(egress_jitter_mult=30.0))
+    add("egress_retransmit", "egress_drop_retransmit",
+        FaultSpec(egress_retx_p=0.2))
+    add("early_completion", "early_completion_skew",
+        FaultSpec(start=0.0, early_stop_skew=True),
+        workload=_wl(decode_cv=0.1, rate=200.0),
+        params=_pm(duration=2.5, continuous_batching=False))
+    add("nic_saturation", "ingress_egress_bandwidth_saturation",
+        FaultSpec(nic_background_frac=1.1, egress_backlog_rate=1.5))
+
+    # ---------------- Table 3(b) ----------------
+    add("h2d_starvation", "h2d_data_starvation",
+        FaultSpec(h2d_stall_node=2, h2d_stall_mult=24.0))
+    add("d2h_bottleneck", "d2h_return_bottleneck",
+        FaultSpec(d2h_delay_mult=14.0, dispatch_jitter_mult=1.0))
+    add("launch_latency", "kernel_launch_control_latency",
+        FaultSpec(dispatch_jitter_mult=40.0, dispatch_delay=4e-3))
+    add("intra_node_skew", "intra_node_gpu_skew",
+        FaultSpec(start=0.0, skew_device=(1, 2), skew_factor=0.08))
+    add("pcie_saturation", "pcie_link_saturation",
+        FaultSpec(pcie_background_frac=1.3))
+    add("p2p_throttling", "gpu_p2p_throttling",
+        FaultSpec(p2p_slow_node=3))
+    add("pinned_shortage", "pinned_memory_shortage",
+        FaultSpec(h2d_split=12))
+    add("host_cpu_bottleneck", "host_cpu_bottleneck",
+        FaultSpec(host_slow_node=0))
+    add("registration_churn", "memory_registration_churn",
+        FaultSpec(reg_churn=True))
+    add("decode_early_stop", "decode_early_stop_skew",
+        FaultSpec(start=0.0, early_stop_skew=True, node_stop=-1),
+        workload=_wl(decode_cv=0.05),
+        params=_pm(duration=2.5, continuous_batching=False))
+
+    # ---------------- Table 3(c) ----------------
+    add("tp_straggler", "tp_straggler",
+        FaultSpec(straggler_node=2, straggler_delay=1.2e-3))
+    add("pp_bubble", "pp_bubble_stage_stall",
+        FaultSpec(stage_gap_growth=1.2e-4))
+    add("cross_node_skew", "cross_node_load_skew",
+        FaultSpec(start=0.0, collective_bytes_node=1,
+                  collective_bytes_mult=6.0))
+    add("network_congestion", "network_congestion_oversubscription",
+        FaultSpec(fabric_jitter=2.5e-3))
+    add("hol_blocking", "head_of_line_blocking",
+        FaultSpec(hol_stall_frac=0.3))
+    add("ew_retransmit", "retransmissions_packet_loss",
+        FaultSpec(ew_retx_p=0.3))
+    add("credit_starvation", "credit_starvation",
+        FaultSpec(credit_starve=True))
+    add("kv_bottleneck", "kv_cache_transfer_bottleneck",
+        FaultSpec(kv_heavy=True))
+    add("node_early_stop", "early_stop_skew_across_nodes",
+        FaultSpec(node_stop=3, node_stop_at=1.2),
+        params=_pm(duration=2.6))
+
+    # healthy baseline (false-positive budget measurement)
+    s["healthy"] = Scenario(name="healthy", row_id="",
+                            fault=FaultSpec(start=1e9),
+                            workload=_wl(), params=_pm())
+    return s
+
+
+SCENARIOS: dict[str, Scenario] = make_scenarios()

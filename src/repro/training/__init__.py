@@ -1,0 +1,6 @@
+"""Training substrate: AdamW, microbatched trainer with checkpoint/restart,
+elastic remeshing, gradient compression."""
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.training.train_loop import TrainConfig, Trainer
+__all__ = ["AdamWConfig", "TrainConfig", "Trainer", "adamw_init",
+           "adamw_update"]

@@ -1,0 +1,56 @@
+"""Elastic scaling / node-failure handling.
+
+Policy for a 1000+-node deployment (documented + mechanically tested at
+small scale):
+
+  1. A node failure surfaces as a collective timeout (or, earlier, as the
+     telemetry plane's 'early_stop_skew_across_nodes' / 'tp_straggler'
+     findings — the paper's detectors give ADVANCE warning of degrading
+     nodes before hard failure).
+  2. The coordinator drops the failed hosts, rebuilds the mesh with a
+     smaller DP extent (TP degree is preserved — it's the intra-pod axis),
+     and reshards the latest checkpoint onto the new mesh.
+  3. Global batch is preserved by raising grad-accumulation microbatches
+     (token-identical training) or shrunk deliberately (throughput mode).
+
+``remesh`` implements step 2's mechanics: checkpoint -> new mesh ->
+device_put with the new shardings.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+
+from repro.parallel.sharding import MeshRules
+
+
+@dataclass
+class RemeshPlan:
+    old_shape: dict
+    new_shape: dict
+    dp_scale: float           # new/old data-parallel extent
+    micro_scale: int          # grad-accum multiplier to keep global batch
+
+
+def plan_remesh(old_mesh, failed_nodes: int, hosts_per_data: int = 1
+                ) -> RemeshPlan:
+    """Drop failed hosts from the 'data' axis; keep 'model' intact."""
+    old = dict(old_mesh.shape)
+    new = dict(old)
+    lost = failed_nodes * hosts_per_data
+    if old["data"] - lost < 1:
+        raise ValueError("not enough healthy hosts to continue")
+    new["data"] = old["data"] - lost
+    dp_scale = new["data"] / old["data"]
+    micro_scale = -(-old["data"] // new["data"])   # ceil
+    return RemeshPlan(old, new, dp_scale, micro_scale)
+
+
+def remesh(state, old_rules: MeshRules, new_mesh,
+           fsdp: bool = True):
+    """Reshard a (params/opt) pytree onto a new, smaller mesh."""
+    new_rules = MeshRules(new_mesh, fsdp=fsdp)
+    shardings = new_rules.shardings_of(new_rules.param_specs(state))
+    return jax.tree.map(jax.device_put, state, shardings), new_rules

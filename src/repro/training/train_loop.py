@@ -1,0 +1,156 @@
+"""Trainer: microbatched train step (remat + optional compressed gradient
+accumulation), checkpoint/restart fault tolerance, step-time telemetry with
+straggler accounting, and the mitigation actuation surface.
+
+The same Trainer drives the CPU smoke tests (reduced config, 1 device) and
+the production mesh (sharded via MeshRules) — scale is a config, not a code
+path.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.events import Event, EventKind
+from repro.core.sketch import EWMA
+from repro.core.telemetry import TelemetryPlane
+from repro.models import Model
+from repro.parallel.collectives import accumulate_grads, init_error_buf
+from repro.training import checkpoint as ckpt
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 50
+    n_micro: int = 1
+    compress_grads: bool = False
+    ckpt_dir: str = ""
+    ckpt_every: int = 25
+    ckpt_keep: int = 3
+    log_every: int = 10
+    node: int = 0
+    optimizer: AdamWConfig = field(default_factory=AdamWConfig)
+
+
+class Trainer:
+    def __init__(self, model: Model, params, tcfg: TrainConfig,
+                 shard=None, plane: TelemetryPlane | None = None) -> None:
+        self.model = model
+        self.tcfg = tcfg
+        self.plane = plane
+        self.shard = shard
+        self.params = params
+        self.opt_state = adamw_init(params)
+        if tcfg.compress_grads:
+            self.opt_state["error_buf"] = init_error_buf(params)
+        self.step = 0
+        self.step_time = EWMA(0.1)
+        self.history: list[dict] = []
+        self._jit_step = jax.jit(self._train_step, donate_argnums=(0, 1))
+        if self.plane is not None and self.plane.controller is not None:
+            self.plane.controller.engine = self
+
+    # ------------------------------------------------------------------
+
+    def _loss(self, params, batch):
+        if self.shard is not None:
+            return self.model.loss(params, batch, shard=self.shard)
+        return self.model.loss(params, batch)
+
+    def _train_step(self, params, opt_state, micro_batches):
+        ebuf = opt_state.get("error_buf")
+        loss, grads, new_ebuf = accumulate_grads(
+            self._loss, params, micro_batches,
+            compress=self.tcfg.compress_grads, error_buf=ebuf)
+        params, opt_state2, metrics = adamw_update(
+            self.tcfg.optimizer, grads,
+            {k: opt_state[k] for k in ("m", "v", "step")}, params)
+        if ebuf is not None:
+            opt_state2["error_buf"] = new_ebuf
+        return params, opt_state2, loss, metrics
+
+    # ------------------------------------------------------------------
+    # EngineControls (mitigation surface for training-side findings)
+    # ------------------------------------------------------------------
+
+    def apply_action(self, action: str, node: int, detail: dict) -> bool:
+        if action in ("rebalance_microbatches", "rebalance_shards",
+                      "repartition_stages", "batch_launches",
+                      "isolate_host_threads", "pin_and_coalesce"):
+            return True   # accounting hook; resharding is a restart-level op
+        return False
+
+    # ------------------------------------------------------------------
+
+    def _emit(self, kind: EventKind, ts: float, **kw) -> None:
+        if self.plane is not None:
+            self.plane.observe(Event(ts=ts, kind=kind, node=self.tcfg.node,
+                                     **kw))
+
+    def maybe_restore(self) -> bool:
+        """Checkpoint/restart: resume from the latest checkpoint if any."""
+        if not self.tcfg.ckpt_dir:
+            return False
+        last = ckpt.latest_step(self.tcfg.ckpt_dir)
+        if last is None:
+            return False
+        state = {"params": self.params, "opt": self.opt_state}
+        state = ckpt.restore(self.tcfg.ckpt_dir, last, state)
+        self.params = state["params"]
+        self.opt_state = state["opt"]
+        self.step = last
+        return True
+
+    def save(self) -> None:
+        if self.tcfg.ckpt_dir:
+            ckpt.save(self.tcfg.ckpt_dir, self.step,
+                      {"params": self.params, "opt": self.opt_state},
+                      keep=self.tcfg.ckpt_keep)
+
+    def run(self, batches, crash_at: int | None = None) -> list[dict]:
+        """Train over an iterable of batches; ``crash_at`` injects a
+        simulated failure after N steps (fault-tolerance tests)."""
+        t0 = time.perf_counter()
+        for batch in batches:
+            if self.step >= self.tcfg.steps:
+                break
+            mb = self._microbatch(batch)
+            ts = time.perf_counter() - t0
+            self._emit(EventKind.H2D_XFER, ts, device=0,
+                       size=int(sum(np.asarray(x).nbytes
+                                    for x in jax.tree.leaves(batch))))
+            self._emit(EventKind.DISPATCH, ts, device=0)
+            st = time.perf_counter()
+            self.params, self.opt_state, loss, metrics = self._jit_step(
+                self.params, self.opt_state, mb)
+            loss = float(loss)
+            dt = time.perf_counter() - st
+            self.step_time.update(dt)
+            ts = time.perf_counter() - t0
+            self._emit(EventKind.D2H_XFER, ts, device=0, size=8)
+            rec = {"step": self.step, "loss": loss, "sec": dt,
+                   "grad_norm": float(metrics["grad_norm"]),
+                   "lr": float(metrics["lr"]),
+                   "straggler_z": self.step_time.zscore(dt)}
+            self.history.append(rec)
+            self.step += 1
+            if self.step % self.tcfg.ckpt_every == 0:
+                self.save()
+            if crash_at is not None and self.step >= crash_at:
+                raise RuntimeError("injected failure")
+        self.save()
+        return self.history
+
+    def _microbatch(self, batch):
+        n = self.tcfg.n_micro
+
+        def split(x):
+            b = x.shape[0]
+            return x.reshape(n, b // n, *x.shape[1:])
+        return jax.tree.map(split, batch)

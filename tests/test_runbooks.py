@@ -1,0 +1,152 @@
+"""Per-row validation of the paper's Tables 3(a)/(b)/(c): every runbook row
+has a registered detector, a fault-injection scenario, and the detector
+fires on its scenario while the healthy baseline stays silent.
+
+This is the reproduction's core experiment (the paper itself is
+qualitative; we make each row executable and falsifiable).
+"""
+
+import pytest
+
+from repro.core import (
+    ALL_DETECTORS,
+    ALL_RUNBOOKS,
+    BY_TABLE,
+    ACTIONS,
+    DetectorConfig,
+    build_detectors,
+)
+from repro.core.events import (
+    EAST_WEST,
+    FORBIDDEN_OBSERVABLES,
+    NORTH_SOUTH,
+    PCIE,
+    EventKind,
+)
+from repro.sim import SCENARIOS, run_scenario
+
+
+class TestRegistry:
+    def test_28_rows(self):
+        assert len(ALL_RUNBOOKS) == 28
+        assert len(BY_TABLE["3a"]) == 9
+        assert len(BY_TABLE["3b"]) == 10
+        assert len(BY_TABLE["3c"]) == 9
+
+    def test_one_detector_per_row(self):
+        dets = build_detectors()
+        assert len(dets) == 28
+        for entry in ALL_RUNBOOKS:
+            assert entry.row_id in dets
+            assert dets[entry.row_id].name == entry.row_id
+            assert dets[entry.row_id].table == entry.table
+
+    def test_every_row_has_scenario(self):
+        for entry in ALL_RUNBOOKS:
+            assert entry.scenario in SCENARIOS, entry.row_id
+            assert SCENARIOS[entry.scenario].row_id == entry.row_id
+
+    def test_every_row_has_action(self):
+        for entry in ALL_RUNBOOKS:
+            assert entry.action in ACTIONS, entry.row_id
+
+    def test_detector_count_matches(self):
+        assert len(ALL_DETECTORS) == 28
+
+
+class TestObservabilityBoundary:
+    """Paper §4.3: the DPU cannot see intra-device compute — enforce it."""
+
+    def test_event_kinds_partition_into_three_vantages(self):
+        all_kinds = set(EventKind)
+        assert NORTH_SOUTH | PCIE | EAST_WEST == all_kinds
+        assert not (NORTH_SOUTH & PCIE)
+        assert not (PCIE & EAST_WEST)
+
+    def test_no_intra_device_observables(self):
+        import inspect
+        from repro.core import events
+        src = inspect.getsource(events).lower()
+        for bad in FORBIDDEN_OBSERVABLES:
+            # the names may appear only in the FORBIDDEN list itself
+            occurrences = src.count(f'"{bad}"') + src.count(f"'{bad}'")
+            assert src.count(bad) <= occurrences + 1, bad
+
+    def test_detectors_only_consume_dpu_events(self):
+        for det_cls in ALL_DETECTORS:
+            for kind in det_cls.interested:
+                assert isinstance(kind, EventKind)
+
+
+@pytest.mark.slow
+class TestPerRowDetection:
+    """Inject each fault; assert its detector fires (28 scenarios)."""
+
+    @pytest.mark.parametrize(
+        "name", [s for s in SCENARIOS if s != "healthy"])
+    def test_scenario_detected(self, name):
+        sc = SCENARIOS[name]
+        metrics, plane, sim = run_scenario(sc.fault, sc.params, sc.workload)
+        fired = {f.name for f in plane.findings}
+        assert sc.row_id in fired, (
+            f"{name}: expected {sc.row_id}, fired {sorted(fired)}")
+
+    def test_healthy_zero_false_positives(self):
+        sc = SCENARIOS["healthy"]
+        metrics, plane, sim = run_scenario(sc.fault, sc.params, sc.workload)
+        assert {f.name for f in plane.findings} == set()
+
+
+class TestAttribution:
+    def test_host_symptom_localizes_host_side(self):
+        sc = SCENARIOS["host_cpu_bottleneck"]
+        _, plane, _ = run_scenario(sc.fault, sc.params, sc.workload)
+        loci = {a.locus for a in plane.attributions}
+        # §4.2: E-W straggler symptom must NOT be blamed on the network
+        assert "internode_network" not in loci
+        assert loci & {"host_cpu", "pcie_transfer", "device_scheduling"}
+
+    def test_egress_stall_with_healthy_pcie_is_network_side(self):
+        sc = SCENARIOS["egress_backlog"]
+        _, plane, _ = run_scenario(sc.fault, sc.params, sc.workload)
+        prim = [a for a in plane.attributions
+                if a.primary.name == "egress_backlog_queueing"]
+        assert prim and all(a.locus == "egress_path" for a in prim)
+
+    def test_early_stop_is_workload_locus(self):
+        sc = SCENARIOS["early_completion"]
+        _, plane, _ = run_scenario(sc.fault, sc.params, sc.workload)
+        prim = [a for a in plane.attributions
+                if a.primary.name == "early_completion_skew"]
+        assert prim and all(a.locus == "workload_shape" for a in prim)
+
+
+class TestMitigationClosedLoop:
+    def test_early_completion_mitigation_improves_throughput(self):
+        import dataclasses
+        sc = SCENARIOS["early_completion"]
+        off, _, _ = run_scenario(dataclasses.replace(sc.fault),
+                                 sc.params, sc.workload, mitigate=False)
+        on, plane, _ = run_scenario(dataclasses.replace(sc.fault),
+                                    sc.params, sc.workload, mitigate=True)
+        assert plane.actions, "controller issued no actions"
+        t_off = off.throughput(sc.params.duration)
+        t_on = on.throughput(sc.params.duration)
+        assert t_on > 1.5 * t_off
+        assert on.idle_frac() < off.idle_frac()
+
+    def test_hysteresis_requires_confirmation(self):
+        from repro.core.mitigation import MitigationController, NullEngine
+        from repro.core.attribution import Attribution
+        from repro.core.detectors import Finding
+        eng = NullEngine()
+        ctl = MitigationController(eng, confirmations=2)
+        f = Finding(name="tp_straggler", table="3c", ts=1.0,
+                    severity="warn", node=1, device=-1, stage="s",
+                    root_cause="r", directive="d", score=5.0)
+        a = Attribution(ts=1.0, locus="device_scheduling", node=1,
+                        confidence=0.9, primary=f, supporting=(),
+                        narrative="n")
+        assert ctl.consider(a) is None          # first sighting: hold
+        assert ctl.consider(a) is not None      # confirmed: actuate
+        assert eng.calls

@@ -1,0 +1,203 @@
+"""Property-based tests for the line-rate streaming sketches."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sketch import (
+    EWMA,
+    BurstMeter,
+    CUSUM,
+    GapTracker,
+    P2Quantile,
+    RateMeter,
+    SpreadTracker,
+    Welford,
+)
+
+finite = st.floats(min_value=-1e6, max_value=1e6,
+                   allow_nan=False, allow_infinity=False)
+positive = st.floats(min_value=1e-3, max_value=1e6,
+                     allow_nan=False, allow_infinity=False)
+
+
+class TestEWMA:
+    @given(st.lists(finite, min_size=1, max_size=200))
+    def test_mean_within_range(self, xs):
+        ew = EWMA(0.1)
+        for x in xs:
+            ew.update(x)
+        assert min(xs) - 1e-6 <= ew.mean <= max(xs) + 1e-6
+
+    @given(finite)
+    def test_constant_stream_zero_variance(self, c):
+        ew = EWMA(0.2)
+        for _ in range(50):
+            ew.update(c)
+        assert ew.std <= max(abs(c) * 1e-5, 1e-6)
+        assert ew.zscore(c) == pytest.approx(0.0, abs=1e-3)
+
+    def test_converges_to_level_shift(self):
+        ew = EWMA(0.1)
+        for _ in range(100):
+            ew.update(1.0)
+        for _ in range(200):
+            ew.update(5.0)
+        assert abs(ew.mean - 5.0) < 0.1
+
+    def test_invalid_alpha(self):
+        with pytest.raises(ValueError):
+            EWMA(0.0)
+
+
+class TestP2Quantile:
+    @given(st.lists(st.floats(min_value=0, max_value=1000,
+                              allow_nan=False), min_size=20, max_size=500),
+           st.sampled_from([0.5, 0.9, 0.99]))
+    @settings(max_examples=50, deadline=None)
+    def test_within_sample_range(self, xs, q):
+        p2 = P2Quantile(q)
+        for x in xs:
+            p2.update(x)
+        assert min(xs) - 1e-9 <= p2.value <= max(xs) + 1e-9
+
+    def test_median_of_uniform(self):
+        import random
+        rng = random.Random(0)
+        p2 = P2Quantile(0.5)
+        for _ in range(5000):
+            p2.update(rng.random())
+        assert abs(p2.value - 0.5) < 0.05
+
+    def test_p99_of_uniform(self):
+        import random
+        rng = random.Random(1)
+        p2 = P2Quantile(0.99)
+        for _ in range(5000):
+            p2.update(rng.random())
+        assert abs(p2.value - 0.99) < 0.05
+
+    def test_small_sample_exact(self):
+        p2 = P2Quantile(0.5)
+        for x in [3.0, 1.0, 2.0]:
+            p2.update(x)
+        assert p2.value == 2.0
+
+
+class TestCUSUM:
+    def test_no_fire_on_stationary(self):
+        import random
+        rng = random.Random(2)
+        cs = CUSUM(slack=0.5, threshold=5.0)
+        fired = False
+        for _ in range(500):
+            fired |= cs.update(rng.gauss(10.0, 1.0))
+        assert not fired
+
+    def test_fires_on_level_shift(self):
+        import random
+        rng = random.Random(3)
+        cs = CUSUM(slack=0.5, threshold=5.0)
+        for _ in range(100):
+            cs.update(rng.gauss(10.0, 1.0))
+        fired = False
+        for _ in range(50):
+            fired |= cs.update(rng.gauss(20.0, 1.0))
+        assert fired
+
+    def test_constant_stream_stable(self):
+        # rel_slack guards the std->0 degeneracy
+        cs = CUSUM()
+        fired = False
+        for i in range(300):
+            fired |= cs.update(5.0 + 1e-9 * (i % 2))
+        assert not fired
+
+
+class TestGapTracker:
+    @given(st.lists(positive, min_size=2, max_size=100))
+    def test_gap_stats_nonnegative(self, gaps):
+        gt = GapTracker()
+        t = 0.0
+        for g in gaps:
+            t += g
+            gt.update(t)
+        assert gt.gaps.mean > 0
+        assert gt.max_gap >= gt.gaps.mean - 1e-9
+        assert gt.jitter() >= 0
+
+    def test_constant_cadence_low_jitter(self):
+        gt = GapTracker()
+        for i in range(100):
+            gt.update(i * 0.01)
+        assert gt.jitter() < 0.05
+
+    def test_open_gap(self):
+        gt = GapTracker()
+        gt.update(1.0)
+        gt.update(2.0)
+        assert gt.current_gap(10.0) == pytest.approx(8.0)
+
+
+class TestSpreadTracker:
+    def test_dominant_straggler_identified(self):
+        st_ = SpreadTracker(expected=4)
+        for r in range(50):
+            for node in range(4):
+                ts = r * 1.0 + (0.5 if node == 2 else 0.01 * node)
+                st_.update(r, node, ts)
+        worst, frac = st_.dominant_straggler()
+        assert worst == 2
+        assert frac > 0.9
+
+    def test_balanced_no_dominant(self):
+        import random
+        rng = random.Random(4)
+        st_ = SpreadTracker(expected=4)
+        for r in range(200):
+            for node in range(4):
+                st_.update(r, node, r * 1.0 + rng.random() * 0.01)
+        _, frac = st_.dominant_straggler()
+        assert frac < 0.5
+
+
+class TestRateMeter:
+    def test_steady_rate(self):
+        rm = RateMeter(halflife=0.5)
+        for i in range(1, 2000):
+            rm.update(i * 0.001, 100)
+        assert rm.rate == pytest.approx(1000.0, rel=0.1)
+        assert rm.byte_rate == pytest.approx(100_000.0, rel=0.1)
+
+    def test_rate_at_decays(self):
+        rm = RateMeter(halflife=0.1)
+        for i in range(1, 100):
+            rm.update(i * 0.001, 100)
+        assert rm.rate_at(0.099 + 1.0) < 0.01 * rm.rate
+
+
+class TestBurstMeter:
+    def test_burst_detected(self):
+        bm = BurstMeter()
+        t = 0.0
+        for _ in range(200):        # steady background
+            t += 0.01
+            bm.update(t, 1000)
+        for _ in range(50):         # sudden microburst
+            t += 1e-5
+            bm.update(t, 1000)
+        assert bm.byte_burstiness() > 10.0
+
+
+class TestWelford:
+    @given(st.lists(finite, min_size=2, max_size=200))
+    def test_matches_numpy(self, xs):
+        import numpy as np
+        w = Welford()
+        for x in xs:
+            w.update(x)
+        assert w.mean == pytest.approx(float(np.mean(xs)), rel=1e-6,
+                                       abs=1e-6)
+        assert w.var == pytest.approx(float(np.var(xs, ddof=0)), rel=1e-4,
+                                      abs=1e-4)
