@@ -60,13 +60,14 @@ def table1_archzoo() -> list[tuple]:
 
 
 def table2_signals() -> list[tuple]:
-    """Telemetry plane overhead: ns/event with all 28 detectors live."""
+    """Telemetry plane overhead: ns/event with the full detector set live."""
     import random
-    from repro.core import TelemetryPlane
+    from repro.core import ALL_DETECTORS, TelemetryPlane
     from repro.core.events import Event, EventKind
     rows = []
     for tables, label in ((("3a",), "ns_table3a"),
-                          (("3a", "3b", "3c"), "full_28_detectors")):
+                          (("3a", "3b", "3c", "3d"),
+                           f"full_{len(ALL_DETECTORS)}_detectors")):
         plane = TelemetryPlane(n_nodes=4, mitigate=False, tables=tables)
         rng = random.Random(0)
         kinds = [EventKind.INGRESS_PKT, EventKind.EGRESS_PKT,
@@ -127,11 +128,43 @@ def table3c() -> list[tuple]:
     return _table3("3c")
 
 
+def table3d() -> list[tuple]:
+    return _table3("3d")
+
+
+def router_policies() -> list[tuple]:
+    """Cross-replica router: policies vs throughput / TTFT under a bursty,
+    flow-skewed workload (4 single-node DP replicas, no injected fault —
+    the policy itself is the variable)."""
+    from repro.sim import FaultSpec, SimParams, WorkloadSpec, run_scenario
+    from repro.serving.router import POLICIES
+    rows = []
+    dur = 4.0
+    wl = WorkloadSpec(rate=65.0, duration=dur - 0.1, decode_mean=48,
+                      decode_cv=0.6, burst_factor=8.0, flow_skew=1.2,
+                      seed=42)
+    for policy in POLICIES:
+        params = SimParams(n_nodes=4, n_replicas=4, router_policy=policy,
+                           duration=dur, seed=3)
+        t0 = time.perf_counter()
+        m, _, sim = run_scenario(FaultSpec(start=1e9), params, wl,
+                                 mitigate=False)
+        wall = (time.perf_counter() - t0) * 1e6
+        rows.append((
+            f"router/{policy}", wall,
+            f"tput={m.throughput(dur):.0f};completed={m.completed};"
+            f"p50_ttft_ms={m.p_ttft(0.5) * 1e3:.1f};"
+            f"p99_ttft_ms={m.p_ttft(0.99) * 1e3:.1f};"
+            f"p99_latency_s={m.p(0.99):.3f};"
+            f"routed_imbalance={sim.router.imbalance():.2f}"))
+    return rows
+
+
 def mitigation_loop() -> list[tuple]:
     """§5 closed loop: detection -> attribution -> actuation benefit."""
     from repro.sim import SCENARIOS, run_scenario
     rows = []
-    for name in ("early_completion", "decode_early_stop"):
+    for name in ("early_completion", "decode_early_stop", "hot_replica"):
         sc = SCENARIOS[name]
         off, _, _ = run_scenario(dataclasses.replace(sc.fault), sc.params,
                                  sc.workload, mitigate=False)
@@ -241,6 +274,7 @@ def roofline_readout() -> list[tuple]:
 
 
 ALL_TABLES = [
-    table1_archzoo, table2_signals, table3a, table3b, table3c,
-    mitigation_loop, serving_engine, kernels_bench, roofline_readout,
+    table1_archzoo, table2_signals, table3a, table3b, table3c, table3d,
+    router_policies, mitigation_loop, serving_engine, kernels_bench,
+    roofline_readout,
 ]

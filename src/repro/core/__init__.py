@@ -4,7 +4,8 @@ attribution, and mitigation plane for distributed LLM inference/training.
 Public surface:
   events       — DPU-observable event schema (the §4.3 boundary, enforced)
   sketch       — O(1) streaming statistics (line-rate processing)
-  detectors    — 28 executable detectors, one per runbook row
+  detectors    — 29 executable detectors, one per runbook row
+                 (the paper's 28 + the 3d data-parallel routing extension)
   runbooks     — Tables 3(a)/(b)/(c) as a declarative registry
   attribution  — §4.2 cross-vantage root-cause attribution
   mitigation   — §5 closed-loop controller

@@ -31,6 +31,7 @@ LOCUS_DEVICE = "device_scheduling"      # per-device load imbalance
 LOCUS_NETWORK = "internode_network"     # E-W fabric
 LOCUS_EGRESS = "egress_path"            # NIC -> client
 LOCUS_WORKLOAD = "workload_shape"       # seq-length variance, early stop
+LOCUS_ROUTER = "router_dispatch"        # DP-replica routing layer
 LOCUS_UNKNOWN = "unknown"
 
 #: finding name -> the locus that finding is *direct* evidence for
@@ -66,6 +67,8 @@ DIRECT_LOCUS: dict[str, str] = {
     "credit_starvation": LOCUS_NETWORK,
     "kv_cache_transfer_bottleneck": LOCUS_NETWORK,
     "early_stop_skew_across_nodes": LOCUS_WORKLOAD,
+    # 3d
+    "cross_replica_skew": LOCUS_ROUTER,
 }
 
 
@@ -229,6 +232,29 @@ class Attributor:
                 narrative=(
                     "Early-stop skew: sequence-length variance leaves shards "
                     "idle; mitigation is scheduler-side (inflight remap)."))
+
+        # Rule 5: cross-replica skew — if ingress itself is pathological the
+        # imbalance is upstream; with clean ingress it is the router's doing
+        # (bad policy, stale view, or a degraded replica the router keeps
+        # feeding).
+        if f.name == "cross_replica_skew":
+            upstream = self._within(f, {
+                "ingress_starvation", "flow_skew_across_sessions",
+                "burst_admission_backlog"})
+            if upstream:
+                return Attribution(
+                    f.ts, LOCUS_INGRESS, node=f.node, confidence=0.8,
+                    primary=f, supporting=tuple(upstream),
+                    narrative=(
+                        f"Replica skew co-occurs with '{upstream[0].name}': "
+                        "the imbalance originates upstream of the router."))
+            return Attribution(
+                f.ts, LOCUS_ROUTER, node=f.node, confidence=0.85, primary=f,
+                supporting=(),
+                narrative=(
+                    "Ingress healthy but per-replica egress rates diverge "
+                    f"and replica {f.node}'s queue grows: the DP routing "
+                    "layer is concentrating load (policy/staleness/affinity)."))
 
         # Fallback: direct single-vantage mapping.
         locus = DIRECT_LOCUS.get(f.name, LOCUS_UNKNOWN)

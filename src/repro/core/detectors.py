@@ -44,6 +44,7 @@ META_FIN = 1             # EGRESS_PKT meta flag: final packet of flow
 META_P2P_INTRA = 0       # P2P_BURST inside one node (PCIe peer path)
 META_P2P_INTER = 1       # P2P_BURST between nodes (PP handoff)
 META_P2P_KV = 2          # P2P_BURST carrying KV-cache pages
+META_KV_OCC = 3          # QUEUE_SAMPLE carrying KV-occupancy (% of pool)
 
 
 @dataclass(frozen=True)
@@ -51,7 +52,7 @@ class Finding:
     """One detected pathological condition (a runbook row firing)."""
 
     name: str              # runbook row id, e.g. "tp_straggler"
-    table: str             # "3a" | "3b" | "3c"
+    table: str             # "3a" | "3b" | "3c" | "3d"
     ts: float
     severity: str          # "warn" | "critical"
     node: int              # locus node (-1 = cluster-wide)
@@ -1344,6 +1345,90 @@ class EarlyStopSkewAcrossNodes(Detector):
         return out
 
 
+# ======================================================================
+# Table 3(d) — Data-parallel replica runbook (cross-replica router view)
+# ======================================================================
+
+
+class CrossReplicaSkew(Detector):
+    """3d.1 — per-replica EGRESS-rate divergence + queue-depth imbalance.
+
+    The DP-layer pathology: a router policy (or the affinity/staleness
+    defeating it) concentrates load on a subset of replicas.  From the DPU
+    vantage this is per-replica egress token rates drifting apart while the
+    hot replica's ingress queue grows and its peers' queues drain — both
+    signals the NIC-side observer already exports.  Node-level detectors
+    cannot see it: each node looks locally healthy, just unevenly busy.
+    """
+
+    name = "cross_replica_skew"
+    table = "3d"
+    stage = "ingress routing -> decode (data-parallel replicas)"
+    root_cause = "router policy imbalance / stale router view / degraded replica"
+    directive = "rebalance replicas; refresh router view; drain hot replica"
+    interested = frozenset({EventKind.EGRESS_PKT, EventKind.QUEUE_SAMPLE})
+
+    PERSIST = 2          # consecutive skewed polls before firing
+    MIN_QUEUE_GAP = 8    # absolute hot-vs-mean queue depth floor
+    MIN_CONC_TOTAL = 32  # backlog floor for the concentration signal
+    CONC_FRAC = 0.6      # one replica holds this share of the total backlog
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        self.egress: dict[int, RateMeter] = {}       # replica -> token rate
+        self.depth: dict[int, dict[int, int]] = {}   # replica -> node -> depth
+        self.streak = 0
+
+    def update(self, ev: Event) -> None:
+        if ev.replica < 0:
+            return
+        self.events_seen += 1
+        if ev.kind == EventKind.EGRESS_PKT:
+            self.egress.setdefault(
+                ev.replica, RateMeter(halflife=0.15)).update(ev.ts, ev.size)
+        elif ev.meta == META_DIR_INGRESS:
+            self.depth.setdefault(ev.replica, {})[ev.node] = ev.depth
+
+    def poll(self, now: float) -> list[Finding]:
+        if self.events_seen < self.cfg.min_events or len(self.egress) < 2:
+            return []
+        rates = {r: m.rate_at(now) for r, m in self.egress.items()}
+        w = Welford()
+        for v in rates.values():
+            w.update(v)
+        rate_cv = w.cv()
+        depths = {r: sum(nodes.values())
+                  for r, nodes in self.depth.items()} or {r: 0 for r in rates}
+        for r in rates:
+            depths.setdefault(r, 0)
+        d_total = sum(depths.values())
+        d_mean = d_total / len(depths)
+        d_max = max(depths.values())
+        queue_gap = d_max - d_mean
+        # concentration: one replica holds most of the cluster backlog.
+        # Catches the rotating hot spot a stale router view produces, where
+        # the victim identity changes faster than rate divergence builds.
+        concentrated = (d_total >= self.MIN_CONC_TOTAL
+                        and d_max / d_total > self.CONC_FRAC)
+        skewed = (rate_cv > self.cfg.skew_cv_warn
+                  and queue_gap >= self.MIN_QUEUE_GAP) \
+            or concentrated or rate_cv > 1.5 * self.cfg.skew_cv_crit
+        self.streak = self.streak + 1 if skewed else 0
+        if self.streak < self.PERSIST:
+            return []
+        # the pathological replica: deepest backlog, ties to slowest egress
+        hot = max(depths, key=lambda r: (depths[r], -rates.get(r, 0.0)))
+        sev = ("critical"
+               if rate_cv > self.cfg.skew_cv_crit or concentrated
+               or queue_gap > 3 * self.MIN_QUEUE_GAP else "warn")
+        return [self._mk(
+            now, score=rate_cv * 10 + queue_gap / self.MIN_QUEUE_GAP,
+            node=hot, severity=sev, replica=hot, rate_cv=rate_cv,
+            queue_gap=queue_gap, concentrated=concentrated,
+            egress_rates={r: round(v, 1) for r, v in rates.items()},
+            queue_depths=depths)]
+
+
 ALL_DETECTORS: tuple[type[Detector], ...] = (
     # 3(a)
     BurstAdmissionBacklog, IngressStarvation, FlowSkewAcrossSessions,
@@ -1358,4 +1443,6 @@ ALL_DETECTORS: tuple[type[Detector], ...] = (
     TPStraggler, PPBubble, CrossNodeLoadSkew, NetworkCongestion,
     HeadOfLineBlocking, EWRetransmitStorm, CreditStarvation,
     KVCacheTransferBottleneck, EarlyStopSkewAcrossNodes,
+    # 3(d)
+    CrossReplicaSkew,
 )

@@ -93,6 +93,7 @@ class Event:
     op: int = -1              # CollectiveOp for COLLECTIVE_BURST, -1 otherwise
     group: int = -1           # collective/TP/PP group id
     meta: int = 0             # small free int (e.g. stage id, retry count)
+    replica: int = -1         # data-parallel replica the node belongs to
 
     def vantage(self) -> str:
         if self.kind in NORTH_SOUTH:

@@ -13,12 +13,13 @@ TITLES = {
     "3a": "Table 3(a) — North-South Runbook",
     "3b": "Table 3(b) — PCIe Observer Runbook",
     "3c": "Table 3(c) — East-West Sensing Runbook",
+    "3d": "Table 3(d) — Data-Parallel Replica Runbook (extension)",
 }
 
 
 def render() -> str:
     out = ["# Runbooks (generated from repro.core.runbooks)\n"]
-    for table in ("3a", "3b", "3c"):
+    for table in ("3a", "3b", "3c", "3d"):
         out.append(f"\n## {TITLES[table]}\n")
         out.append("| Skew/Imbalance | Signal (Red Flag) | Lifecycle "
                    "Stages | Likely Root Cause | Mitigation Directives | "

@@ -59,6 +59,8 @@ ACTIONS: dict[str, str] = {
     "qos_partition": "partition queues per traffic class (QoS/ECN)",
     "widen_rdma_window": "increase RDMA QP window / credit budget",
     "compress_kv": "enable KV-cache compression for transfers",
+    "rebalance_replicas": "redistribute queued requests across DP replicas; "
+                          "refresh the router view / break hot affinity",
 }
 
 

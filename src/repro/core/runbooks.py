@@ -22,7 +22,7 @@ from repro.core.detectors import Detector, DetectorConfig
 @dataclass(frozen=True)
 class RunbookEntry:
     row_id: str                 # stable id == Detector.name
-    table: str                  # "3a" | "3b" | "3c"
+    table: str                  # "3a" | "3b" | "3c" | "3d"
     title: str                  # paper's "Skew/Imbalance" column
     signal: str                 # paper's "Signal (Red Flag)" column
     stages: str                 # paper's "Lifecycle Stages Affected"
@@ -307,16 +307,33 @@ RUNBOOK_3C: tuple[RunbookEntry, ...] = (
         scenario="node_early_stop"),
 )
 
-ALL_RUNBOOKS: tuple[RunbookEntry, ...] = RUNBOOK_3A + RUNBOOK_3B + RUNBOOK_3C
+RUNBOOK_3D: tuple[RunbookEntry, ...] = (
+    RunbookEntry(
+        "cross_replica_skew", "3d", "Cross-replica load skew (DP routing)",
+        "Per-replica egress token rates diverge; one replica's ingress "
+        "queue grows while peers drain",
+        "Ingress routing -> decode (data-parallel replicas)",
+        "Hot replica saturates; cold replicas idle; cluster p99 TTFT "
+        "inflates while aggregate utilization looks normal",
+        "Router policy imbalance (static round-robin under skewed flows), "
+        "stale router view, session affinity pinning, degraded replica",
+        "Rebalance queued requests across replicas; switch to queue/KV-aware "
+        "routing; refresh or bound router view staleness",
+        D.CrossReplicaSkew, action="rebalance_replicas",
+        scenario="hot_replica"),
+)
+
+ALL_RUNBOOKS: tuple[RunbookEntry, ...] = (
+    RUNBOOK_3A + RUNBOOK_3B + RUNBOOK_3C + RUNBOOK_3D)
 
 BY_ID: dict[str, RunbookEntry] = {e.row_id: e for e in ALL_RUNBOOKS}
 BY_TABLE: dict[str, tuple[RunbookEntry, ...]] = {
-    "3a": RUNBOOK_3A, "3b": RUNBOOK_3B, "3c": RUNBOOK_3C,
+    "3a": RUNBOOK_3A, "3b": RUNBOOK_3B, "3c": RUNBOOK_3C, "3d": RUNBOOK_3D,
 }
 
 
 def build_detectors(cfg: DetectorConfig | None = None,
-                    tables: tuple[str, ...] = ("3a", "3b", "3c"),
+                    tables: tuple[str, ...] = ("3a", "3b", "3c", "3d"),
                     ) -> dict[str, Detector]:
     """Instantiate one detector per runbook row (the full DPU agent)."""
     cfg = cfg or DetectorConfig()

@@ -49,7 +49,7 @@ class DPUAgent:
     """Per-node line-rate observer: detector fan-out over one event stream."""
 
     def __init__(self, node: int, cfg: DetectorConfig | None = None,
-                 tables: tuple[str, ...] = ("3a", "3b", "3c")) -> None:
+                 tables: tuple[str, ...] = ("3a", "3b", "3c", "3d")) -> None:
         self.node = node
         self.detectors: dict[str, Detector] = build_detectors(cfg, tables)
         self.stream = EventStream()
@@ -85,7 +85,7 @@ class TelemetryPlane:
                  cfg: DetectorConfig | None = None,
                  engine: EngineControls | None = None,
                  poll_interval: float = 0.25,
-                 tables: tuple[str, ...] = ("3a", "3b", "3c"),
+                 tables: tuple[str, ...] = ("3a", "3b", "3c", "3d"),
                  mitigate: bool = True) -> None:
         self.cfg = cfg or DetectorConfig()
         # A single shared agent set sees the merged cluster stream (the

@@ -1,7 +1,20 @@
 """Serving substrate: paged KV accounting, continuous batching, telemetry-
-integrated inference engine."""
+integrated inference engine, and the cross-replica (data-parallel) router."""
 from repro.serving.engine import EngineConfig, InferenceEngine
 from repro.serving.kvcache import PagedKVPool
+from repro.serving.router import (
+    POLICIES,
+    ReplicaSet,
+    ReplicaSnapshot,
+    RequestInfo,
+    Router,
+    RouterPolicy,
+    RouterView,
+    RoutingDecision,
+    make_policy,
+)
 from repro.serving.scheduler import Scheduler, SchedulerConfig, ServeRequest
-__all__ = ["EngineConfig", "InferenceEngine", "PagedKVPool", "Scheduler",
-           "SchedulerConfig", "ServeRequest"]
+__all__ = ["EngineConfig", "InferenceEngine", "PagedKVPool", "POLICIES",
+           "ReplicaSet", "ReplicaSnapshot", "RequestInfo", "Router",
+           "RouterPolicy", "RouterView", "RoutingDecision", "Scheduler",
+           "SchedulerConfig", "ServeRequest", "make_policy"]

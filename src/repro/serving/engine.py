@@ -20,7 +20,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.detectors import META_DIR_EGRESS, META_DIR_INGRESS, META_FIN
+from repro.core.detectors import (
+    META_DIR_INGRESS,
+    META_FIN,
+    META_KV_OCC,
+)
 from repro.core.events import Event, EventKind
 from repro.core.mitigation import MitigationController
 from repro.core.telemetry import TelemetryPlane
@@ -224,7 +228,7 @@ class InferenceEngine:
         # KV occupancy sample (Table 2b)
         self._emit(EventKind.QUEUE_SAMPLE,
                    depth=int(self.pool.occupancy() * 100),
-                   meta=META_DIR_EGRESS if False else 3)
+                   meta=META_KV_OCC)
 
     # ------------------------------------------------------------------
 

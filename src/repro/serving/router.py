@@ -1,0 +1,363 @@
+"""Cross-replica request router — the data-parallel dispatch layer.
+
+The paper's runbooks cover skew *within* one tensor-parallel serving group;
+the largest real-world imbalances arise one level up, where a front-end
+router spreads requests across N data-parallel replicas (each replica being
+an ``InferenceEngine`` / sim node group).  A bad policy — or a good policy
+fed a stale view — manufactures exactly the pathologies Table 3(d) catalogs:
+one replica's queue grows while its peers idle, and the DPU sees per-replica
+EGRESS-rate divergence long before client p99 explodes.
+
+Pieces:
+
+  ReplicaSnapshot  — the router-visible state of one replica at time ts
+                     (queue depth, active slots, KV occupancy, expected
+                     remaining decode work).  This is deliberately the same
+                     information a DPU-side collector could export: queue
+                     samples and KV-occupancy telemetry, no model internals.
+  RouterView       — per-replica snapshot store with an explicit staleness
+                     model: policies read the view as of ``now - staleness``,
+                     which is how the stale-router-view pathology is injected
+                     and how real eventually-consistent routers behave.
+  RouterPolicy     — pluggable decision rule; four implementations:
+                       round_robin          (static, load-blind)
+                       join_shortest_queue  (queued + active work units)
+                       least_kv             (lowest KV-cache occupancy)
+                       prediction_aware     (lowest expected remaining decode
+                                             tokens, using the workload
+                                             model's expected decode length)
+  Router           — routes RequestInfo -> replica id, with optimistic local
+                     accounting between view refreshes (a fresh router bumps
+                     its own view after each dispatch so a microburst does
+                     not dogpile one replica; a stale router cannot).
+  ReplicaSet       — N live engines behind one Router; ``submit`` snapshots
+                     each engine, routes, and forwards.
+
+Every routing decision is recorded; tests assert conservation (no request
+dropped, each routed exactly once) and the JSQ invariant (never route to a
+strictly longer queue than the minimum in view).
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ReplicaSnapshot:
+    """Router-visible state of one replica at a point in time."""
+
+    replica: int
+    ts: float
+    queue_depth: int = 0        # requests waiting, not yet in a decode slot
+    active: int = 0             # requests currently decoding
+    slots: int = 1              # decode slot capacity (for normalization)
+    kv_occupancy: float = 0.0   # 0..1 fraction of KV pool in use
+    expected_work: float = 0.0  # predicted remaining decode tokens (queued+active)
+
+    @property
+    def backlog(self) -> int:
+        """Total requests the replica is responsible for right now."""
+        return self.queue_depth + self.active
+
+
+@dataclass(frozen=True)
+class RequestInfo:
+    """What the router may know about a request at dispatch time."""
+
+    flow: int
+    prompt_len: int = 0
+    predicted_decode: float = 0.0   # expected decode length (workload model)
+
+
+@dataclass(frozen=True)
+class RoutingDecision:
+    ts: float
+    flow: int
+    replica: int
+    policy: str
+    view_ts: float              # timestamp of the snapshot the choice used
+
+
+class RouterView:
+    """Per-replica snapshot history with an explicit staleness model.
+
+    ``get(replica, now, staleness)`` returns the newest snapshot no younger
+    than ``now - staleness`` — i.e. what an eventually-consistent router
+    actually knows.  History is pruned by AGE (``max_age``, which callers
+    must keep >= the deepest staleness they will ask for), with a generous
+    entry-count backstop so a pathological snapshot flood stays bounded.
+    """
+
+    MAX_HISTORY = 4096      # backstop only; age-based pruning is primary
+
+    def __init__(self, n_replicas: int, max_age: float = 2.0) -> None:
+        self.n_replicas = n_replicas
+        self.max_age = max_age
+        self._hist: list[list[ReplicaSnapshot]] = [
+            [] for _ in range(n_replicas)]
+
+    def update(self, snap: ReplicaSnapshot) -> None:
+        h = self._hist[snap.replica]
+        h.append(snap)
+        cutoff = snap.ts - self.max_age
+        drop = 0
+        while drop < len(h) - 1 and h[drop + 1].ts <= cutoff:
+            drop += 1
+        if len(h) - drop > self.MAX_HISTORY:
+            drop = len(h) - self.MAX_HISTORY
+        if drop:
+            del h[:drop]
+
+    def get(self, replica: int, now: float,
+            staleness: float = 0.0) -> ReplicaSnapshot:
+        h = self._hist[replica]
+        if not h:
+            return ReplicaSnapshot(replica=replica, ts=float("-inf"))
+        if staleness <= 0.0:
+            return h[-1]
+        cutoff = now - staleness
+        for snap in reversed(h):
+            if snap.ts <= cutoff:
+                return snap
+        return h[0]     # nothing old enough: the oldest we have
+
+    def latest_ts(self, replica: int) -> float:
+        h = self._hist[replica]
+        return h[-1].ts if h else float("-inf")
+
+
+class RouterPolicy:
+    """Decision rule: pick a replica given the (possibly stale) view."""
+
+    name: str = "abstract"
+
+    def choose(self, snaps: list[ReplicaSnapshot], req: RequestInfo,
+               rng: random.Random) -> int:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    @staticmethod
+    def _argmin(snaps: list[ReplicaSnapshot], key,
+                rng: random.Random) -> int:
+        best = min(key(s) for s in snaps)
+        ties = [s.replica for s in snaps if key(s) == best]
+        return ties[0] if len(ties) == 1 else rng.choice(ties)
+
+
+class RoundRobinPolicy(RouterPolicy):
+    """Static rotation — load-blind; the baseline every DP router starts as."""
+
+    name = "round_robin"
+
+    def __init__(self) -> None:
+        self._i = -1
+
+    def choose(self, snaps, req, rng):
+        self._i = (self._i + 1) % len(snaps)
+        return snaps[self._i].replica
+
+
+class JoinShortestQueuePolicy(RouterPolicy):
+    """Route to the replica with the fewest queued + active requests."""
+
+    name = "join_shortest_queue"
+
+    def choose(self, snaps, req, rng):
+        return self._argmin(snaps, lambda s: s.backlog, rng)
+
+
+class LeastKVPolicy(RouterPolicy):
+    """Route to the replica with the lowest KV-cache occupancy.
+
+    KV occupancy integrates sequence *length*, not just request count, so it
+    sees heavy hitters that JSQ's unit counting misses — but it reacts more
+    slowly, because occupancy only moves once a request is admitted.
+    Queue depth breaks ties so an un-admitted backlog still repels traffic.
+    """
+
+    name = "least_kv"
+
+    def choose(self, snaps, req, rng):
+        return self._argmin(
+            snaps, lambda s: (round(s.kv_occupancy, 3), s.backlog), rng)
+
+
+class PredictionAwarePolicy(RouterPolicy):
+    """Route to the replica with the least expected remaining decode work.
+
+    ``expected_work`` sums the workload model's expected decode length over
+    the replica's queued + active requests minus tokens already produced —
+    the universal-load-balancing-principle estimate of time-to-drain.
+    """
+
+    name = "prediction_aware"
+
+    def choose(self, snaps, req, rng):
+        return self._argmin(snaps, lambda s: s.expected_work, rng)
+
+
+POLICIES: dict[str, type[RouterPolicy]] = {
+    p.name: p for p in (RoundRobinPolicy, JoinShortestQueuePolicy,
+                        LeastKVPolicy, PredictionAwarePolicy)
+}
+
+
+def make_policy(policy: str | RouterPolicy) -> RouterPolicy:
+    if isinstance(policy, RouterPolicy):
+        return policy
+    try:
+        return POLICIES[policy]()
+    except KeyError:
+        raise ValueError(
+            f"unknown router policy {policy!r}; have {sorted(POLICIES)}")
+
+
+class Router:
+    """Dispatches requests across N replicas under a pluggable policy.
+
+    Between view refreshes a *fresh* router does optimistic local accounting:
+    each dispatch bumps the cached snapshot's backlog/expected_work so that a
+    burst arriving inside one refresh interval still spreads out.  When
+    ``staleness > 0`` the router is modeling a lagging view pipeline, so the
+    bumps are disabled too — the stale-router-view pathology in one knob.
+    """
+
+    def __init__(self, n_replicas: int,
+                 policy: str | RouterPolicy = "round_robin",
+                 staleness: float = 0.0, seed: int = 0) -> None:
+        if n_replicas < 1:
+            raise ValueError("need at least one replica")
+        self.n_replicas = n_replicas
+        self.policy = make_policy(policy)
+        self.rng = random.Random(seed ^ 0x7077E7)
+        self.view = RouterView(n_replicas)
+        self.staleness = staleness      # property: widens view retention
+        self.decisions: list[RoutingDecision] = []
+        self.routed_per_replica: list[int] = [0] * n_replicas
+        # optimistic deltas since each replica's last snapshot
+        self._bump_backlog: list[int] = [0] * n_replicas
+        self._bump_work: list[float] = [0.0] * n_replicas
+
+    @property
+    def staleness(self) -> float:
+        return self._staleness
+
+    @staleness.setter
+    def staleness(self, value: float) -> None:
+        # the view must retain history at least as deep as the staleness we
+        # will read at, or get() would silently serve fresher state
+        self._staleness = value
+        if value > 0:
+            self.view.max_age = max(self.view.max_age, 2.0 * value)
+
+    # -- view ingestion --------------------------------------------------
+
+    def observe(self, snap: ReplicaSnapshot) -> None:
+        self.view.update(snap)
+        self._bump_backlog[snap.replica] = 0
+        self._bump_work[snap.replica] = 0.0
+
+    # -- routing ---------------------------------------------------------
+
+    def _effective(self, replica: int, now: float) -> ReplicaSnapshot:
+        snap = self.view.get(replica, now, self.staleness)
+        if self.staleness > 0.0:
+            return snap
+        b, w = self._bump_backlog[replica], self._bump_work[replica]
+        if b == 0 and w == 0.0:
+            return snap
+        return ReplicaSnapshot(
+            replica=replica, ts=snap.ts,
+            queue_depth=snap.queue_depth + b, active=snap.active,
+            slots=snap.slots, kv_occupancy=snap.kv_occupancy,
+            expected_work=snap.expected_work + w)
+
+    def route(self, req: RequestInfo, now: float = 0.0) -> int:
+        snaps = [self._effective(r, now) for r in range(self.n_replicas)]
+        replica = self.policy.choose(snaps, req, self.rng)
+        if not 0 <= replica < self.n_replicas:
+            raise RuntimeError(
+                f"policy {self.policy.name} chose invalid replica {replica}")
+        self.routed_per_replica[replica] += 1
+        self._bump_backlog[replica] += 1
+        self._bump_work[replica] += max(req.predicted_decode, 1.0)
+        self.decisions.append(RoutingDecision(
+            ts=now, flow=req.flow, replica=replica,
+            policy=self.policy.name,
+            view_ts=snaps[replica].ts))
+        return replica
+
+    # -- introspection ---------------------------------------------------
+
+    def imbalance(self) -> float:
+        """max/mean routed-count ratio (1.0 = perfectly even)."""
+        total = sum(self.routed_per_replica)
+        if total == 0:
+            return 1.0
+        mean = total / self.n_replicas
+        return max(self.routed_per_replica) / mean
+
+
+# ----------------------------------------------------------------------
+# live-engine replica set
+# ----------------------------------------------------------------------
+
+def engine_snapshot(engine, replica: int, now: float,
+                    default_decode: float = 32.0) -> ReplicaSnapshot:
+    """Build a ReplicaSnapshot from an InferenceEngine-shaped object.
+
+    Duck-typed: needs ``sched`` (queue, running, cfg.max_slots) and ``pool``
+    (occupancy()).  Works on the real engine and on test stubs alike.
+    """
+    sched = engine.sched
+    queued = list(sched.queue)
+    running = list(sched.running.values())
+    work = 0.0
+    for r in queued:
+        work += max(getattr(r, "max_new_tokens", default_decode), 1.0)
+    for r in running:
+        rem = (getattr(r, "max_new_tokens", default_decode)
+               - getattr(r, "tokens_out", 0))
+        work += max(rem, 1.0)
+    return ReplicaSnapshot(
+        replica=replica, ts=now,
+        queue_depth=len(queued), active=len(running),
+        slots=sched.cfg.max_slots,
+        kv_occupancy=float(engine.pool.occupancy()),
+        expected_work=work)
+
+
+class ReplicaSet:
+    """N serving-engine replicas behind one Router.
+
+    The router's view refreshes from live engine state on every submit (a
+    front-end colocated with its replicas); ``staleness`` > 0 degrades that
+    to the eventually-consistent case for experiments.
+    """
+
+    def __init__(self, engines: list,
+                 policy: str | RouterPolicy = "join_shortest_queue",
+                 staleness: float = 0.0, seed: int = 0) -> None:
+        if not engines:
+            raise ValueError("need at least one engine replica")
+        self.engines = engines
+        self.router = Router(len(engines), policy=policy,
+                             staleness=staleness, seed=seed)
+
+    def refresh(self, now: float = 0.0) -> None:
+        for i, eng in enumerate(self.engines):
+            self.router.observe(engine_snapshot(eng, i, now))
+
+    def submit(self, req, now: float = 0.0) -> int:
+        """Route one ServeRequest to a replica; returns the replica id."""
+        self.refresh(now)
+        replica = self.router.route(RequestInfo(
+            flow=getattr(req, "req_id", -1),
+            prompt_len=getattr(req, "prompt_len", 0),
+            predicted_decode=float(getattr(req, "max_new_tokens", 0))), now)
+        self.engines[replica].submit(req)
+        return replica
+
+    def submit_all(self, reqs, now: float = 0.0) -> list[int]:
+        return [self.submit(r, now) for r in reqs]

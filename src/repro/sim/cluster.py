@@ -33,20 +33,26 @@ from repro.core.detectors import (
     META_DIR_EW,
     META_DIR_INGRESS,
     META_FIN,
+    META_KV_OCC,
     META_P2P_INTER,
     META_P2P_INTRA,
     META_P2P_KV,
 )
 from repro.core.events import CollectiveOp, Event, EventKind
 from repro.core.telemetry import TelemetryPlane
+from repro.serving.router import ReplicaSnapshot, RequestInfo, Router
 from repro.sim.workload import Request, WorkloadSpec, generate
 
 
 @dataclass
 class SimParams:
     n_nodes: int = 4
+    n_replicas: int = 1              # DP replicas; nodes split evenly across
+    router_policy: str = "round_robin"
+    router_staleness: float = 0.0    # router view lag (healthy: 0 = fresh)
     devices_per_node: int = 4
     slots_per_node: int = 8          # max concurrent decode sequences
+    kv_tokens_per_slot: int = 1024   # KV budget per slot (occupancy proxy)
     duration: float = 2.0
     decode_step: float = 2e-3        # healthy decode round cadence
     compute_frac: float = 0.35       # fraction of step before collective
@@ -106,6 +112,12 @@ class FaultSpec:
     kv_heavy: bool = False
     node_stop: int = -1                # node that exits mid-iteration
     node_stop_at: float = 1.2
+    # --- data-parallel routing (Table 3d) ---
+    hot_replica: int = -1              # replica that affinity pins flows onto
+    hot_replica_frac: float = 0.6      # fraction of flows pinned when active
+    router_stale: float = 0.0          # router view staleness injected (s)
+    replica_slow: int = -1             # replica whose nodes decode slowly
+    replica_slow_mult: float = 4.0     # slow replica runs every k-th round
     # --- workload shaping ---
     early_stop_skew: bool = False      # extreme decode-length divergence
 
@@ -119,6 +131,7 @@ class FaultSpec:
 class SimMetrics:
     completed: int = 0
     latencies: list = field(default_factory=list)
+    ttfts: list = field(default_factory=list)   # queue wait + first step
     tokens_out: int = 0
     slot_rounds_busy: int = 0
     slot_rounds_idle: int = 0          # idle WHILE queue nonempty (waste)
@@ -129,6 +142,12 @@ class SimMetrics:
         if not self.latencies:
             return float("nan")
         s = sorted(self.latencies)
+        return s[min(int(q * len(s)), len(s) - 1)]
+
+    def p_ttft(self, q: float) -> float:
+        if not self.ttfts:
+            return float("nan")
+        s = sorted(self.ttfts)
         return s[min(int(q * len(s)), len(s) - 1)]
 
     def throughput(self, duration: float) -> float:
@@ -145,6 +164,10 @@ class ClusterSim:
     def __init__(self, params: SimParams, workload: WorkloadSpec,
                  fault: FaultSpec | None = None,
                  plane: TelemetryPlane | None = None) -> None:
+        if params.n_nodes % params.n_replicas != 0:
+            raise ValueError(
+                f"n_nodes={params.n_nodes} not divisible by "
+                f"n_replicas={params.n_replicas}")
         self.p = params
         self.fault = fault or FaultSpec()
         self.plane = plane
@@ -165,7 +188,13 @@ class ClusterSim:
         self._pp_extra_gap = 0.0
         self._events: list[Event] = []
         self._continuous = params.continuous_batching
-        self._rr = 0
+        # --- data-parallel replica dimension ---
+        self.nodes_per_replica = params.n_nodes // params.n_replicas
+        self.router = Router(params.n_replicas,
+                             policy=params.router_policy,
+                             staleness=params.router_staleness,
+                             seed=params.seed)
+        self._replica_rr = [0] * params.n_replicas
 
     # ------------------------------------------------------------------
     # EngineControls
@@ -176,16 +205,32 @@ class ClusterSim:
         self.metrics.actions_applied.append((action, node))
         from repro.core.runbooks import BY_ID
         entry = BY_ID.get(self.fault.row_id)
-        if entry is not None and entry.action == action:
+        matched = entry is not None and entry.action == action
+        if matched:
             self.fault.mitigated = True
-            if action == "inflight_remap":
-                self._continuous = True  # enable continuous batching
-            return True
-        # generic actions that help regardless
+        # actions with a concrete actuation in the sim help regardless of
+        # whether they were the prescribed row action
         if action == "inflight_remap":
-            self._continuous = True
+            self._continuous = True  # enable continuous batching
             return True
-        return False
+        if action == "rebalance_replicas":
+            self._rebalance_replicas()
+            return True
+        return matched
+
+    def _rebalance_replicas(self) -> None:
+        """Redistribute queued requests evenly across all nodes (the DP
+        rebalance actuation: drain the hot replica's backlog into its
+        peers' free capacity)."""
+        backlog: list[Request] = []
+        for q in self.queues:
+            backlog.extend(q)
+            q.clear()
+        backlog.sort(key=lambda r: r.arrival)
+        for i, r in enumerate(backlog):
+            node = i % self.p.n_nodes
+            r.node = node
+            self.queues[node].append(r)
 
     # ------------------------------------------------------------------
     # main loop
@@ -227,15 +272,31 @@ class ClusterSim:
     def _emit(self, ev: Event) -> None:
         self._events.append(ev)
 
-    def _node_for(self, r: Request) -> int:
-        self._rr += 1
-        return self._rr % self.p.n_nodes
+    def _replica_of(self, node: int) -> int:
+        return node // self.nodes_per_replica
+
+    def _node_for(self, r: Request, t: float) -> int:
+        """Route a request: replica choice via the router, then a
+        round-robin spread over that replica's nodes (its TP group)."""
+        p, f = self.p, self.fault
+        if (f.active(t) and f.hot_replica >= 0
+                and self.rng.random() < f.hot_replica_frac):
+            # session-affinity pinning overrides the policy (the fault)
+            replica = f.hot_replica % p.n_replicas
+            self.router.routed_per_replica[replica] += 1
+        else:
+            replica = self.router.route(RequestInfo(
+                flow=r.flow, prompt_len=r.prompt_len,
+                predicted_decode=float(r.decode_len)), now=t)
+        self._replica_rr[replica] += 1
+        local = self._replica_rr[replica] % self.nodes_per_replica
+        return replica * self.nodes_per_replica + local
 
     def _admit(self, t: float) -> None:
         p, f = self.p, self.fault
         while self.pending and self.pending[0].arrival <= t:
             r = self.pending.pop(0)
-            node = self._node_for(r)
+            node = self._node_for(r, t)
             if f.active(t) and f.ingress_starve_node == node:
                 # upstream dried up: this node's share silently vanishes
                 continue
@@ -266,7 +327,8 @@ class ClusterSim:
         for node in range(p.n_nodes):
             depth = len(self.queues[node])
             self._emit(Event(ts=t, kind=EventKind.QUEUE_SAMPLE, node=node,
-                             depth=depth, meta=META_DIR_INGRESS))
+                             depth=depth, meta=META_DIR_INGRESS,
+                             replica=self._replica_of(node)))
             if f.active(t) and f.egress_backlog_rate > 0:
                 self._egress_backlog[node] += f.egress_backlog_rate
             else:
@@ -274,10 +336,49 @@ class ClusterSim:
                     0.0, self._egress_backlog[node] - 2.0)
             self._emit(Event(ts=t, kind=EventKind.QUEUE_SAMPLE, node=node,
                              depth=int(self._egress_backlog[node]),
-                             meta=META_DIR_EGRESS))
+                             meta=META_DIR_EGRESS,
+                             replica=self._replica_of(node)))
             if f.active(t) and f.fabric_jitter > 0:
                 self._emit(Event(ts=t, kind=EventKind.QUEUE_SAMPLE, node=node,
                                  depth=20 + self.rng.randrange(20), meta=2))
+        self._refresh_router(t)
+
+    def _replica_kv_occupancy(self, replica: int) -> float:
+        p = self.p
+        lo = replica * self.nodes_per_replica
+        tokens = sum(r.prompt_len + r.tokens_out
+                     for node in range(lo, lo + self.nodes_per_replica)
+                     for r in self.active[node])
+        cap = self.nodes_per_replica * p.slots_per_node * p.kv_tokens_per_slot
+        return min(tokens / cap, 1.0) if cap else 0.0
+
+    def _refresh_router(self, t: float) -> None:
+        """Feed the router's view + emit the router-visible KV telemetry.
+
+        The stale-router-view fault widens the router's staleness while
+        active; mitigation (or fault expiry) snaps it back to the healthy
+        configured value.
+        """
+        p, f = self.p, self.fault
+        self.router.staleness = (f.router_stale if f.active(t)
+                                 and f.router_stale > 0
+                                 else p.router_staleness)
+        for replica in range(p.n_replicas):
+            lo = replica * self.nodes_per_replica
+            nodes = range(lo, lo + self.nodes_per_replica)
+            queued = sum(len(self.queues[n]) for n in nodes)
+            act = [r for n in nodes for r in self.active[n]]
+            work = sum(max(r.decode_len - r.tokens_out, 1) for r in act)
+            work += sum(max(r.decode_len, 1)
+                        for n in nodes for r in self.queues[n])
+            occ = self._replica_kv_occupancy(replica)
+            self.router.observe(ReplicaSnapshot(
+                replica=replica, ts=t, queue_depth=queued, active=len(act),
+                slots=self.nodes_per_replica * p.slots_per_node,
+                kv_occupancy=occ, expected_work=float(work)))
+            self._emit(Event(ts=t, kind=EventKind.QUEUE_SAMPLE, node=lo,
+                             depth=int(occ * 100), meta=META_KV_OCC,
+                             replica=replica))
 
     # ------------------------------------------------------------------
     # decode round: the heart of the sim
@@ -286,6 +387,13 @@ class ClusterSim:
     def _decode_round(self, t: float) -> None:
         p, f = self.p, self.fault
         for node in range(p.n_nodes):
+            # a degraded replica: every node in it decodes at 1/k cadence
+            # (thermal throttling / a bad host in the DP group) — egress
+            # thins out and its queue builds while peers stay healthy
+            if (f.active(t) and f.replica_slow >= 0
+                    and self._replica_of(node) == f.replica_slow
+                    and (self.round % max(int(f.replica_slow_mult), 1)) != 0):
+                continue
             # a CPU-bottlenecked host can't admit/prefill either
             if not (f.active(t) and f.host_slow_node == node
                     and (self.round % 6) != 0):
@@ -360,6 +468,9 @@ class ClusterSim:
     def _prefill(self, r: Request, t: float) -> None:
         p = self.p
         r.start_decode = t
+        # first token leaves one decode step after admission
+        self.metrics.ttfts.append(
+            t - r.arrival + p.egress_frac * p.decode_step)
         # scheduler places the sequence on the least-loaded device slot
         counts = [0] * p.devices_per_node
         for q in self.active[r.node]:
@@ -513,7 +624,8 @@ class ClusterSim:
             ts += min(self._egress_backlog[node], 40.0) * 1e-4
             self._emit(Event(ts=ts, kind=EventKind.EGRESS_PKT, node=node,
                              flow=r.flow, size=p.egress_tok_bytes,
-                             group=node, meta=META_FIN if fin else 0))
+                             group=node, meta=META_FIN if fin else 0,
+                             replica=self._replica_of(node)))
             if f.active(t) and self.rng.random() < f.egress_retx_p:
                 self._emit(Event(ts=ts + 4e-4, kind=EventKind.RETRANSMIT,
                                  node=node, flow=r.flow, size=p.mtu,
@@ -564,7 +676,7 @@ def run_scenario(fault: FaultSpec,
                  params: SimParams | None = None,
                  workload: WorkloadSpec | None = None,
                  mitigate: bool = False,
-                 tables: tuple[str, ...] = ("3a", "3b", "3c"),
+                 tables: tuple[str, ...] = ("3a", "3b", "3c", "3d"),
                  ) -> tuple[SimMetrics, TelemetryPlane, ClusterSim]:
     """Run one fault scenario with the full telemetry plane attached."""
     import dataclasses
@@ -573,7 +685,8 @@ def run_scenario(fault: FaultSpec,
     # arrivals must span the whole sim: a workload that simply *ends* is
     # indistinguishable from ingress starvation at the DPU vantage point
     workload = dataclasses.replace(workload, duration=params.duration * 0.98)
-    plane = TelemetryPlane(n_nodes=params.n_nodes, mitigate=mitigate)
+    plane = TelemetryPlane(n_nodes=params.n_nodes, mitigate=mitigate,
+                           tables=tables)
     sim = ClusterSim(params, workload, fault, plane)
     if mitigate and plane.controller is not None:
         plane.controller.engine = sim

@@ -118,10 +118,38 @@ def make_scenarios() -> dict[str, Scenario]:
         FaultSpec(node_stop=3, node_stop_at=1.2),
         params=_pm(duration=2.6))
 
+    # ---------------- Table 3(d): data-parallel routing ----------------
+    # one node per replica so the router's choice IS the load placement
+    add("hot_replica", "cross_replica_skew",
+        FaultSpec(hot_replica=2, hot_replica_frac=0.65),
+        workload=_wl(rate=300.0, duration=2.9),
+        params=_pm(duration=3.0, n_replicas=4,
+                   router_policy="join_shortest_queue"))
+    # low steady load + occasional microbursts: a fresh JSQ router spreads
+    # each burst; a stale view dumps the whole clump on one replica
+    add("stale_router_view", "cross_replica_skew",
+        FaultSpec(router_stale=0.6),
+        workload=_wl(rate=45.0, duration=2.9, burst_factor=16.0),
+        params=_pm(duration=3.0, n_replicas=4,
+                   router_policy="join_shortest_queue"))
+    add("replica_slow", "cross_replica_skew",
+        FaultSpec(replica_slow=1, replica_slow_mult=5.0),
+        workload=_wl(rate=300.0, duration=2.9),
+        params=_pm(duration=3.0, n_replicas=4,
+                   router_policy="round_robin"))
+
     # healthy baseline (false-positive budget measurement)
     s["healthy"] = Scenario(name="healthy", row_id="",
                             fault=FaultSpec(start=1e9),
                             workload=_wl(), params=_pm())
+    # healthy multi-replica baseline: a sane router under the same load
+    # must not trip the cross-replica detector
+    s["healthy_replicated"] = Scenario(
+        name="healthy_replicated", row_id="",
+        fault=FaultSpec(start=1e9),
+        workload=_wl(rate=300.0, duration=2.9),
+        params=_pm(duration=3.0, n_replicas=4,
+                   router_policy="join_shortest_queue"))
     return s
 
 

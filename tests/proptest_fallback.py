@@ -1,0 +1,181 @@
+"""Seeded-random fallback for ``hypothesis`` so tier-1 runs from a clean
+checkout.
+
+The property-based suites (`test_sketches`, `test_plane_fuzz`, parts of
+`test_serving_training`) use a small, fixed subset of the hypothesis API:
+``given``, ``settings``, and the strategies ``floats / integers / booleans /
+lists / tuples / sampled_from / builds``.  When hypothesis is installed
+(see requirements-dev.txt) the real library runs with full shrinking and
+example databases; when it is not, this module provides drop-in stand-ins
+that draw a fixed number of seeded pseudo-random examples per test — far
+weaker than hypothesis, but the properties still execute and regressions in
+the happy path still fail loudly.
+
+Usage (in test modules):
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:                      # pragma: no cover
+        from proptest_fallback import given, settings, st
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+FALLBACK_EXAMPLES = 25      # examples per @given test when hypothesis absent
+
+
+class Strategy:
+    """Minimal strategy: something that can draw one example from an RNG."""
+
+    def example(self, rng: random.Random):  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+class _Floats(Strategy):
+    def __init__(self, lo: float, hi: float) -> None:
+        self.lo, self.hi = lo, hi
+
+    def example(self, rng):
+        # mix uniform draws with boundary values — property bugs live at
+        # the edges, and plain uniform sampling would never visit them
+        r = rng.random()
+        if r < 0.05:
+            return self.lo
+        if r < 0.10:
+            return self.hi
+        if r < 0.20:
+            return rng.uniform(-1.0, 1.0) if self.lo < 0 <= self.hi \
+                else self.lo + (self.hi - self.lo) * 1e-6
+        return rng.uniform(self.lo, self.hi)
+
+
+class _Integers(Strategy):
+    def __init__(self, lo: int, hi: int) -> None:
+        self.lo, self.hi = lo, hi
+
+    def example(self, rng):
+        r = rng.random()
+        if r < 0.05:
+            return self.lo
+        if r < 0.10:
+            return self.hi
+        return rng.randint(self.lo, self.hi)
+
+
+class _Booleans(Strategy):
+    def example(self, rng):
+        return rng.random() < 0.5
+
+
+class _Lists(Strategy):
+    def __init__(self, elem: Strategy, min_size: int, max_size: int) -> None:
+        self.elem, self.min_size, self.max_size = elem, min_size, max_size
+
+    def example(self, rng):
+        n = rng.randint(self.min_size, self.max_size)
+        return [self.elem.example(rng) for _ in range(n)]
+
+
+class _Tuples(Strategy):
+    def __init__(self, *elems: Strategy) -> None:
+        self.elems = elems
+
+    def example(self, rng):
+        return tuple(e.example(rng) for e in self.elems)
+
+
+class _SampledFrom(Strategy):
+    def __init__(self, options) -> None:
+        self.options = list(options)
+
+    def example(self, rng):
+        return rng.choice(self.options)
+
+
+class _Builds(Strategy):
+    def __init__(self, target, **kwargs: Strategy) -> None:
+        self.target, self.kwargs = target, kwargs
+
+    def example(self, rng):
+        return self.target(
+            **{k: v.example(rng) for k, v in self.kwargs.items()})
+
+
+class _StrategiesNamespace:
+    """Mirrors the ``hypothesis.strategies`` names the tests use."""
+
+    @staticmethod
+    def floats(min_value=-1e9, max_value=1e9, allow_nan=False,
+               allow_infinity=False):
+        return _Floats(float(min_value), float(max_value))
+
+    @staticmethod
+    def integers(min_value=0, max_value=1 << 30):
+        return _Integers(int(min_value), int(max_value))
+
+    @staticmethod
+    def booleans():
+        return _Booleans()
+
+    @staticmethod
+    def lists(elem, min_size=0, max_size=16):
+        return _Lists(elem, min_size, max_size)
+
+    @staticmethod
+    def tuples(*elems):
+        return _Tuples(*elems)
+
+    @staticmethod
+    def sampled_from(options):
+        return _SampledFrom(options)
+
+    @staticmethod
+    def builds(target, **kwargs):
+        return _Builds(target, **kwargs)
+
+
+st = _StrategiesNamespace()
+
+
+def given(*strategies: Strategy):
+    """Run the wrapped test FALLBACK_EXAMPLES times with seeded draws.
+
+    The seed derives from the test's qualified name, so failures reproduce
+    deterministically run-to-run and test-to-test independence holds.
+    """
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            for i in range(FALLBACK_EXAMPLES):
+                vals = [s.example(rng) for s in strategies]
+                try:
+                    fn(*args, *vals, **kwargs)
+                except AssertionError as e:  # noqa: PERF203
+                    raise AssertionError(
+                        f"falsified on example {i} (seed={seed}): "
+                        f"{vals!r}") from e
+
+        # hide the strategy-bound trailing parameters from pytest, which
+        # would otherwise look for fixtures named after them
+        sig = inspect.signature(fn)
+        kept = list(sig.parameters.values())
+        kept = kept[:len(kept) - len(strategies)]
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        return wrapper
+    return deco
+
+
+def settings(**_kwargs):
+    """No-op stand-in for hypothesis.settings decorators."""
+
+    def deco(fn):
+        return fn
+    return deco

@@ -1,0 +1,63 @@
+"""Benchmarks must not rot: run ``benchmarks/run.py --only <table>`` for one
+cheap table per family and assert zero ERROR rows.
+
+Families and their cheap representatives:
+  telemetry-overhead -> table2_signals
+  per-row detection  -> table3d      (1 row + healthy baseline)
+  router policies    -> router       (4 sim runs, no model compile)
+  closed-loop        -> mitigation   (sim only)
+  artifact readouts  -> roofline     (pure file scan; 'missing' row is fine)
+
+The jax-compiling tables (table1, serving, kernels) are exercised by their
+own unit/integration tests; compiling them again here would double suite
+time for no added coverage.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+CHEAP_TABLES = ["table2_signals", "table3d", "router", "mitigation",
+                "roofline"]
+
+
+def _run_only(only: str) -> str:
+    env = {**os.environ,
+           "PYTHONPATH": SRC + os.pathsep + REPO}
+    out = subprocess.run(
+        [sys.executable, os.path.join(REPO, "benchmarks", "run.py"),
+         "--only", only],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, (
+        f"--only {only} exited {out.returncode}:\n"
+        f"{out.stdout[-2000:]}\n{out.stderr[-2000:]}")
+    return out.stdout
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("only", CHEAP_TABLES)
+def test_table_family_has_no_error_rows(only):
+    stdout = _run_only(only)
+    lines = [ln for ln in stdout.strip().splitlines() if ln]
+    assert lines and lines[0].startswith("name,"), stdout[:500]
+    rows = lines[1:]
+    assert rows, f"--only {only} produced no rows"
+    errors = [r for r in rows if "/ERROR," in r]
+    assert not errors, f"ERROR rows from --only {only}: {errors}"
+
+
+@pytest.mark.slow
+def test_router_table_jsq_beats_round_robin_p99_ttft():
+    """The acceptance headline, asserted on the benchmark output itself."""
+    stdout = _run_only("router")
+    p99 = {}
+    for line in stdout.strip().splitlines()[1:]:
+        name, _, derived = line.split(",", 2)
+        fields = dict(kv.split("=", 1) for kv in derived.split(";"))
+        p99[name.split("/", 1)[1]] = float(fields["p99_ttft_ms"])
+    assert p99["join_shortest_queue"] < p99["round_robin"]

@@ -2,7 +2,10 @@
 unknown findings, or mis-time on ARBITRARY event streams (a DPU sees
 whatever the wire carries — detectors cannot assume well-formed traffic)."""
 
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:     # clean checkout: seeded-random fallback
+    from proptest_fallback import given, settings, st
 
 from repro.core import TelemetryPlane
 from repro.core.events import CollectiveOp, Event, EventKind
@@ -20,6 +23,7 @@ event_strategy = st.builds(
     op=st.sampled_from([-1] + [int(o) for o in CollectiveOp]),
     group=st.integers(-1, 8),
     meta=st.integers(0, 1 << 10),
+    replica=st.integers(-1, 4),
 )
 
 
@@ -35,7 +39,7 @@ class TestPlaneFuzz:
         for f in plane.findings:
             assert f.name in BY_ID               # only registered rows
             assert f.severity in ("warn", "critical")
-            assert f.table in ("3a", "3b", "3c")
+            assert f.table in ("3a", "3b", "3c", "3d")
         for a in plane.attributions:
             assert 0.0 <= a.confidence <= 1.0
         rep = plane.report()

@@ -1,0 +1,225 @@
+"""Cross-replica router: policy invariants, staleness semantics, the live
+ReplicaSet plumbing, and the 3d closed loop (hot-replica detection +
+rebalance_replicas measurably reducing tail latency)."""
+
+import dataclasses
+import random
+
+import pytest
+
+from repro.serving.router import (
+    POLICIES,
+    ReplicaSet,
+    ReplicaSnapshot,
+    RequestInfo,
+    Router,
+    make_policy,
+)
+from repro.sim import SCENARIOS, SimParams, WorkloadSpec, run_scenario
+from repro.sim.cluster import ClusterSim, FaultSpec
+
+
+def _feed(router: Router, backlogs, ts=0.0, work=None, kv=None):
+    for r, b in enumerate(backlogs):
+        router.observe(ReplicaSnapshot(
+            replica=r, ts=ts, queue_depth=b, active=0, slots=8,
+            kv_occupancy=(kv[r] if kv else 0.0),
+            expected_work=(work[r] if work else float(b))))
+
+
+class TestPolicies:
+    def test_registry_covers_expected_policies(self):
+        assert set(POLICIES) == {"round_robin", "join_shortest_queue",
+                                 "least_kv", "prediction_aware"}
+        with pytest.raises(ValueError):
+            make_policy("no_such_policy")
+
+    @pytest.mark.parametrize("policy", sorted(POLICIES))
+    def test_every_request_routed_exactly_once(self, policy):
+        """Conservation: N requests -> N decisions, all to valid replicas."""
+        router = Router(4, policy=policy, seed=1)
+        _feed(router, [3, 1, 4, 2])
+        n = 200
+        for i in range(n):
+            rep = router.route(RequestInfo(flow=i, predicted_decode=8.0),
+                               now=0.01 * i)
+            assert 0 <= rep < 4
+        assert len(router.decisions) == n
+        assert sum(router.routed_per_replica) == n
+        assert sorted(d.flow for d in router.decisions) == list(range(n))
+
+    def test_round_robin_is_even(self):
+        router = Router(4, policy="round_robin")
+        _feed(router, [100, 0, 0, 0])   # load-blind: ignores the view
+        for i in range(40):
+            router.route(RequestInfo(flow=i))
+        assert router.routed_per_replica == [10, 10, 10, 10]
+
+    def test_jsq_never_routes_to_strictly_longer_queue(self):
+        """The JSQ invariant, under a churning view and optimistic bumps."""
+        rng = random.Random(0)
+        router = Router(4, policy="join_shortest_queue", seed=2)
+        effective = None
+        for i in range(300):
+            if i % 7 == 0:
+                backlogs = [rng.randrange(0, 30) for _ in range(4)]
+                _feed(router, backlogs, ts=0.01 * i)
+            snaps = [router._effective(r, 0.01 * i) for r in range(4)]
+            chosen = router.route(RequestInfo(flow=i), now=0.01 * i)
+            chosen_backlog = next(s.backlog for s in snaps
+                                  if s.replica == chosen)
+            assert chosen_backlog <= min(s.backlog for s in snaps), \
+                f"JSQ routed to backlog {chosen_backlog} with shorter " \
+                f"queues in view at step {i}"
+
+    def test_least_kv_prefers_low_occupancy(self):
+        router = Router(3, policy="least_kv")
+        _feed(router, [0, 0, 0], kv=[0.9, 0.2, 0.7])
+        assert router.route(RequestInfo(flow=0)) == 1
+
+    def test_prediction_aware_prefers_least_expected_work(self):
+        # JSQ would pick replica 0 (fewest requests); the predictor knows
+        # replica 0's single request is a monster
+        router = Router(2, policy="prediction_aware")
+        router.observe(ReplicaSnapshot(replica=0, ts=0.0, queue_depth=1,
+                                       active=0, slots=8,
+                                       expected_work=400.0))
+        router.observe(ReplicaSnapshot(replica=1, ts=0.0, queue_depth=3,
+                                       active=0, slots=8,
+                                       expected_work=24.0))
+        assert router.route(RequestInfo(flow=0, predicted_decode=8.0)) == 1
+
+    def test_optimistic_bumps_spread_a_burst(self):
+        """A burst between view refreshes must not dogpile one replica."""
+        router = Router(4, policy="join_shortest_queue", seed=3)
+        _feed(router, [0, 0, 0, 0])
+        for i in range(40):
+            router.route(RequestInfo(flow=i), now=0.0)
+        assert max(router.routed_per_replica) <= 11
+
+    def test_stale_view_disables_bumps_and_lags(self):
+        router = Router(2, policy="join_shortest_queue", staleness=1.0)
+        _feed(router, [0, 10], ts=0.0)
+        _feed(router, [50, 0], ts=2.0)   # fresh truth: replica 0 is loaded
+        # the stale router still sees the t=0 view (<= now - staleness)
+        for i in range(20):
+            assert router.route(RequestInfo(flow=i), now=2.5) == 0
+
+
+class TestReplicaSet:
+    class _StubSched:
+        def __init__(self, slots):
+            self.queue = []
+            self.running = {}
+            self.cfg = dataclasses.make_dataclass(
+                "C", ["max_slots"])(max_slots=slots)
+
+    class _StubEngine:
+        def __init__(self, slots=8, occ=0.0):
+            self.sched = TestReplicaSet._StubSched(slots)
+            self._occ = occ
+            self.submitted = []
+
+        class _Pool:
+            def __init__(self, occ):
+                self._occ = occ
+
+            def occupancy(self):
+                return self._occ
+
+        @property
+        def pool(self):
+            return self._Pool(self._occ)
+
+        def submit(self, req):
+            self.submitted.append(req)
+            self.sched.queue.append(req)
+
+    @dataclasses.dataclass
+    class _Req:
+        req_id: int
+        max_new_tokens: int = 8
+        tokens_out: int = 0
+
+        @property
+        def prompt_len(self):
+            return 16
+
+    def test_no_request_dropped_across_engines(self):
+        engines = [self._StubEngine() for _ in range(3)]
+        rs = ReplicaSet(engines, policy="join_shortest_queue")
+        reqs = [self._Req(req_id=i) for i in range(30)]
+        replicas = rs.submit_all(reqs)
+        assert len(replicas) == 30
+        landed = [len(e.submitted) for e in engines]
+        assert sum(landed) == 30           # conservation
+        assert max(landed) - min(landed) <= 1   # JSQ keeps it level
+        seen = sorted(r.req_id for e in engines for r in e.submitted)
+        assert seen == list(range(30))     # each exactly once
+
+    def test_kv_occupancy_reaches_policy(self):
+        engines = [self._StubEngine(occ=0.9), self._StubEngine(occ=0.1)]
+        rs = ReplicaSet(engines, policy="least_kv")
+        rs.submit(self._Req(req_id=0))
+        assert engines[1].submitted
+
+
+class TestReplicaSim:
+    def test_replica_dimension_validates(self):
+        with pytest.raises(ValueError):
+            ClusterSim(SimParams(n_nodes=4, n_replicas=3), WorkloadSpec())
+
+    def test_replica_tagged_telemetry(self):
+        params = SimParams(n_nodes=4, n_replicas=2, duration=0.5)
+        _, plane, sim = run_scenario(FaultSpec(start=1e9), params,
+                                     WorkloadSpec(rate=100.0))
+        replicas = {ev.replica for ev in plane.agent.stream
+                    if ev.replica >= 0}
+        assert replicas == {0, 1}
+        # nodes 0,1 -> replica 0; nodes 2,3 -> replica 1
+        for ev in plane.agent.stream:
+            if ev.replica >= 0 and ev.node >= 0:
+                assert ev.replica == ev.node // 2
+
+
+@pytest.mark.slow
+class TestHotReplicaClosedLoop:
+    def test_hot_replica_fires_cross_replica_skew(self):
+        sc = SCENARIOS["hot_replica"]
+        _, plane, _ = run_scenario(dataclasses.replace(sc.fault),
+                                   sc.params, sc.workload)
+        fired = {f.name for f in plane.findings}
+        assert "cross_replica_skew" in fired
+        skew = [f for f in plane.findings if f.name == "cross_replica_skew"]
+        # the hot replica must be named as the locus
+        assert any(f.node == sc.fault.hot_replica for f in skew)
+
+    def test_rebalance_reduces_p99_latency(self):
+        """§5 closed loop on the DP layer: detection -> rebalance_replicas
+        -> measurably better tail latency and more completions."""
+        sc = SCENARIOS["hot_replica"]
+        off, _, _ = run_scenario(dataclasses.replace(sc.fault),
+                                 sc.params, sc.workload, mitigate=False)
+        on, plane, sim = run_scenario(dataclasses.replace(sc.fault),
+                                      sc.params, sc.workload, mitigate=True)
+        assert any(a.action == "rebalance_replicas" for a in plane.actions)
+        assert sim.fault.mitigated
+        assert on.p(0.99) < 0.75 * off.p(0.99)
+        assert on.p_ttft(0.99) < 0.75 * off.p_ttft(0.99)
+        assert on.completed > off.completed
+
+    def test_jsq_beats_round_robin_p99_ttft_under_bursty_skewed_load(self):
+        """The router-table headline: queue-aware routing beats static
+        rotation on tail TTFT when flows are skewed and arrivals bursty."""
+        wl = WorkloadSpec(rate=65.0, duration=3.9, decode_mean=48,
+                          decode_cv=0.6, burst_factor=8.0, flow_skew=1.2,
+                          seed=42)
+        results = {}
+        for policy in ("round_robin", "join_shortest_queue"):
+            params = SimParams(n_nodes=4, n_replicas=4,
+                               router_policy=policy, duration=4.0, seed=3)
+            m, _, _ = run_scenario(FaultSpec(start=1e9), params, wl)
+            results[policy] = m
+        jsq, rr = results["join_shortest_queue"], results["round_robin"]
+        assert jsq.p_ttft(0.99) < 0.9 * rr.p_ttft(0.99)
+        assert jsq.completed >= 0.95 * rr.completed

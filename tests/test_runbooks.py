@@ -27,15 +27,17 @@ from repro.sim import SCENARIOS, run_scenario
 
 
 class TestRegistry:
-    def test_28_rows(self):
-        assert len(ALL_RUNBOOKS) == 28
+    def test_29_rows(self):
+        # the paper's 28 rows (3a/3b/3c) + the DP-routing extension (3d)
+        assert len(ALL_RUNBOOKS) == 29
         assert len(BY_TABLE["3a"]) == 9
         assert len(BY_TABLE["3b"]) == 10
         assert len(BY_TABLE["3c"]) == 9
+        assert len(BY_TABLE["3d"]) == 1
 
     def test_one_detector_per_row(self):
         dets = build_detectors()
-        assert len(dets) == 28
+        assert len(dets) == 29
         for entry in ALL_RUNBOOKS:
             assert entry.row_id in dets
             assert dets[entry.row_id].name == entry.row_id
@@ -51,7 +53,7 @@ class TestRegistry:
             assert entry.action in ACTIONS, entry.row_id
 
     def test_detector_count_matches(self):
-        assert len(ALL_DETECTORS) == 28
+        assert len(ALL_DETECTORS) == 29
 
 
 class TestObservabilityBoundary:
@@ -83,7 +85,7 @@ class TestPerRowDetection:
     """Inject each fault; assert its detector fires (28 scenarios)."""
 
     @pytest.mark.parametrize(
-        "name", [s for s in SCENARIOS if s != "healthy"])
+        "name", [s for s, sc in SCENARIOS.items() if sc.row_id])
     def test_scenario_detected(self, name):
         sc = SCENARIOS[name]
         metrics, plane, sim = run_scenario(sc.fault, sc.params, sc.workload)
@@ -91,8 +93,9 @@ class TestPerRowDetection:
         assert sc.row_id in fired, (
             f"{name}: expected {sc.row_id}, fired {sorted(fired)}")
 
-    def test_healthy_zero_false_positives(self):
-        sc = SCENARIOS["healthy"]
+    @pytest.mark.parametrize("name", ["healthy", "healthy_replicated"])
+    def test_healthy_zero_false_positives(self, name):
+        sc = SCENARIOS[name]
         metrics, plane, sim = run_scenario(sc.fault, sc.params, sc.workload)
         assert {f.name for f in plane.findings} == set()
 

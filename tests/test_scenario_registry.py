@@ -1,0 +1,66 @@
+"""Registry completeness, table-driven over ``make_scenarios()``:
+
+  1. every runbook row id has at least one fault-injection scenario,
+  2. every scenario is bound to a registered runbook row (or is an
+     explicitly-healthy baseline) and a registered controller action,
+  3. every scenario's bound detector fires on its own injected fault —
+     including scenarios beyond a row's canonical one (a row may have
+     several realizations, e.g. the three 3d router faults).
+
+This generalizes tests that check rows one-by-one: a scenario added to
+``sim.faults`` without detector coverage, or a row whose scenario entry
+rots, fails here by construction.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.core import ACTIONS, ALL_RUNBOOKS, BY_ID
+from repro.sim import make_scenarios, run_scenario
+
+FRESH = make_scenarios()
+
+
+class TestRegistryCompleteness:
+    def test_make_scenarios_is_deterministic(self):
+        again = make_scenarios()
+        assert set(again) == set(FRESH)
+        for name, sc in FRESH.items():
+            assert again[name].row_id == sc.row_id
+            assert again[name].fault == sc.fault
+
+    def test_every_row_has_a_scenario(self):
+        rows_with_scenarios = {sc.row_id for sc in FRESH.values()
+                               if sc.row_id}
+        missing = {e.row_id for e in ALL_RUNBOOKS} - rows_with_scenarios
+        assert not missing, f"runbook rows without scenarios: {missing}"
+
+    def test_every_scenario_binds_a_registered_row_and_action(self):
+        for name, sc in FRESH.items():
+            if not sc.row_id:       # healthy baselines
+                assert name.startswith("healthy")
+                continue
+            assert sc.row_id in BY_ID, f"{name}: unknown row {sc.row_id}"
+            assert BY_ID[sc.row_id].action in ACTIONS
+
+    def test_scenario_names_match_fault_names(self):
+        for name, sc in FRESH.items():
+            assert sc.name == name
+            assert sc.fault.name in (name, "healthy")
+
+
+@pytest.mark.slow
+class TestEveryScenarioDetected:
+    """The core falsifiability property, over ALL scenarios (not just each
+    row's canonical one)."""
+
+    @pytest.mark.parametrize(
+        "name", [n for n, sc in FRESH.items() if sc.row_id])
+    def test_bound_detector_fires_on_injected_fault(self, name):
+        sc = FRESH[name]
+        _, plane, _ = run_scenario(dataclasses.replace(sc.fault),
+                                   sc.params, sc.workload)
+        fired = {f.name for f in plane.findings}
+        assert sc.row_id in fired, (
+            f"{name}: expected {sc.row_id}, fired {sorted(fired)}")

@@ -9,7 +9,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:     # clean checkout: seeded-random fallback
+    from proptest_fallback import given, settings, st
 
 from repro.configs import ARCHS
 from repro.data import (DataConfig, Prefetcher, SyntheticCorpus,

@@ -3,7 +3,11 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:     # clean checkout: seeded-random fallback
+    from proptest_fallback import given, settings, st
 
 from repro.core.sketch import (
     EWMA,
