@@ -1,7 +1,11 @@
 """Benchmark harness: one function per paper table. Prints
-``name,us_per_call,derived`` CSV rows (see tables.py for definitions)."""
+``name,us_per_call,derived`` CSV rows (see tables.py for definitions);
+``--json PATH`` additionally writes the rows as a JSON artifact (used by CI
+to archive benchmark history)."""
 
 import argparse
+import json
+import os
 import sys
 
 
@@ -9,21 +13,35 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter on table function names")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as a JSON array to PATH")
     args = ap.parse_args()
 
     from benchmarks.tables import ALL_TABLES
     print("name,us_per_call,derived")
     failures = 0
+    records = []
     for fn in ALL_TABLES:
         if args.only and args.only not in fn.__name__:
             continue
         try:
             for name, us, derived in fn():
                 print(f"{name},{us:.1f},{derived}", flush=True)
+                records.append({"name": name, "us_per_call": us,
+                                "derived": derived})
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{fn.__name__}/ERROR,0,{type(e).__name__}: {e}",
                   flush=True)
+            records.append({"name": f"{fn.__name__}/ERROR",
+                            "us_per_call": 0.0,
+                            "derived": f"{type(e).__name__}: {e}"})
+    if args.json:
+        out_dir = os.path.dirname(args.json)
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+        with open(args.json, "w") as fh:
+            json.dump(records, fh, indent=2)
     if failures:
         sys.exit(1)
 

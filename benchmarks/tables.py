@@ -88,6 +88,132 @@ def table2_signals() -> list[tuple]:
     return rows
 
 
+def _record_3a_traces():
+    """Run every table-3a scenario and record its columnar event trace.
+
+    Returns ``[(scenario_name, chunks)]`` where each scenario's per-round
+    batches are coalesced into ring-DMA-sized, time-sorted EventBatch
+    chunks — the granularity a DPU ring-buffer DMA would hand the host.
+    Each scenario is an independent deployment trace and replays through
+    its own plane.
+    """
+    from repro.core.events import EventTraceRecorder
+    from repro.core.runbooks import BY_TABLE
+    from repro.sim import SCENARIOS
+    from repro.sim.cluster import ClusterSim
+
+    traces = []
+    for entry in BY_TABLE["3a"]:
+        sc = SCENARIOS[entry.scenario]
+        params = dataclasses.replace(sc.params)
+        wl = dataclasses.replace(sc.workload, duration=params.duration * 0.98)
+        rec = EventTraceRecorder()
+        sim = ClusterSim(params, wl, dataclasses.replace(sc.fault), plane=rec)
+        sim.run()
+        chunks, acc, acc_n = [], [], 0
+        for b in rec.batches:
+            if not len(b):
+                continue
+            acc.append(b)
+            acc_n += len(b)
+            if acc_n >= 8192:
+                chunks.append(_concat_batches(acc))
+                acc, acc_n = [], 0
+        if acc:
+            chunks.append(_concat_batches(acc))
+        traces.append((entry.scenario, chunks))
+    return traces
+
+
+def _concat_batches(batches):
+    import numpy as np
+    from repro.core.events import BATCH_COLUMNS, EventBatch
+    cols = [np.concatenate([getattr(b, c) for b in batches])
+            for c in BATCH_COLUMNS]
+    # per-round batches are locally sorted but a round can emit past the
+    # next round's start; the ring view is globally time-ordered
+    order = np.argsort(cols[0], kind="stable")
+    return EventBatch(*(c[order] for c in cols))
+
+
+def telemetry_perf() -> list[tuple]:
+    """Columnar vs per-event telemetry ingest on the table-3a scenario mix.
+
+    Three lanes over the identical trace, identical detector set (table 3a),
+    asserting identical findings:
+      batched   — EventBatch chunks through ``plane.observe_batch``
+      scalar    — the per-event path consuming the same columnar wire format
+                  (materialize each record, then ``plane.observe``)
+      scalar_prestaged — per-event path with materialization excluded
+                  (pre-built Event list; isolates dispatch+detector cost)
+    """
+    from repro.core import TelemetryPlane
+    from repro.core.events import EventBatch
+
+    traces = _record_3a_traces()
+    n_events = sum(len(c) for _, chunks in traces for c in chunks)
+
+    def _fresh():
+        return TelemetryPlane(n_nodes=4, mitigate=False, tables=("3a",))
+
+    def _best_of(n, run):
+        """min-of-n, fresh planes each rep (throttled CI boxes jitter);
+        returns (best_seconds, last planes) — findings identical every rep."""
+        best, planes = float("inf"), None
+        for _ in range(n):
+            planes = [_fresh() for _ in traces]
+            t0 = time.perf_counter()
+            run(planes)
+            best = min(best, time.perf_counter() - t0)
+        return best, planes
+
+    def _batched(planes):
+        for plane, (_, chunks) in zip(planes, traces):
+            for c in chunks:
+                plane.observe_batch(c)
+
+    def _scalar(planes):
+        # the per-event path consuming the same columnar wire format: each
+        # ring record is materialized, then observed one at a time (fresh
+        # uncached copies so every rep pays the real per-event cost)
+        for plane, (_, chunks) in zip(planes, traces):
+            for c in chunks:
+                for ev in EventBatch(*c.columns()).iter_events():
+                    plane.observe(ev)
+
+    events = [[ev for c in chunks for ev in c.iter_events()]
+              for _, chunks in traces]
+
+    def _prestaged(planes):
+        for plane, evs in zip(planes, events):
+            for ev in evs:
+                plane.observe(ev)
+
+    dt_batched, planes_b = _best_of(2, _batched)
+    dt_scalar, planes_s = _best_of(2, _scalar)
+    dt_prestaged, planes_p = _best_of(2, _prestaged)
+
+    def key(planes):
+        return [(f.name, f.node, f.ts, f.severity, f.score)
+                for p in planes for f in p.findings]
+    identical = int(key(planes_b) == key(planes_s) == key(planes_p))
+
+    def row(label, dt, speedup=False):
+        evps = n_events / dt
+        derived = (f"events={n_events};events_per_sec={evps:.0f};"
+                   f"ns_per_event={dt / n_events * 1e9:.0f}")
+        if speedup:
+            derived += f";batched_speedup={dt / dt_batched:.2f}"
+        derived += f";identical_findings={identical}"
+        return (f"telemetry_perf/{label}", dt / n_events * 1e6, derived)
+
+    return [
+        row("batched", dt_batched),
+        row("scalar", dt_scalar, speedup=True),
+        row("scalar_prestaged", dt_prestaged, speedup=True),
+    ]
+
+
 def _table3(table: str) -> list[tuple]:
     from repro.core.runbooks import BY_TABLE
     from repro.sim import SCENARIOS, run_scenario
@@ -274,7 +400,7 @@ def roofline_readout() -> list[tuple]:
 
 
 ALL_TABLES = [
-    table1_archzoo, table2_signals, table3a, table3b, table3c, table3d,
-    router_policies, mitigation_loop, serving_engine, kernels_bench,
-    roofline_readout,
+    table1_archzoo, table2_signals, telemetry_perf, table3a, table3b,
+    table3c, table3d, router_policies, mitigation_loop, serving_engine,
+    kernels_bench, roofline_readout,
 ]

@@ -17,6 +17,8 @@ from repro.core.detectors import ALL_DETECTORS, Detector, DetectorConfig, Findin
 from repro.core.events import (
     CollectiveOp,
     Event,
+    EventBatch,
+    EventBatchBuilder,
     EventKind,
     EventStream,
 )
@@ -42,7 +44,8 @@ from repro.core.telemetry import DPUAgent, TelemetryPlane, TelemetryStats
 __all__ = [
     "ACTIONS", "ALL_DETECTORS", "ALL_RUNBOOKS", "Attribution", "Attributor",
     "BY_ID", "BY_TABLE", "CollectiveOp", "Detector", "DetectorConfig",
-    "DPUAgent", "EngineControls", "Event", "EventKind", "EventStream",
+    "DPUAgent", "EngineControls", "Event", "EventBatch",
+    "EventBatchBuilder", "EventKind", "EventStream",
     "Finding", "ActionRecord", "MitigationController", "NullEngine",
     "RUNBOOK_3A", "RUNBOOK_3B", "RUNBOOK_3C", "RunbookEntry",
     "TelemetryPlane", "TelemetryStats", "build_detectors",

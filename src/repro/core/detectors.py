@@ -20,9 +20,12 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+import numpy as np
+
 from repro.core.events import (
     CollectiveOp,
     Event,
+    EventBatch,
     EventKind,
 )
 from repro.core.sketch import (
@@ -111,6 +114,26 @@ class Detector:
     def update(self, ev: Event) -> None:  # pragma: no cover - interface
         raise NotImplementedError
 
+    def update_batch(self, batch: EventBatch) -> None:
+        """Feed one columnar batch (already filtered to ``interested`` kinds).
+
+        Subclasses on the per-packet-dominant rows override this with
+        vectorized implementations that are bit-identical to the scalar
+        path (the batch/scalar equivalence property test enforces it);
+        this default replays the batch through ``update`` — correct for
+        every detector, just not fast.
+
+        Contract for overriders: the dispatcher may deliver any
+        kind-partition of the wire order (e.g. one sub-batch per event
+        kind), so a vectorized implementation must process each kind class
+        independently — it may not depend on cross-kind interleaving.
+        Detectors that pair events across kinds (dispatch->D2H latency and
+        friends) must NOT override this; the scalar fallback preserves full
+        wire order for them.
+        """
+        for ev in batch.iter_events():
+            self.update(ev)
+
     def poll(self, now: float) -> list[Finding]:  # pragma: no cover
         raise NotImplementedError
 
@@ -159,6 +182,57 @@ class BurstAdmissionBacklog(Detector):
             self.peak_depth = max(self.peak_depth, ev.depth)
             self.queue.update(float(ev.depth))
 
+    def update_batch(self, batch: EventBatch) -> None:
+        self.events_seen += len(batch)
+        kinds = batch.kind
+        ing = kinds == EventKind.INGRESS_PKT
+        if ing.any():
+            # the peak latch samples burstiness after every meter step, so
+            # the fold is sequential; both rate meters are inlined (same
+            # float ops as RateMeter.update — bit-identical)
+            fast, slow = self.burst.fast, self.burst.slow
+            f_hl, s_hl = fast.halflife, slow.halflife
+            f_last, f_rate, f_brate = fast._last_ts, fast._rate, fast._brate
+            s_last, s_rate, s_brate = slow._last_ts, slow._rate, slow._brate
+            peak = self.peak_burst
+            for ts, sz in zip(batch.ts[ing].tolist(),
+                              batch.size[ing].tolist()):
+                if f_last is None:
+                    f_last, f_rate, f_brate = ts, 0.0, 0.0
+                    s_last, s_rate, s_brate = ts, 0.0, 0.0
+                else:
+                    dt = ts - f_last
+                    if dt < 1e-9:
+                        dt = 1e-9
+                    decay = 0.5 ** (dt / f_hl)
+                    one_m = 1.0 - decay
+                    f_rate = f_rate * decay + one_m / dt
+                    f_brate = f_brate * decay + one_m * sz / dt
+                    f_last = ts
+                    dt = ts - s_last
+                    if dt < 1e-9:
+                        dt = 1e-9
+                    decay = 0.5 ** (dt / s_hl)
+                    one_m = 1.0 - decay
+                    s_rate = s_rate * decay + one_m / dt
+                    s_brate = s_brate * decay + one_m * sz / dt
+                    s_last = ts
+                if s_brate > 1e-9:
+                    b = f_brate / s_brate
+                    if b > peak:
+                        peak = b
+            fast._last_ts, fast._rate, fast._brate = f_last, f_rate, f_brate
+            slow._last_ts, slow._rate, slow._brate = s_last, s_rate, s_brate
+            self.peak_burst = peak
+        qs = (kinds == EventKind.QUEUE_SAMPLE) & (batch.meta
+                                                  == META_DIR_INGRESS)
+        if qs.any():
+            depths = batch.depth[qs]
+            d = int(depths.max())
+            if d > self.peak_depth:
+                self.peak_depth = d
+            self.queue.update_many(depths.astype(np.float64).tolist())
+
     def poll(self, now: float) -> list[Finding]:
         if self.events_seen < self.cfg.min_events:
             return []
@@ -182,13 +256,35 @@ class IngressStarvation(Detector):
     directive = "balance load-balancer hashing; check NIC RSS/flow steering"
     interested = frozenset({EventKind.INGRESS_PKT})
 
+    # freeze the p99-gap reference after warmup: a slow drift toward
+    # starvation must not teach the tracker that long gaps are normal,
+    # and steady-state ingress stops paying the quantile sketch
+    P99_FREEZE = 512
+
     def __init__(self, cfg: DetectorConfig) -> None:
         super().__init__(cfg)
         self.per_node: dict[int, GapTracker] = {}
 
     def update(self, ev: Event) -> None:
         self.events_seen += 1
-        self.per_node.setdefault(ev.node, GapTracker()).update(ev.ts)
+        self.per_node.setdefault(
+            ev.node, GapTracker(p99_cap=self.P99_FREEZE)).update(ev.ts)
+
+    def update_batch(self, batch: EventBatch) -> None:
+        self.events_seen += len(batch)
+        buckets: dict[int, list[float]] = {}
+        for node, ts in zip(batch.node.tolist(), batch.ts.tolist()):
+            b = buckets.get(node)
+            if b is None:
+                buckets[node] = [ts]
+            else:
+                b.append(ts)
+        per_node = self.per_node
+        for node, tss in buckets.items():
+            gt = per_node.get(node)
+            if gt is None:
+                gt = per_node[node] = GapTracker(p99_cap=self.P99_FREEZE)
+            gt.update_many(tss)
 
     def poll(self, now: float) -> list[Finding]:
         if self.events_seen < self.cfg.min_events:
@@ -222,6 +318,17 @@ class FlowSkewAcrossSessions(Detector):
         if ev.flow >= 0:
             self.flow_bytes[ev.flow] = self.flow_bytes.get(ev.flow, 0) + ev.size
 
+    def update_batch(self, batch: EventBatch) -> None:
+        self.events_seen += len(batch)
+        flows = batch.flow
+        m = flows >= 0
+        if not m.any():
+            return
+        fb = self.flow_bytes
+        get = fb.get
+        for f, s in zip(flows[m].tolist(), batch.size[m].tolist()):
+            fb[f] = get(f, 0) + s
+
     def poll(self, now: float) -> list[Finding]:
         if self.events_seen < self.cfg.min_events or len(self.flow_bytes) < 4:
             return []
@@ -239,9 +346,12 @@ class FlowSkewAcrossSessions(Detector):
 class _RetransmitBase(Detector):
     """Shared logic for retransmit-rate rows (3a.4, 3a.7, 3c.6).
 
-    Fires when the decayed retransmit rate exceeds a few percent of the
-    matching traffic's rate — the denominator is the traffic class the
-    retransmits belong to, not the whole event stream.
+    Fires when the retransmit count exceeds a few percent of the matching
+    traffic class's count over the recent window — the denominator is the
+    traffic class the retransmits belong to, not the whole event stream.
+    Both counters halve at every poll (exponential forgetting), the classic
+    DPU counter idiom: two integer adds per event on the line-rate path, a
+    division only on the control path.
     """
 
     direction = META_DIR_INGRESS
@@ -251,25 +361,47 @@ class _RetransmitBase(Detector):
 
     def __init__(self, cfg: DetectorConfig) -> None:
         super().__init__(cfg)
-        self.retx_rate = RateMeter(halflife=0.2)
-        self.traffic_rate = RateMeter(halflife=0.2)
-        self.retrans = 0
+        self.retx_win = 0        # retransmits in the decaying window
+        self.traffic_win = 0     # matching traffic in the window
+        self.retrans = 0         # all-time retransmits (absolute floor)
         self.retrans_nodes: dict[int, int] = {}
 
     def update(self, ev: Event) -> None:
         self.events_seen += 1
         if ev.kind == EventKind.RETRANSMIT and ev.meta == self.direction:
             self.retrans += 1
+            self.retx_win += 1
             self.retrans_nodes[ev.node] = self.retrans_nodes.get(ev.node, 0) + 1
-            self.retx_rate.update(ev.ts)
         elif ev.kind == self.traffic_kind:
-            self.traffic_rate.update(ev.ts)
+            self.traffic_win += 1
+
+    def update_batch(self, batch: EventBatch) -> None:
+        self.events_seen += len(batch)
+        kinds = batch.kind
+        retx = (kinds == EventKind.RETRANSMIT) & (batch.meta
+                                                  == self.direction)
+        if retx.any():
+            nodes = batch.node[retx].tolist()
+            rn = self.retrans_nodes
+            get = rn.get
+            for node in nodes:
+                rn[node] = get(node, 0) + 1
+            self.retrans += len(nodes)
+            self.retx_win += len(nodes)
+        self.traffic_win += int((kinds == self.traffic_kind).sum())
 
     def poll(self, now: float) -> list[Finding]:
+        retx_w = self.retx_win
+        traffic_w = self.traffic_win
+        # exponential forgetting on EVERY poll, including warmup/quiet ones:
+        # a late-onset fault must be judged against the recent window, not
+        # diluted by the whole undecayed healthy history
+        self.retx_win //= 2
+        self.traffic_win //= 2
         if self.events_seen < self.cfg.min_events or self.retrans < 8:
             return []
-        ratio = self.retx_rate.rate / max(self.traffic_rate.rate, 1e-9)
-        if ratio > 0.02:
+        ratio = retx_w / max(traffic_w, 1)
+        if ratio > 0.02 and retx_w >= 4:
             node = max(self.retrans_nodes, key=self.retrans_nodes.__getitem__,
                        default=-1)
             sev = "critical" if ratio > 0.10 else "warn"
@@ -314,6 +446,22 @@ class EgressBacklogQueueing(Detector):
             float(ev.depth))
         self.depths[ev.node] = ev.depth
 
+    def update_batch(self, batch: EventBatch) -> None:
+        m = (batch.kind == EventKind.QUEUE_SAMPLE) & (batch.meta
+                                                      == META_DIR_EGRESS)
+        cnt = int(m.sum())
+        if cnt == 0:
+            return
+        self.events_seen += cnt
+        per_node = self.per_node
+        depths = self.depths
+        for node, dep in zip(batch.node[m].tolist(), batch.depth[m].tolist()):
+            cs = per_node.get(node)
+            if cs is None:
+                cs = per_node[node] = CUSUM(threshold=4.0)
+            cs.update(float(dep))
+            depths[node] = dep
+
     def poll(self, now: float) -> list[Finding]:
         if self.events_seen < self.cfg.min_events:
             return []
@@ -337,11 +485,30 @@ class EgressJitter(Detector):
 
     def __init__(self, cfg: DetectorConfig) -> None:
         super().__init__(cfg)
+        # jitter is CV-of-gaps; the p99 sketch is never read, so don't pay
+        # for it on the hottest per-flow path in the plane
         self.per_flow: dict[int, GapTracker] = {}
 
     def update(self, ev: Event) -> None:
         self.events_seen += 1
-        self.per_flow.setdefault(ev.flow, GapTracker()).update(ev.ts)
+        self.per_flow.setdefault(
+            ev.flow, GapTracker(track_p99=False)).update(ev.ts)
+
+    def update_batch(self, batch: EventBatch) -> None:
+        self.events_seen += len(batch)
+        buckets: dict[int, list[float]] = {}
+        for f, ts in zip(batch.flow.tolist(), batch.ts.tolist()):
+            b = buckets.get(f)
+            if b is None:
+                buckets[f] = [ts]
+            else:
+                b.append(ts)
+        per_flow = self.per_flow
+        for f, tss in buckets.items():
+            gt = per_flow.get(f)
+            if gt is None:
+                gt = per_flow[f] = GapTracker(track_p99=False)
+            gt.update_many(tss)
 
     def poll(self, now: float) -> list[Finding]:
         if self.events_seen < self.cfg.min_events:
@@ -419,6 +586,34 @@ class EarlyCompletionSkew(Detector):
             st[1] = set()
         st[1].add(ev.flow)
 
+    def update_batch(self, batch: EventBatch) -> None:
+        self.events_seen += len(batch)
+        state = self.state
+        pending = self.pending
+        window = self.WINDOW
+        low = self.LOW_FRAC
+        decay_windows = self.DECAY_WINDOWS
+        for g, ts, f in zip(batch.group.tolist(), batch.ts.tolist(),
+                            batch.flow.tolist()):
+            st = state.get(g)
+            if st is None:
+                st = state[g] = [ts, set(), 0.0, 0, 0]
+            if ts - st[0] >= window:
+                n = len(st[1])
+                if n > 0:
+                    st[2] = max(st[2] * 0.995, float(n))
+                    if n > st[4]:
+                        st[4] = n
+                    if n < low * st[2] and st[4] >= 4:
+                        st[3] += 1
+                    else:
+                        st[3] = 0
+                    if st[3] >= decay_windows:
+                        pending[g] = (ts, n, st[4])
+                st[0] = ts
+                st[1] = set()
+            st[1].add(f)
+
     def poll(self, now: float) -> list[Finding]:
         if self.events_seen < self.cfg.min_events or not self.pending:
             return []
@@ -460,12 +655,36 @@ class BandwidthSaturation(Detector):
         else:
             self.bytes[ev.node] = self.bytes.get(ev.node, 0) + ev.size
 
+    def update_batch(self, batch: EventBatch) -> None:
+        self.events_seen += len(batch)
+        qs = batch.kind == EventKind.QUEUE_SAMPLE
+        if qs.any():
+            depth = self.depth
+            get = depth.get
+            nodes = batch.node[qs]
+            depths = batch.depth[qs]
+            for node in np.unique(nodes).tolist():
+                dep = int(depths[nodes == node].max())
+                cur = get(node, 0)
+                depth[node] = dep if dep > cur else cur
+        rest = ~qs
+        if rest.any():
+            byts = self.bytes
+            get = byts.get
+            nodes = batch.node[rest]
+            sizes = batch.size[rest]
+            # per-node int64 sums: exact (integer accumulator), and the
+            # poll below iterates nodes in sorted order so the dict's
+            # insertion order cannot diverge between scalar and batch paths
+            for node in np.unique(nodes).tolist():
+                byts[node] = get(node, 0) + int(sizes[nodes == node].sum())
+
     def poll(self, now: float) -> list[Finding]:
         out: list[Finding] = []
         if self.last_poll is not None and now > self.last_poll:
             dt = now - self.last_poll
             if self.events_seen >= self.cfg.min_events:
-                for node, nbytes in self.bytes.items():
+                for node, nbytes in sorted(self.bytes.items()):
                     frac = nbytes / dt / self.cfg.nic_Bps
                     if (frac > self.cfg.saturation_frac
                             and self.depth.get(node, 0) > 0):
@@ -509,7 +728,10 @@ class H2DDataStarvation(Detector):
             self.ingress_live[ev.node] = ev.ts
         else:
             key = (ev.node, ev.device)
-            gt = self.h2d_gap.setdefault(key, GapTracker())
+            # p99 is only read until the healthy reference freezes; cap the
+            # quantile sketch there so steady-state DMAs stop paying for it
+            gt = self.h2d_gap.setdefault(
+                key, GapTracker(p99_cap=self.REF_SAMPLES))
             gt.update(ev.ts)
             if gt.gaps.n == self.REF_SAMPLES:
                 # freeze a healthy reference so a sustained stall can't
@@ -606,7 +828,8 @@ class KernelLaunchLatency(Detector):
         if ev.kind == EventKind.H2D_XFER:
             self.h2d_last[key] = ev.ts
         else:
-            self.dispatch_gap.setdefault(key, GapTracker()).update(ev.ts)
+            self.dispatch_gap.setdefault(
+                key, GapTracker(track_p99=False)).update(ev.ts)
             if key in self.h2d_last:
                 self.h2d_to_dispatch.setdefault(key, EWMA(0.05)).update(
                     ev.ts - self.h2d_last[key])
@@ -709,12 +932,21 @@ class PCIeLinkSaturation(Detector):
         self.events_seen += 1
         self.bytes[ev.node] = self.bytes.get(ev.node, 0) + ev.size
 
+    def update_batch(self, batch: EventBatch) -> None:
+        self.events_seen += len(batch)
+        byts = self.bytes
+        get = byts.get
+        nodes = batch.node
+        sizes = batch.size
+        for node in np.unique(nodes).tolist():
+            byts[node] = get(node, 0) + int(sizes[nodes == node].sum())
+
     def poll(self, now: float) -> list[Finding]:
         out: list[Finding] = []
         if self.last_poll is not None and now > self.last_poll:
             dt = now - self.last_poll
             if self.events_seen >= self.cfg.min_events:
-                for node, nbytes in self.bytes.items():
+                for node, nbytes in sorted(self.bytes.items()):
                     frac = nbytes / dt / self.cfg.pcie_Bps
                     if frac > self.cfg.saturation_frac:
                         self.sustained[node] = self.sustained.get(node, 0) + 1
@@ -850,7 +1082,8 @@ class HostCpuBottleneck(Detector):
         if ev.kind == EventKind.H2D_XFER:
             self.dma_bytes[ev.node] = self.dma_bytes.get(ev.node, 0) + ev.size
         elif ev.kind == EventKind.DISPATCH:
-            gt = self.disp_gap.setdefault(ev.node, GapTracker())
+            gt = self.disp_gap.setdefault(
+                ev.node, GapTracker(p99_cap=self.REF_SAMPLES))
             gt.update(ev.ts)
             if gt.gaps.n == self.REF_SAMPLES:
                 self.disp_ref[ev.node] = max(gt.p99.value, 1e-6)
@@ -907,6 +1140,15 @@ class MemoryRegistrationChurn(Detector):
         else:
             self.dma[ev.node] = self.dma.get(ev.node, 0) + 1
 
+    def update_batch(self, batch: EventBatch) -> None:
+        self.events_seen += len(batch)
+        reg = batch.kind == EventKind.MEM_REG
+        for target, m in ((self.reg, reg), (self.dma, ~reg)):
+            if m.any():
+                get = target.get
+                for node in batch.node[m].tolist():
+                    target[node] = get(node, 0) + 1
+
     def poll(self, now: float) -> list[Finding]:
         if self.events_seen < self.cfg.min_events:
             return []
@@ -949,7 +1191,7 @@ class DecodeEarlyStopSkew(Detector):
         self.events_seen += 1
         key = (ev.node, ev.device)
         self.last[key] = ev.ts
-        gt = self.gap.setdefault(key, GapTracker())
+        gt = self.gap.setdefault(key, GapTracker(track_p99=False))
         gt.update(ev.ts)
         if gt.gaps.n == self.REF_SAMPLES:
             self.ref[key] = max(gt.gaps.mean, 1e-6)
@@ -1056,7 +1298,7 @@ class PPBubble(Detector):
             return
         self.events_seen += 1
         g = ev.group
-        gap = self.gap.setdefault(g, GapTracker()).gaps
+        gap = self.gap.setdefault(g, GapTracker(track_p99=False)).gaps
         closed = self.gap[g].update(ev.ts)
         if closed > 0:
             self.cusum.setdefault(g, CUSUM(threshold=5.0)).update(closed)
@@ -1138,7 +1380,8 @@ class NetworkCongestion(Detector):
                 self.fabric_depth.update(float(ev.depth))
                 self.last_depth = ev.depth
             return
-        self.gap.setdefault(ev.node, GapTracker()).update(ev.ts)
+        self.gap.setdefault(
+            ev.node, GapTracker(track_p99=False)).update(ev.ts)
 
     def poll(self, now: float) -> list[Finding]:
         if self.events_seen < self.cfg.min_events:
@@ -1235,7 +1478,8 @@ class CreditStarvation(Detector):
     def update(self, ev: Event) -> None:
         self.events_seen += 1
         if ev.kind == EventKind.CREDIT_UPDATE:
-            self.credit_gap.setdefault(ev.node, GapTracker()).update(ev.ts)
+            self.credit_gap.setdefault(
+                ev.node, GapTracker(track_p99=False)).update(ev.ts)
             self.credits[ev.node] = ev.depth
         else:
             self.traffic.setdefault(ev.node, RateMeter(0.1)).update(
@@ -1319,7 +1563,8 @@ class EarlyStopSkewAcrossNodes(Detector):
     def update(self, ev: Event) -> None:
         self.events_seen += 1
         self.last[ev.node] = ev.ts
-        self.gap.setdefault(ev.node, GapTracker()).update(ev.ts)
+        self.gap.setdefault(
+            ev.node, GapTracker(track_p99=False)).update(ev.ts)
 
     def poll(self, now: float) -> list[Finding]:
         if self.events_seen < self.cfg.min_events or len(self.last) < 2:
@@ -1388,6 +1633,42 @@ class CrossReplicaSkew(Detector):
                 ev.replica, RateMeter(halflife=0.15)).update(ev.ts, ev.size)
         elif ev.meta == META_DIR_INGRESS:
             self.depth.setdefault(ev.replica, {})[ev.node] = ev.depth
+
+    def update_batch(self, batch: EventBatch) -> None:
+        reps = batch.replica
+        valid = reps >= 0
+        n = int(valid.sum())
+        if n == 0:
+            return
+        self.events_seen += n
+        is_egress = batch.kind == EventKind.EGRESS_PKT
+        eg = valid & is_egress
+        if eg.any():
+            buckets: dict[int, tuple[list, list]] = {}
+            for r, ts, sz in zip(reps[eg].tolist(), batch.ts[eg].tolist(),
+                                 batch.size[eg].tolist()):
+                b = buckets.get(r)
+                if b is None:
+                    buckets[r] = ([ts], [sz])
+                else:
+                    b[0].append(ts)
+                    b[1].append(sz)
+            egress = self.egress
+            for r, (tss, sizes) in buckets.items():
+                m = egress.get(r)
+                if m is None:
+                    m = egress[r] = RateMeter(halflife=0.15)
+                m.update_many(tss, sizes)
+        qs = valid & ~is_egress & (batch.meta == META_DIR_INGRESS)
+        if qs.any():
+            depth = self.depth
+            for r, node, dep in zip(reps[qs].tolist(),
+                                    batch.node[qs].tolist(),
+                                    batch.depth[qs].tolist()):
+                d = depth.get(r)
+                if d is None:
+                    d = depth[r] = {}
+                d[node] = dep
 
     def poll(self, now: float) -> list[Finding]:
         if self.events_seen < self.cfg.min_events or len(self.egress) < 2:

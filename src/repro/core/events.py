@@ -25,8 +25,11 @@ from __future__ import annotations
 
 import enum
 import itertools
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Iterable, Iterator
+from typing import Callable, Iterable, Iterator, Sequence
+
+import numpy as np
 
 
 class EventKind(enum.IntEnum):
@@ -111,39 +114,289 @@ FORBIDDEN_OBSERVABLES = (
 )
 
 
-class EventStream:
-    """Append-only event buffer with cheap filtered iteration.
+#: Column order of the columnar event representation — mirrors Event's fields.
+BATCH_COLUMNS = ("ts", "kind", "node", "device", "flow", "size", "depth",
+                 "op", "group", "meta", "replica")
 
-    The simulator and the live engine both write Events here; detectors read.
-    Kept deliberately simple (list-backed) — line-rate constraints are modeled
-    by the *sketches* (O(1) memory), not by this container, which exists so
-    tests/benchmarks can replay and slice traces.
+
+class EventBatch:
+    """Structure-of-arrays view of many Events — the line-rate wire format.
+
+    A DPU exports telemetry as ring-buffer DMA of fixed-width records, not as
+    per-packet host callbacks; ``EventBatch`` is that ring in memory: one
+    float64 array of timestamps plus int64 arrays for every other column,
+    time-sorted.  Producers (the simulator, the serving engine, the router)
+    fill an ``EventBatchBuilder`` per phase and hand the built batch to
+    ``TelemetryPlane.observe_batch``; vectorized detectors consume the columns
+    directly and never materialize per-event records.
+
+    ``iter_events()`` materializes ``Event`` objects for the scalar fallback
+    path and caches them, so several non-vectorized detectors sharing a batch
+    pay the (expensive) materialization once.
     """
 
-    __slots__ = ("_events", "_subscribers")
+    __slots__ = BATCH_COLUMNS + ("_events",)
+
+    def __init__(self, ts: np.ndarray, kind: np.ndarray, node: np.ndarray,
+                 device: np.ndarray, flow: np.ndarray, size: np.ndarray,
+                 depth: np.ndarray, op: np.ndarray, group: np.ndarray,
+                 meta: np.ndarray, replica: np.ndarray) -> None:
+        self.ts = ts
+        self.kind = kind
+        self.node = node
+        self.device = device
+        self.flow = flow
+        self.size = size
+        self.depth = depth
+        self.op = op
+        self.group = group
+        self.meta = meta
+        self.replica = replica
+        self._events: list[Event] | None = None
+
+    # -- construction ----------------------------------------------------
+
+    @classmethod
+    def from_events(cls, events: Sequence[Event],
+                    sort: bool = True) -> "EventBatch":
+        b = EventBatchBuilder()
+        for ev in events:
+            b.add_event(ev)
+        return b.build(sort=sort)
+
+    @classmethod
+    def empty(cls) -> "EventBatch":
+        z = np.empty(0, np.int64)
+        return cls(np.empty(0, np.float64), z, z, z, z, z, z, z, z, z, z)
+
+    # -- container protocol ---------------------------------------------
+
+    def __len__(self) -> int:
+        return self.ts.shape[0]
+
+    def columns(self) -> tuple[np.ndarray, ...]:
+        return tuple(getattr(self, c) for c in BATCH_COLUMNS)
+
+    # -- derived batches (views / copies; caches are never shared) -------
+
+    def slice(self, a: int, b: int) -> "EventBatch":
+        """Contiguous sub-batch [a, b) — array views, O(1)."""
+        return EventBatch(*(col[a:b] for col in self.columns()))
+
+    def compress(self, mask: np.ndarray) -> "EventBatch":
+        """Sub-batch of rows where ``mask`` is True (order preserved)."""
+        idx = np.flatnonzero(mask)   # take() beats boolean-indexing 11 cols
+        return EventBatch(*(col.take(idx) for col in self.columns()))
+
+    # -- scalar interop --------------------------------------------------
+
+    def iter_events(self) -> Iterator[Event]:
+        """Materialize Events (cached) — the scalar-fallback bridge."""
+        if self._events is None:
+            kinds = [EventKind(k) for k in self.kind.tolist()]
+            self._events = [
+                Event(ts=t, kind=k, node=n, device=d, flow=f, size=s,
+                      depth=q, op=o, group=g, meta=m, replica=r)
+                for t, k, n, d, f, s, q, o, g, m, r in zip(
+                    self.ts.tolist(), kinds, self.node.tolist(),
+                    self.device.tolist(), self.flow.tolist(),
+                    self.size.tolist(), self.depth.tolist(),
+                    self.op.tolist(), self.group.tolist(),
+                    self.meta.tolist(), self.replica.tolist())
+            ]
+        return iter(self._events)
+
+    def to_events(self) -> list[Event]:
+        return list(self.iter_events())
+
+
+class EventBatchBuilder:
+    """Columnar accumulator for one emission phase.
+
+    ``add``/``add_event`` append one row; ``add_many`` appends a column
+    vector with scalar broadcast (the per-phase bulk path — a simulator
+    phase that emits N egress packets pushes one list of timestamps and
+    one list of flows instead of N records).  ``build`` freezes the columns
+    into a time-sorted :class:`EventBatch`.
+    """
+
+    __slots__ = ("_cols",)
 
     def __init__(self) -> None:
-        self._events: list[Event] = []
-        self._subscribers: list[Callable[[Event], None]] = []
+        self._cols: list[list] = [[] for _ in BATCH_COLUMNS]
+
+    def __len__(self) -> int:
+        return len(self._cols[0])
+
+    def clear(self) -> None:
+        for c in self._cols:
+            c.clear()
+
+    def add(self, ts: float, kind: int, node: int, device: int = -1,
+            flow: int = -1, size: int = 0, depth: int = 0, op: int = -1,
+            group: int = -1, meta: int = 0, replica: int = -1) -> None:
+        c = self._cols
+        c[0].append(ts)
+        c[1].append(int(kind))
+        c[2].append(node)
+        c[3].append(device)
+        c[4].append(flow)
+        c[5].append(size)
+        c[6].append(depth)
+        c[7].append(op)
+        c[8].append(group)
+        c[9].append(meta)
+        c[10].append(replica)
+
+    def add_event(self, ev: Event) -> None:
+        self.add(ev.ts, int(ev.kind), ev.node, ev.device, ev.flow, ev.size,
+                 ev.depth, ev.op, ev.group, ev.meta, ev.replica)
+
+    def add_many(self, ts: Sequence[float], kind: int, node=0, device=-1,
+                 flow=-1, size=0, depth=0, op=-1, group=-1, meta=0,
+                 replica=-1) -> None:
+        """Bulk append: ``ts`` is a sequence; every other column is either a
+        same-length sequence or a scalar broadcast across the rows."""
+        n = len(ts)
+        if n == 0:
+            return
+        c = self._cols
+        c[0].extend(ts)
+        for i, v in enumerate((kind, node, device, flow, size, depth, op,
+                               group, meta, replica), start=1):
+            if isinstance(v, (list, tuple)):
+                c[i].extend(v)
+            else:
+                c[i].extend(itertools.repeat(int(v), n))
+
+    def build(self, sort: bool = True) -> EventBatch:
+        c = self._cols
+        ts = np.asarray(c[0], np.float64)
+        cols = [ts] + [np.asarray(col, np.int64) for col in c[1:]]
+        if sort and len(ts) > 1 and np.any(ts[1:] < ts[:-1]):
+            order = np.argsort(ts, kind="stable")
+            cols = [col[order] for col in cols]
+        return EventBatch(*cols)
+
+
+class EventTraceRecorder:
+    """Minimal observe_batch-protocol sink: records every emitted batch.
+
+    Duck-type-compatible with the slot a ``TelemetryPlane`` occupies on a
+    producer (``observe_batch`` + a falsy ``findings``), so benchmarks, the
+    batch/scalar equivalence tests, and offline trace capture can tap the
+    columnar wire format without running any detectors.
+    """
+
+    findings: tuple = ()
+
+    def __init__(self) -> None:
+        self.batches: list[EventBatch] = []
+
+    def observe_batch(self, batch: "EventBatch") -> None:
+        self.batches.append(batch)
+
+
+class EventStream:
+    """Bounded ring buffer of recent telemetry with batch fan-out.
+
+    The simulator and the live engine both write here (per-event ``emit`` or
+    columnar ``emit_batch``); detectors read.  Retention is bounded: the
+    stream keeps at most ``capacity`` recent events (evicting whole chunks,
+    oldest first) so a long sweep's memory stays flat — line-rate constraints
+    on *state* are modeled by the sketches (O(1) memory); this container is
+    the replay/debug window a DPU would hold in its ring.  Tests that need
+    the complete trace pass ``full_trace=True``.
+
+    Subscribers receive :class:`EventBatch` chunks (batch fan-out); a scalar
+    ``emit`` wraps the event into a one-row batch only when subscribers
+    exist, so the hot path pays nothing for an unused hook.
+    """
+
+    __slots__ = ("capacity", "full_trace", "_chunks", "_retained",
+                 "_tail", "_total", "_subscribers")
+
+    DEFAULT_CAPACITY = 1 << 16
+
+    def __init__(self, capacity: int = DEFAULT_CAPACITY,
+                 full_trace: bool = False) -> None:
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self.full_trace = full_trace
+        # chunks are either list[Event] (scalar emits) or EventBatch
+        self._chunks: deque = deque()
+        self._tail: list[Event] = []
+        self._retained = 0      # events currently held
+        self._total = 0         # events ever emitted
+        self._subscribers: list[Callable[["EventBatch"], None]] = []
+
+    # -- ingestion -------------------------------------------------------
 
     def emit(self, event: Event) -> None:
-        self._events.append(event)
-        for sub in self._subscribers:
-            sub(event)
+        self._tail.append(event)
+        self._retained += 1
+        self._total += 1
+        if self._subscribers:
+            batch = EventBatch.from_events([event], sort=False)
+            for sub in self._subscribers:
+                sub(batch)
+        if len(self._tail) >= 1024:
+            self._seal_tail()
 
-    def subscribe(self, fn: Callable[[Event], None]) -> None:
-        """Register a line-rate consumer (a detector's update hook)."""
-        self._subscribers.append(fn)
+    def emit_batch(self, batch: "EventBatch") -> None:
+        n = len(batch)
+        if n == 0:
+            return
+        self._seal_tail()
+        self._chunks.append(batch)
+        self._retained += n
+        self._total += n
+        for sub in self._subscribers:
+            sub(batch)
+        self._trim()
 
     def extend(self, events: Iterable[Event]) -> None:
         for e in events:
             self.emit(e)
 
+    def subscribe(self, fn: Callable[["EventBatch"], None]) -> None:
+        """Register a batch consumer: called with every emitted EventBatch
+        (scalar emits arrive as one-row batches)."""
+        self._subscribers.append(fn)
+
+    def _seal_tail(self) -> None:
+        if self._tail:
+            self._chunks.append(self._tail)
+            self._tail = []
+            self._trim()
+
+    def _trim(self) -> None:
+        if self.full_trace:
+            return
+        # evict oldest whole chunks; retention is approximate at chunk
+        # granularity, which keeps eviction O(1) amortized
+        while self._retained > self.capacity and len(self._chunks) > 1:
+            old = self._chunks.popleft()
+            self._retained -= len(old)
+
+    # -- reading ---------------------------------------------------------
+
     def __len__(self) -> int:
-        return len(self._events)
+        return self._retained
+
+    @property
+    def total_events(self) -> int:
+        """Events ever emitted (retention-independent counter)."""
+        return self._total
 
     def __iter__(self) -> Iterator[Event]:
-        return iter(self._events)
+        for chunk in list(self._chunks):
+            if isinstance(chunk, EventBatch):
+                yield from chunk.iter_events()
+            else:
+                yield from chunk
+        yield from list(self._tail)
 
     def select(
         self,
@@ -155,7 +408,7 @@ class EventStream:
         t1: float = float("inf"),
     ) -> list[Event]:
         out = []
-        for e in self._events:
+        for e in self:
             if kind is not None and e.kind != kind:
                 continue
             if node is not None and e.node != node:
@@ -172,6 +425,6 @@ class EventStream:
     def merged(*streams: "EventStream") -> list[Event]:
         """Time-ordered merge of several per-node streams (cluster view)."""
         return sorted(
-            itertools.chain.from_iterable(s._events for s in streams),
+            itertools.chain.from_iterable(streams),
             key=lambda e: e.ts,
         )

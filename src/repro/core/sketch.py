@@ -47,6 +47,32 @@ class EWMA:
             self.var = (1.0 - self.alpha) * (self.var + self.alpha * delta * delta)
         return self.mean
 
+    def update_many(self, xs) -> float:
+        """Batch update — bit-identical to calling ``update`` per element.
+
+        The recurrence is inherently sequential (mean_i depends on mean_i-1)
+        so the batch form cannot reorder the float math; the win is purely
+        mechanical: one call, locals-bound loop, no per-element dispatch.
+        """
+        a = self.alpha
+        one_m = 1.0 - a
+        mean = self.mean
+        var = self.var
+        n = self.n
+        for x in xs:
+            n += 1
+            if n == 1:
+                mean = x
+                var = 0.0
+            else:
+                delta = x - mean
+                mean += a * delta
+                var = one_m * (var + a * delta * delta)
+        self.mean = mean
+        self.var = var
+        self.n = n
+        return mean
+
     @property
     def std(self) -> float:
         return math.sqrt(max(self.var, 0.0))
@@ -118,6 +144,64 @@ class P2Quantile:
                     h[i] = self._linear(i, s)
                 self.pos[i] += s
 
+    def update_many(self, xs) -> None:
+        """Batch update — bit-identical to per-element ``update`` calls.
+
+        P² marker motion is strictly sequential, so this is the same
+        algorithm with the interpreter overhead stripped: bound locals,
+        branch-ladder cell location, and the marker-adjustment loop inlined.
+        """
+        h = self.heights
+        pos = self.pos
+        desired = self.desired
+        incr = self.incr
+        count = self.count
+        n = len(xs)
+        j0 = 0
+        while len(h) < 5 and j0 < n:
+            h.append(xs[j0])
+            h.sort()
+            count += 1
+            j0 += 1
+        inc1, inc2, inc3, inc4 = incr[1], incr[2], incr[3], incr[4]
+        parabolic = self._parabolic
+        linear = self._linear
+        for j in range(j0, n):
+            x = xs[j]
+            count += 1
+            if x < h[0]:
+                h[0] = x
+                k = 0
+            elif x >= h[4]:
+                h[4] = x
+                k = 3
+            elif x < h[1]:
+                k = 0
+            elif x < h[2]:
+                k = 1
+            elif x < h[3]:
+                k = 2
+            else:
+                k = 3
+            for i in range(k + 1, 5):
+                pos[i] += 1.0
+            desired[1] += inc1
+            desired[2] += inc2
+            desired[3] += inc3
+            desired[4] += inc4
+            for i in (1, 2, 3):
+                d = desired[i] - pos[i]
+                if (d >= 1.0 and pos[i + 1] - pos[i] > 1.0) or (
+                        d <= -1.0 and pos[i - 1] - pos[i] < -1.0):
+                    s = 1.0 if d >= 0 else -1.0
+                    hp = parabolic(i, s)
+                    if h[i - 1] < hp < h[i + 1]:
+                        h[i] = hp
+                    else:
+                        h[i] = linear(i, s)
+                    pos[i] += s
+        self.count = count
+
     def _parabolic(self, i: int, s: float) -> float:
         h, p = self.heights, self.pos
         return h[i] + s / (p[i + 1] - p[i - 1]) * (
@@ -177,6 +261,13 @@ class CUSUM:
             self.fired_at = self.n
         return fired
 
+    def update_many(self, xs) -> bool:
+        """Batch update — bit-identical to per-element ``update`` calls."""
+        fired = False
+        for x in xs:
+            fired = self.update(x)
+        return fired
+
     def reset(self) -> None:
         self.stat = 0.0
         self.fired_at = None
@@ -204,6 +295,54 @@ class RateMeter:
         self._rate = self._rate * decay + (1.0 - decay) / dt
         self._brate = self._brate * decay + (1.0 - decay) * nbytes / dt
         self._last_ts = ts
+
+    def update_many(self, tss, sizes=None) -> None:
+        """Batch update — bit-identical to per-element ``update`` calls.
+
+        ``tss`` is an ascending timestamp sequence; ``sizes`` an optional
+        same-length byte sequence (None = all zero).  The decay recurrence is
+        sequential (and ``0.5 ** x`` must stay the interpreter's pow — numpy's
+        vectorized pow rounds differently), so this is a locals-bound loop.
+        """
+        n = len(tss)
+        if n == 0:
+            return
+        hl = self.halflife
+        last = self._last_ts
+        rate = self._rate
+        brate = self._brate
+        i = 0
+        if last is None:
+            last = tss[0]
+            rate = 0.0
+            brate = 0.0
+            i = 1
+        if sizes is None:
+            # scalar adds (1-decay)*0/dt == +0.0 to brate; brate >= 0.0
+            # always, so dropping the term is bit-exact
+            for j in range(i, n):
+                ts = tss[j]
+                dt = ts - last
+                if dt < 1e-9:
+                    dt = 1e-9
+                decay = 0.5 ** (dt / hl)
+                rate = rate * decay + (1.0 - decay) / dt
+                brate = brate * decay
+                last = ts
+        else:
+            for j in range(i, n):
+                ts = tss[j]
+                dt = ts - last
+                if dt < 1e-9:
+                    dt = 1e-9
+                decay = 0.5 ** (dt / hl)
+                one_m = 1.0 - decay
+                rate = rate * decay + one_m / dt
+                brate = brate * decay + one_m * sizes[j] / dt
+                last = ts
+        self._last_ts = last
+        self._rate = rate
+        self._brate = brate
 
     @property
     def rate(self) -> float:
@@ -233,13 +372,21 @@ class GapTracker:
     Starvation red flags ("long gaps between ingress packets", Table 3a row 2;
     "doorbells sporadic", 3b row 3) and jitter ("packets spread unevenly over
     time", 3a row 6) both reduce to gap statistics.
+
+    The P² p99 sketch is by far the most expensive per-gap work, and most
+    consumers never read it (jitter/mean-only detectors), or stop reading it
+    once they freeze a warmup reference.  ``track_p99=False`` drops it;
+    ``p99_cap=N`` stops feeding it after N gaps (the reference-freeze
+    pattern: the value is only consulted while ``gaps.n <= N``).
     """
 
-    __slots__ = ("gaps", "last_ts", "max_gap", "p99")
+    __slots__ = ("gaps", "last_ts", "max_gap", "p99", "p99_cap")
 
-    def __init__(self, alpha: float = 0.05) -> None:
+    def __init__(self, alpha: float = 0.05, track_p99: bool = True,
+                 p99_cap: int | None = None) -> None:
         self.gaps = EWMA(alpha)
-        self.p99 = P2Quantile(0.99)
+        self.p99: P2Quantile | None = P2Quantile(0.99) if track_p99 else None
+        self.p99_cap = p99_cap
         self.last_ts: float | None = None
         self.max_gap = 0.0
 
@@ -251,9 +398,67 @@ class GapTracker:
         gap = ts - self.last_ts
         self.last_ts = ts
         self.gaps.update(gap)
-        self.p99.update(gap)
-        self.max_gap = max(self.max_gap, gap)
+        if self.p99 is not None and (self.p99_cap is None
+                                     or self.gaps.n <= self.p99_cap):
+            self.p99.update(gap)
+        if gap > self.max_gap:
+            self.max_gap = gap
         return gap
+
+    def update_many(self, tss) -> None:
+        """Batch update — bit-identical to per-element ``update`` calls.
+
+        ``tss`` is an ascending timestamp sequence.  Gap extraction is a
+        plain successive subtraction (exactly the scalar op); the EW/max
+        fold is inlined into the same pass, and the P² fold (when tracked)
+        reuses the quantile sketch's batch form.
+        """
+        n = len(tss)
+        if n == 0:
+            return
+        last = self.last_ts
+        i = 0
+        if last is None:
+            last = tss[0]
+            i = 1
+        if i >= n:
+            self.last_ts = last
+            return
+        ew = self.gaps
+        a = ew.alpha
+        one_m = 1.0 - a
+        mean = ew.mean
+        var = ew.var
+        ew_n = ew.n
+        max_gap = self.max_gap
+        p99 = self.p99
+        cap = self.p99_cap
+        want_p99 = p99 is not None and (cap is None or ew_n < cap)
+        gaps = [] if want_p99 else None
+        for j in range(i, n):
+            ts = tss[j]
+            gap = ts - last
+            last = ts
+            if want_p99:
+                gaps.append(gap)
+            ew_n += 1
+            if ew_n == 1:
+                mean = gap
+                var = 0.0
+            else:
+                delta = gap - mean
+                mean += a * delta
+                var = one_m * (var + a * delta * delta)
+            if gap > max_gap:
+                max_gap = gap
+        self.last_ts = last
+        ew.mean = mean
+        ew.var = var
+        ew.n = ew_n
+        self.max_gap = max_gap
+        if want_p99:
+            p99.update_many(gaps if cap is None
+                            else gaps[:cap - (ew_n - len(gaps))])
 
     def current_gap(self, now: float) -> float:
         """Open gap since the last event — the live starvation signal."""

@@ -25,7 +25,7 @@ from repro.core.detectors import (
     META_FIN,
     META_KV_OCC,
 )
-from repro.core.events import Event, EventKind
+from repro.core.events import EventBatchBuilder, EventKind
 from repro.core.mitigation import MitigationController
 from repro.core.telemetry import TelemetryPlane
 from repro.models import Model
@@ -73,6 +73,9 @@ class InferenceEngine:
         self.completed: list[ServeRequest] = []
         self.kv_compress = False
         self.stats = {"steps": 0, "tokens": 0, "prefills": 0}
+        # telemetry taps accumulate columnar rows; one batch per step goes
+        # to the plane (the engine feeds the same line-rate path as the sim)
+        self._pending = EventBatchBuilder()
 
     # ------------------------------------------------------------------
     # EngineControls (mitigation actuation surface)
@@ -113,8 +116,15 @@ class InferenceEngine:
 
     def _emit(self, kind: EventKind, **kw) -> None:
         if self.plane is not None:
-            self.plane.observe(Event(ts=self.clock, kind=kind,
-                                     node=self.cfg.node, **kw))
+            self._pending.add(ts=self.clock, kind=kind,
+                              node=self.cfg.node, **kw)
+
+    def _flush_telemetry(self) -> None:
+        if self.plane is None or len(self._pending) == 0:
+            return
+        batch = self._pending.build(sort=True)
+        self._pending.clear()
+        self.plane.observe_batch(batch)
 
     def _prefill_fn(self, bucket: int):
         if bucket not in self._prefill_jit:
@@ -190,6 +200,7 @@ class InferenceEngine:
             self._admit_loop()
             if self.sched.running:
                 self._step()
+            self._flush_telemetry()
             if i >= len(pending) and not self.sched.running \
                     and not self.sched.queue:
                 break
@@ -233,6 +244,7 @@ class InferenceEngine:
     # ------------------------------------------------------------------
 
     def report(self) -> dict:
+        self._flush_telemetry()
         lats = sorted(r.latency for r in self.completed)
         ttfts = sorted(r.ttft for r in self.completed)
 

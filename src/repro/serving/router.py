@@ -43,6 +43,8 @@ from __future__ import annotations
 import random
 from dataclasses import dataclass, field
 
+from repro.core.events import EventBatchBuilder, EventKind
+
 
 @dataclass(frozen=True)
 class ReplicaSnapshot:
@@ -334,20 +336,45 @@ class ReplicaSet:
     The router's view refreshes from live engine state on every submit (a
     front-end colocated with its replicas); ``staleness`` > 0 degrades that
     to the eventually-consistent case for experiments.
+
+    When a ``plane`` is attached, the front-end renders its own activity as
+    DPU-visible telemetry through the same columnar path the simulator and
+    engines use: one INGRESS_PKT per routed request (tagged with the chosen
+    replica) and one ingress QUEUE_SAMPLE per replica per view refresh —
+    exactly the signals the Table 3(d) cross-replica detector consumes, so
+    a routing imbalance is observable without reading router internals.
     """
 
     def __init__(self, engines: list,
                  policy: str | RouterPolicy = "join_shortest_queue",
-                 staleness: float = 0.0, seed: int = 0) -> None:
+                 staleness: float = 0.0, seed: int = 0,
+                 plane=None) -> None:
         if not engines:
             raise ValueError("need at least one engine replica")
         self.engines = engines
         self.router = Router(len(engines), policy=policy,
                              staleness=staleness, seed=seed)
+        self.plane = plane
+        self._pending = EventBatchBuilder() if plane is not None else None
 
     def refresh(self, now: float = 0.0) -> None:
         for i, eng in enumerate(self.engines):
-            self.router.observe(engine_snapshot(eng, i, now))
+            snap = engine_snapshot(eng, i, now)
+            self.router.observe(snap)
+            if self._pending is not None:
+                # meta 0 == META_DIR_INGRESS: the front-end's per-replica
+                # ingress queue depth, as a NIC-side queue sample
+                self._pending.add(ts=now, kind=EventKind.QUEUE_SAMPLE,
+                                  node=i, depth=snap.queue_depth, meta=0,
+                                  replica=i)
+
+    def flush_telemetry(self) -> None:
+        """Hand buffered front-end telemetry to the plane as one batch."""
+        if self._pending is None or len(self._pending) == 0:
+            return
+        batch = self._pending.build(sort=True)
+        self._pending.clear()
+        self.plane.observe_batch(batch)
 
     def submit(self, req, now: float = 0.0) -> int:
         """Route one ServeRequest to a replica; returns the replica id."""
@@ -356,7 +383,14 @@ class ReplicaSet:
             flow=getattr(req, "req_id", -1),
             prompt_len=getattr(req, "prompt_len", 0),
             predicted_decode=float(getattr(req, "max_new_tokens", 0))), now)
+        if self._pending is not None:
+            self._pending.add(
+                ts=now, kind=EventKind.INGRESS_PKT, node=replica,
+                flow=getattr(req, "req_id", -1),
+                size=2 * getattr(req, "prompt_len", 0),
+                replica=replica)
         self.engines[replica].submit(req)
+        self.flush_telemetry()
         return replica
 
     def submit_all(self, reqs, now: float = 0.0) -> list[int]:

@@ -38,7 +38,7 @@ from repro.core.detectors import (
     META_P2P_INTRA,
     META_P2P_KV,
 )
-from repro.core.events import CollectiveOp, Event, EventKind
+from repro.core.events import CollectiveOp, EventBatchBuilder, EventKind
 from repro.core.telemetry import TelemetryPlane
 from repro.serving.router import ReplicaSnapshot, RequestInfo, Router
 from repro.sim.workload import Request, WorkloadSpec, generate
@@ -139,18 +139,22 @@ class SimMetrics:
     actions_applied: list = field(default_factory=list)
 
     def p(self, q: float) -> float:
+        # NaN-safe: tiny smoke configs may complete nothing; benchmark rows
+        # must render 0.0 rather than crash or propagate NaN
         if not self.latencies:
-            return float("nan")
+            return 0.0
         s = sorted(self.latencies)
         return s[min(int(q * len(s)), len(s) - 1)]
 
     def p_ttft(self, q: float) -> float:
         if not self.ttfts:
-            return float("nan")
+            return 0.0
         s = sorted(self.ttfts)
         return s[min(int(q * len(s)), len(s) - 1)]
 
     def throughput(self, duration: float) -> float:
+        if duration <= 0.0:
+            return 0.0
         return self.tokens_out / duration
 
     def idle_frac(self) -> float:
@@ -186,7 +190,9 @@ class ClusterSim:
         self._next_credit = 0.0
         self._egress_backlog = [0.0] * params.n_nodes
         self._pp_extra_gap = 0.0
-        self._events: list[Event] = []
+        # columnar emission: phases append rows to one builder per round;
+        # the built batch goes to the plane in one observe_batch call
+        self._batch = EventBatchBuilder()
         self._continuous = params.continuous_batching
         # --- data-parallel replica dimension ---
         self.nodes_per_replica = params.n_nodes // params.n_replicas
@@ -240,15 +246,13 @@ class ClusterSim:
         t = 0.0
         p = self.p
         while t < p.duration:
-            self._events.clear()
+            self._batch.clear()
             self._admit(t)
             self._sample_queues(t)
             self._decode_round(t)
             self._credits(t)
-            self._events.sort(key=lambda e: e.ts)
             if self.plane is not None:
-                for ev in self._events:
-                    self.plane.observe(ev)
+                self.plane.observe_batch(self._batch.build(sort=True))
                 if (self.metrics.first_finding_ts < 0 and self.plane.findings):
                     for f in self.plane.findings:
                         if f.name == self.fault.row_id:
@@ -269,8 +273,8 @@ class ClusterSim:
         for r in self.requests:
             r.decode_len = 400 if rng.random() < 0.25 else 8
 
-    def _emit(self, ev: Event) -> None:
-        self._events.append(ev)
+    def _emit(self, **kw) -> None:
+        self._batch.add(**kw)
 
     def _replica_of(self, node: int) -> int:
         return node // self.nodes_per_replica
@@ -311,13 +315,13 @@ class ClusterSim:
         base = max(r.arrival, t - p.decode_step)
         for j in range(npkt):
             ts = base + j * 2e-5 + self.rng.random() * 1e-5
-            self._emit(Event(ts=ts, kind=EventKind.INGRESS_PKT, node=r.node,
-                             flow=r.flow, size=min(nbytes, p.mtu),
-                             group=r.node))
+            self._emit(ts=ts, kind=EventKind.INGRESS_PKT, node=r.node,
+                       flow=r.flow, size=min(nbytes, p.mtu),
+                       group=r.node)
             if f.active(ts) and self.rng.random() < f.ingress_retx_p:
-                self._emit(Event(ts=ts + 5e-4, kind=EventKind.RETRANSMIT,
-                                 node=r.node, flow=r.flow, size=p.mtu,
-                                 meta=META_DIR_INGRESS))
+                self._emit(ts=ts + 5e-4, kind=EventKind.RETRANSMIT,
+                           node=r.node, flow=r.flow, size=p.mtu,
+                           meta=META_DIR_INGRESS)
 
     def _sample_queues(self, t: float) -> None:
         p, f = self.p, self.fault
@@ -326,21 +330,21 @@ class ClusterSim:
         self._next_queue_sample = t + p.queue_sample_every
         for node in range(p.n_nodes):
             depth = len(self.queues[node])
-            self._emit(Event(ts=t, kind=EventKind.QUEUE_SAMPLE, node=node,
-                             depth=depth, meta=META_DIR_INGRESS,
-                             replica=self._replica_of(node)))
+            self._emit(ts=t, kind=EventKind.QUEUE_SAMPLE, node=node,
+                       depth=depth, meta=META_DIR_INGRESS,
+                       replica=self._replica_of(node))
             if f.active(t) and f.egress_backlog_rate > 0:
                 self._egress_backlog[node] += f.egress_backlog_rate
             else:
                 self._egress_backlog[node] = max(
                     0.0, self._egress_backlog[node] - 2.0)
-            self._emit(Event(ts=t, kind=EventKind.QUEUE_SAMPLE, node=node,
-                             depth=int(self._egress_backlog[node]),
-                             meta=META_DIR_EGRESS,
-                             replica=self._replica_of(node)))
+            self._emit(ts=t, kind=EventKind.QUEUE_SAMPLE, node=node,
+                       depth=int(self._egress_backlog[node]),
+                       meta=META_DIR_EGRESS,
+                       replica=self._replica_of(node))
             if f.active(t) and f.fabric_jitter > 0:
-                self._emit(Event(ts=t, kind=EventKind.QUEUE_SAMPLE, node=node,
-                                 depth=20 + self.rng.randrange(20), meta=2))
+                self._emit(ts=t, kind=EventKind.QUEUE_SAMPLE, node=node,
+                           depth=20 + self.rng.randrange(20), meta=2)
         self._refresh_router(t)
 
     def _replica_kv_occupancy(self, replica: int) -> float:
@@ -376,9 +380,9 @@ class ClusterSim:
                 replica=replica, ts=t, queue_depth=queued, active=len(act),
                 slots=self.nodes_per_replica * p.slots_per_node,
                 kv_occupancy=occ, expected_work=float(work)))
-            self._emit(Event(ts=t, kind=EventKind.QUEUE_SAMPLE, node=lo,
-                             depth=int(occ * 100), meta=META_KV_OCC,
-                             replica=replica))
+            self._emit(ts=t, kind=EventKind.QUEUE_SAMPLE, node=lo,
+                       depth=int(occ * 100), meta=META_KV_OCC,
+                       replica=replica)
 
     # ------------------------------------------------------------------
     # decode round: the heart of the sim
@@ -408,10 +412,10 @@ class ClusterSim:
                 cap = 200e9 / 8  # matches DetectorConfig.nic_Bps
                 per_round = f.nic_background_frac * cap * p.decode_step
                 for j in range(8):
-                    self._emit(Event(
-                        ts=t + (j + self.rng.random()) * p.decode_step / 8,
-                        kind=EventKind.INGRESS_PKT, node=node, flow=-1,
-                        size=int(per_round / 8)))
+                    self._emit(
+                               ts=t + (j + self.rng.random()) * p.decode_step / 8,
+                               kind=EventKind.INGRESS_PKT, node=node, flow=-1,
+                               size=int(per_round / 8))
             if not act:
                 continue
             stopped = (f.active(t) and f.node_stop == node
@@ -488,22 +492,22 @@ class ClusterSim:
             nbytes = int(nbytes * f.skew_factor)
         per = max(1, nbytes // split)
         for j in range(split):
-            self._emit(Event(ts=ts + j * 1e-5, kind=EventKind.H2D_XFER,
-                             node=node, device=dev, flow=flow, size=per))
+            self._emit(ts=ts + j * 1e-5, kind=EventKind.H2D_XFER,
+                       node=node, device=dev, flow=flow, size=per)
             if f.active(ts) and f.reg_churn:
                 # short-lived buffers: map before + unmap after every DMA
-                self._emit(Event(ts=ts + j * 1e-5 - 2e-6,
-                                 kind=EventKind.MEM_REG, node=node,
-                                 device=dev, size=per))
-                self._emit(Event(ts=ts + j * 1e-5 + 2e-6,
-                                 kind=EventKind.MEM_REG, node=node,
-                                 device=dev, size=per))
+                self._emit(ts=ts + j * 1e-5 - 2e-6,
+                           kind=EventKind.MEM_REG, node=node,
+                           device=dev, size=per)
+                self._emit(ts=ts + j * 1e-5 + 2e-6,
+                           kind=EventKind.MEM_REG, node=node,
+                           device=dev, size=per)
         # PCIe background load (saturation fault)
         if f.active(ts) and f.pcie_background_frac > 0:
             cap = 64e9
             per_round = f.pcie_background_frac * cap * p.decode_step
-            self._emit(Event(ts=ts + 2e-4, kind=EventKind.H2D_XFER, node=node,
-                             device=dev, size=int(per_round)))
+            self._emit(ts=ts + 2e-4, kind=EventKind.H2D_XFER, node=node,
+                       device=dev, size=int(per_round))
 
     def _h2d_phase(self, node: int, t: float, busy: int) -> None:
         p, f = self.p, self.fault
@@ -525,8 +529,8 @@ class ClusterSim:
                     f.dispatch_jitter_mult * 2e-4))
         ts = t + delay
         for dev in live_devs:
-            self._emit(Event(ts=ts + dev * 1e-6, kind=EventKind.DISPATCH,
-                             node=node, device=dev))
+            self._emit(ts=ts + dev * 1e-6, kind=EventKind.DISPATCH,
+                       node=node, device=dev)
         return ts
 
     def _collective_phase(self, node: int, t: float, disp_t: float) -> None:
@@ -543,13 +547,13 @@ class ClusterSim:
             if f.fabric_jitter > 0:
                 arrive += abs(self.rng.gauss(0.0, f.fabric_jitter))
             if self.rng.random() < f.ew_retx_p:
-                self._emit(Event(ts=arrive + 3e-4,
-                                 kind=EventKind.RETRANSMIT, node=node,
-                                 size=p.mtu, meta=META_DIR_EW))
-        self._emit(Event(ts=arrive, kind=EventKind.COLLECTIVE_BURST,
-                         node=node, size=nbytes,
-                         op=int(CollectiveOp.ALL_REDUCE), group=0,
-                         meta=self.round))
+                self._emit(ts=arrive + 3e-4,
+                           kind=EventKind.RETRANSMIT, node=node,
+                           size=p.mtu, meta=META_DIR_EW)
+        self._emit(ts=arrive, kind=EventKind.COLLECTIVE_BURST,
+                   node=node, size=nbytes,
+                   op=int(CollectiveOp.ALL_REDUCE), group=0,
+                   meta=self.round)
 
     def _pp_phase(self, node: int, t: float) -> None:
         p, f = self.p, self.fault
@@ -566,9 +570,9 @@ class ClusterSim:
             if self.rng.random() < 0.8:
                 return
             ts = t + 5 * p.decode_step   # clamp near the round
-        self._emit(Event(ts=ts, kind=EventKind.P2P_BURST, node=node,
-                         size=p.collective_bytes // 2, group=100 + node,
-                         meta=META_P2P_INTER))
+        self._emit(ts=ts, kind=EventKind.P2P_BURST, node=node,
+                   size=p.collective_bytes // 2, group=100 + node,
+                   meta=META_P2P_INTER)
 
     def _hol_stalled(self, node: int, t: float) -> bool:
         """HoL fault: a subset of nodes' streams freeze in 0.3 s windows."""
@@ -587,11 +591,11 @@ class ClusterSim:
             return
         if self._hol_stalled(node, t):
             return
-        self._emit(Event(ts=t + 0.4 * p.decode_step,
-                         kind=EventKind.P2P_BURST, node=node,
-                         device=self.round % p.devices_per_node,
-                         flow=10 + node, size=p.p2p_intra_bytes,
-                         meta=META_P2P_INTRA))
+        self._emit(ts=t + 0.4 * p.decode_step,
+                   kind=EventKind.P2P_BURST, node=node,
+                   device=self.round % p.devices_per_node,
+                   flow=10 + node, size=p.p2p_intra_bytes,
+                   meta=META_P2P_INTRA)
 
     def _d2h_egress_phase(self, node: int, t: float, stopped: bool) -> None:
         p, f = self.p, self.fault
@@ -608,9 +612,9 @@ class ClusterSim:
             for r in act:
                 per_dev[r.device] = per_dev.get(r.device, 0) + p.d2h_tok_bytes
             for dev, nbytes in per_dev.items():
-                self._emit(Event(ts=base + d2h_delay + dev * 1e-6,
-                                 kind=EventKind.D2H_XFER, node=node,
-                                 device=dev, size=nbytes))
+                self._emit(ts=base + d2h_delay + dev * 1e-6,
+                           kind=EventKind.D2H_XFER, node=node,
+                           device=dev, size=nbytes)
         for i, r in enumerate(act):
             r.tokens_out += 1
             self.metrics.tokens_out += 1
@@ -622,14 +626,14 @@ class ClusterSim:
                 ts += min(self.rng.expovariate(
                     1.0 / (f.egress_jitter_mult * 2e-4)), 10e-3)
             ts += min(self._egress_backlog[node], 40.0) * 1e-4
-            self._emit(Event(ts=ts, kind=EventKind.EGRESS_PKT, node=node,
-                             flow=r.flow, size=p.egress_tok_bytes,
-                             group=node, meta=META_FIN if fin else 0,
-                             replica=self._replica_of(node)))
+            self._emit(ts=ts, kind=EventKind.EGRESS_PKT, node=node,
+                       flow=r.flow, size=p.egress_tok_bytes,
+                       group=node, meta=META_FIN if fin else 0,
+                       replica=self._replica_of(node))
             if f.active(t) and self.rng.random() < f.egress_retx_p:
-                self._emit(Event(ts=ts + 4e-4, kind=EventKind.RETRANSMIT,
-                                 node=node, flow=r.flow, size=p.mtu,
-                                 meta=META_DIR_EGRESS))
+                self._emit(ts=ts + 4e-4, kind=EventKind.RETRANSMIT,
+                           node=node, flow=r.flow, size=p.mtu,
+                           meta=META_DIR_EGRESS)
             if fin:
                 r.finish = ts
                 self.metrics.completed += 1
@@ -644,17 +648,17 @@ class ClusterSim:
             return
         # healthy background: steady small page migrations, stable stream id
         if self.round % 16 == 0 and self.active[node]:
-            self._emit(Event(ts=t + 0.5 * p.decode_step,
-                             kind=EventKind.P2P_BURST, node=node,
-                             flow=50 + node, size=p.kv_page_bytes,
-                             meta=META_P2P_KV))
+            self._emit(ts=t + 0.5 * p.decode_step,
+                       kind=EventKind.P2P_BURST, node=node,
+                       flow=50 + node, size=p.kv_page_bytes,
+                       meta=META_P2P_KV)
         if f.active(t) and f.kv_heavy:
             # one flow per node repeatedly migrates big KV slabs, hogging
             # the link while the regular page streams starve
-            self._emit(Event(ts=t + 0.55 * p.decode_step,
-                             kind=EventKind.P2P_BURST, node=node,
-                             flow=node * 1000,
-                             size=192 * p.kv_page_bytes, meta=META_P2P_KV))
+            self._emit(ts=t + 0.55 * p.decode_step,
+                       kind=EventKind.P2P_BURST, node=node,
+                       flow=node * 1000,
+                       size=192 * p.kv_page_bytes, meta=META_P2P_KV)
 
     def _credits(self, t: float) -> None:
         p, f = self.p, self.fault
@@ -665,11 +669,11 @@ class ClusterSim:
             if f.active(t) and f.credit_starve:
                 # credits trickle in rarely and empty
                 if self.rng.random() < 0.1:
-                    self._emit(Event(ts=t, kind=EventKind.CREDIT_UPDATE,
-                                     node=node, depth=0))
+                    self._emit(ts=t, kind=EventKind.CREDIT_UPDATE,
+                               node=node, depth=0)
             else:
-                self._emit(Event(ts=t, kind=EventKind.CREDIT_UPDATE,
-                                 node=node, depth=32))
+                self._emit(ts=t, kind=EventKind.CREDIT_UPDATE,
+                           node=node, depth=32)
 
 
 def run_scenario(fault: FaultSpec,

@@ -1,0 +1,263 @@
+"""Batch/scalar equivalence for the columnar telemetry plane.
+
+The tentpole invariant: replaying a trace as columnar ``EventBatch`` chunks
+must yield *identical* findings (same rows, timestamps, loci, severities,
+scores — bit-for-bit) as replaying the same trace event-by-event, for every
+registered detector and for the whole plane.  Vectorized ``update_batch``
+implementations are only allowed to strip interpreter overhead, never to
+change the math.
+
+Also covers the EventBatch/EventBatchBuilder container semantics and the
+bounded ring-buffer EventStream.
+"""
+
+import dataclasses
+import random
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:     # clean checkout: seeded-random fallback
+    from proptest_fallback import given, settings, st
+
+from repro.core import TelemetryPlane
+from repro.core.detectors import Detector, DetectorConfig
+from repro.core.events import (
+    CollectiveOp,
+    Event,
+    EventBatch,
+    EventBatchBuilder,
+    EventKind,
+    EventStream,
+)
+from repro.core.runbooks import ALL_RUNBOOKS
+
+event_strategy = st.builds(
+    Event,
+    ts=st.floats(min_value=0.0, max_value=10.0, allow_nan=False),
+    kind=st.sampled_from(list(EventKind)),
+    node=st.integers(-1, 8),
+    device=st.integers(-1, 8),
+    flow=st.integers(-1, 64),
+    size=st.integers(0, 1 << 30),
+    depth=st.integers(0, 1 << 16),
+    op=st.sampled_from([-1] + [int(o) for o in CollectiveOp]),
+    group=st.integers(-1, 8),
+    meta=st.integers(0, 1 << 10),
+    replica=st.integers(-1, 4),
+)
+
+
+def _random_trace(rng: random.Random, n: int) -> list[Event]:
+    kinds = list(EventKind)
+    evs, t = [], 0.0
+    for _ in range(n):
+        t += rng.expovariate(4000.0)
+        evs.append(Event(
+            ts=t, kind=rng.choice(kinds), node=rng.randrange(4),
+            device=rng.randrange(4), flow=rng.randrange(48),
+            size=rng.randrange(1 << 20), depth=rng.randrange(128),
+            op=rng.choice([-1] + [int(o) for o in CollectiveOp]),
+            group=rng.randrange(4), meta=rng.randrange(600),
+            replica=rng.randrange(4)))
+    return evs
+
+
+def _finding_key(findings):
+    # evidence is excluded from Finding equality; everything else must match
+    return [(f.name, f.table, f.ts, f.severity, f.node, f.device, f.stage,
+             f.root_cause, f.directive, f.score) for f in findings]
+
+
+class TestDetectorEquivalence:
+    """Every registered detector: batched replay == event-by-event replay."""
+
+    @pytest.mark.parametrize("entry", ALL_RUNBOOKS,
+                             ids=lambda e: e.row_id)
+    def test_batch_equals_scalar(self, entry):
+        rng = random.Random(sum(map(ord, entry.row_id)))
+        for trial in range(3):
+            events = [e for e in _random_trace(rng, 700)
+                      if e.kind in entry.detector_cls.interested]
+            if not events:
+                continue
+            cfg = DetectorConfig()
+            d_scalar = entry.detector_cls(cfg)
+            d_one = entry.detector_cls(cfg)      # one big batch
+            d_chunked = entry.detector_cls(cfg)  # random chunk sizes
+            end = events[-1].ts
+            # poll at interior points too: peak latches / interval counters
+            # must agree mid-stream, not only at the end
+            cuts = [end * 0.4, end * 0.8, end + 0.5]
+            lo = 0
+            prev_cut = 0.0
+            for cut in cuts:
+                seg = [e for e in events if prev_cut < e.ts <= cut] \
+                    if prev_cut else [e for e in events if e.ts <= cut]
+                prev_cut = cut
+                for ev in seg:
+                    d_scalar.update(ev)
+                if seg:
+                    d_one.update_batch(EventBatch.from_events(seg))
+                    i = 0
+                    while i < len(seg):
+                        k = rng.randrange(1, 64)
+                        d_chunked.update_batch(
+                            EventBatch.from_events(seg[i:i + k]))
+                        i += k
+                f1 = _finding_key(d_scalar.poll(cut))
+                f2 = _finding_key(d_one.poll(cut))
+                f3 = _finding_key(d_chunked.poll(cut))
+                assert f1 == f2 == f3, (
+                    f"{entry.row_id} trial {trial} poll@{cut}: "
+                    f"scalar={f1} one={f2} chunked={f3}")
+            assert d_scalar.events_seen == d_one.events_seen \
+                == d_chunked.events_seen
+
+
+class TestPlaneEquivalence:
+    @given(st.lists(event_strategy, min_size=1, max_size=300),
+           st.integers(1, 97))
+    @settings(max_examples=15, deadline=None)
+    def test_random_stream(self, events, chunk):
+        stream = sorted(events, key=lambda e: e.ts)
+
+        p_scalar = TelemetryPlane(n_nodes=4, mitigate=False)
+        for ev in stream:
+            p_scalar.observe(ev)
+        p_scalar.tick(11.0)
+
+        p_batched = TelemetryPlane(n_nodes=4, mitigate=False)
+        for i in range(0, len(stream), chunk):
+            p_batched.observe_batch(
+                EventBatch.from_events(stream[i:i + chunk]))
+        p_batched.tick(11.0)
+
+        assert _finding_key(p_scalar.findings) \
+            == _finding_key(p_batched.findings)
+        assert p_scalar.stats.events == p_batched.stats.events == len(stream)
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("scenario", ["egress_jitter", "nic_saturation",
+                                          "ingress_retransmit",
+                                          "hot_replica"])
+    def test_sim_trace(self, scenario):
+        """End-to-end: a real fault trace through the full detector set."""
+        from repro.core.events import EventTraceRecorder
+        from repro.sim import SCENARIOS
+        from repro.sim.cluster import ClusterSim
+
+        sc = SCENARIOS[scenario]
+        rec = EventTraceRecorder()
+        wl = dataclasses.replace(sc.workload,
+                                 duration=sc.params.duration * 0.98)
+        ClusterSim(dataclasses.replace(sc.params), wl,
+                   dataclasses.replace(sc.fault), plane=rec).run()
+
+        p_batched = TelemetryPlane(n_nodes=sc.params.n_nodes, mitigate=False)
+        for b in rec.batches:
+            p_batched.observe_batch(b)
+
+        p_scalar = TelemetryPlane(n_nodes=sc.params.n_nodes, mitigate=False)
+        for b in rec.batches:
+            for ev in b.iter_events():
+                p_scalar.observe(ev)
+
+        assert p_batched.findings, f"{scenario}: trace produced no findings"
+        assert p_batched.findings == p_scalar.findings
+        assert _finding_key(p_batched.findings) \
+            == _finding_key(p_scalar.findings)
+        assert p_batched.stats.events == p_scalar.stats.events
+
+
+class TestEventBatch:
+    def test_roundtrip(self):
+        rng = random.Random(0)
+        evs = sorted(_random_trace(rng, 50), key=lambda e: e.ts)
+        batch = EventBatch.from_events(evs)
+        assert len(batch) == 50
+        assert batch.to_events() == evs
+
+    def test_builder_sorts_stably(self):
+        b = EventBatchBuilder()
+        b.add(ts=2.0, kind=EventKind.INGRESS_PKT, node=0, flow=1)
+        b.add(ts=1.0, kind=EventKind.EGRESS_PKT, node=1, flow=2)
+        b.add(ts=1.0, kind=EventKind.EGRESS_PKT, node=2, flow=3)
+        batch = b.build(sort=True)
+        out = batch.to_events()
+        assert [e.ts for e in out] == [1.0, 1.0, 2.0]
+        # equal timestamps keep emission order (stable sort)
+        assert [e.node for e in out] == [1, 2, 0]
+
+    def test_add_many_broadcast(self):
+        b = EventBatchBuilder()
+        b.add_many([0.1, 0.2, 0.3], kind=EventKind.EGRESS_PKT, node=7,
+                   flow=[10, 11, 12], size=512)
+        batch = b.build()
+        evs = batch.to_events()
+        assert [e.flow for e in evs] == [10, 11, 12]
+        assert all(e.node == 7 and e.size == 512
+                   and e.kind == EventKind.EGRESS_PKT for e in evs)
+
+    def test_slice_and_compress(self):
+        rng = random.Random(1)
+        evs = sorted(_random_trace(rng, 40), key=lambda e: e.ts)
+        batch = EventBatch.from_events(evs)
+        assert batch.slice(5, 9).to_events() == evs[5:9]
+        mask = batch.kind == EventKind.INGRESS_PKT
+        assert batch.compress(mask).to_events() == [
+            e for e in evs if e.kind == EventKind.INGRESS_PKT]
+
+
+class TestEventStreamRing:
+    def test_bounded_retention(self):
+        stream = EventStream(capacity=100)
+        b = EventBatchBuilder()
+        b.add_many([i * 0.001 for i in range(50)],
+                   kind=EventKind.EGRESS_PKT, node=0)
+        for _ in range(10):
+            stream.emit_batch(b.build())
+        assert stream.total_events == 500
+        assert len(stream) <= 150    # capacity + one chunk of slack
+        # retained events are the most recent ones
+        assert min(e.ts for e in stream) >= 0.0
+
+    def test_full_trace_mode(self):
+        stream = EventStream(capacity=100, full_trace=True)
+        for i in range(500):
+            stream.emit(Event(ts=i * 1e-3, kind=EventKind.EGRESS_PKT,
+                              node=0))
+        assert len(stream) == 500
+        assert stream.total_events == 500
+
+    def test_subscriber_batch_fanout(self):
+        stream = EventStream()
+        seen = []
+        stream.subscribe(lambda b: seen.append(len(b)))
+        b = EventBatchBuilder()
+        b.add_many([0.1, 0.2], kind=EventKind.EGRESS_PKT, node=0)
+        stream.emit_batch(b.build())
+        stream.emit(Event(ts=0.3, kind=EventKind.EGRESS_PKT, node=0))
+        assert seen == [2, 1]
+
+
+class TestSampledTiming:
+    def test_ns_per_event_from_sampled_windows(self):
+        plane = TelemetryPlane(n_nodes=1, mitigate=False)
+        rng = random.Random(3)
+        for ev in sorted(_random_trace(rng, 400), key=lambda e: e.ts):
+            plane.observe(ev)
+        stats = plane.stats
+        assert stats.events == 400
+        assert 0 < stats.timed_events < stats.events
+        assert plane.report()["ns_per_event"] >= 0.0
+
+    def test_batch_path_counts_all_events(self):
+        plane = TelemetryPlane(n_nodes=1, mitigate=False)
+        rng = random.Random(4)
+        evs = sorted(_random_trace(rng, 300), key=lambda e: e.ts)
+        for i in range(0, 300, 30):
+            plane.observe_batch(EventBatch.from_events(evs[i:i + 30]))
+        assert plane.stats.events == 300
+        assert plane.stats.timed_events > 0
