@@ -1,9 +1,11 @@
 """Benchmark harness: one function per paper table. Prints
 ``name,us_per_call,derived`` CSV rows (see tables.py for definitions);
 ``--json PATH`` additionally writes the rows as a JSON artifact (used by CI
-to archive benchmark history)."""
+to archive benchmark history); ``--seed N`` threads a seed into every table
+function that accepts one, so perf rows are reproducible run-to-run."""
 
 import argparse
+import inspect
 import json
 import os
 import sys
@@ -15,6 +17,8 @@ def main() -> None:
                     help="substring filter on table function names")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as a JSON array to PATH")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="seed for tables with a seed parameter")
     args = ap.parse_args()
 
     from benchmarks.tables import ALL_TABLES
@@ -24,8 +28,12 @@ def main() -> None:
     for fn in ALL_TABLES:
         if args.only and args.only not in fn.__name__:
             continue
+        kwargs = {}
+        if (args.seed is not None
+                and "seed" in inspect.signature(fn).parameters):
+            kwargs["seed"] = args.seed
         try:
-            for name, us, derived in fn():
+            for name, us, derived in fn(**kwargs):
                 print(f"{name},{us:.1f},{derived}", flush=True)
                 records.append({"name": name, "us_per_call": us,
                                 "derived": derived})

@@ -214,15 +214,14 @@ def telemetry_perf() -> list[tuple]:
     ]
 
 
-def _table3(table: str) -> list[tuple]:
+def _table3(table: str, seed: int = 0) -> list[tuple]:
     from repro.core.runbooks import BY_TABLE
     from repro.sim import SCENARIOS, run_scenario
     rows = []
     for entry in BY_TABLE[table]:
-        sc = SCENARIOS[entry.scenario]
+        sc = SCENARIOS[entry.scenario].variant(seed=seed)
         t0 = time.perf_counter()
-        metrics, plane, _ = run_scenario(
-            dataclasses.replace(sc.fault), sc.params, sc.workload)
+        metrics, plane, _ = run_scenario(sc.fault, sc.params, sc.workload)
         wall = (time.perf_counter() - t0) * 1e6
         fired = {f.name for f in plane.findings}
         hit = entry.row_id in fired
@@ -232,9 +231,8 @@ def _table3(table: str) -> list[tuple]:
                      f"hit={int(hit)};detect_latency_s={det_latency:.3f};"
                      f"co_fired={len(fired - {entry.row_id})}"))
     # healthy false-positive budget for this table's detectors
-    sc = SCENARIOS["healthy"]
-    _, plane, _ = run_scenario(dataclasses.replace(sc.fault), sc.params,
-                               sc.workload)
+    sc = SCENARIOS["healthy"].variant(seed=seed)
+    _, plane, _ = run_scenario(sc.fault, sc.params, sc.workload)
     fps = [f for f in plane.findings
            if any(e.row_id == f.name for e in BY_TABLE[table])]
     rows.append((f"table{table}/healthy_false_positives", 0.0,
@@ -242,23 +240,135 @@ def _table3(table: str) -> list[tuple]:
     return rows
 
 
-def table3a() -> list[tuple]:
-    return _table3("3a")
+def table3a(seed: int = 0) -> list[tuple]:
+    return _table3("3a", seed)
 
 
-def table3b() -> list[tuple]:
-    return _table3("3b")
+def table3b(seed: int = 0) -> list[tuple]:
+    return _table3("3b", seed)
 
 
-def table3c() -> list[tuple]:
-    return _table3("3c")
+def table3c(seed: int = 0) -> list[tuple]:
+    return _table3("3c", seed)
 
 
-def table3d() -> list[tuple]:
-    return _table3("3d")
+def table3d(seed: int = 0) -> list[tuple]:
+    return _table3("3d", seed)
 
 
-def router_policies() -> list[tuple]:
+def sim_perf(seed: int = 0) -> list[tuple]:
+    """Producer-plane synthesis throughput: columnar vs per-event reference.
+
+    Mirrors ``telemetry_perf`` for the *producer* side.  Two lanes run the
+    table-3a scenario mix at line-rate scale (``SIM_PERF_SCALE`` x nodes
+    and arrival rate, default 16 -> 64 nodes) into a trace recorder:
+
+      columnar     — vectorized synthesis, ring-DMA flush windows
+      scalar_synth — the per-event reference: same seeded RNG stream and
+                     row order, one ``add`` per event, per-round flush
+                     (the pre-columnar producer's cadence)
+
+    Both lanes must synthesize the identical event multiset (asserted via
+    a full-column lexicographic sort); finding parity at canonical scale
+    is asserted against the committed golden fixtures
+    (``tests/golden/scenario_findings.json``).  A final row times a full
+    scenario-registry sweep through ``repro.sim.sweep``.
+    """
+    import json
+    import os
+
+    from repro.core.events import BATCH_COLUMNS, EventTraceRecorder
+    from repro.core.runbooks import BY_TABLE
+    from repro.sim import SCENARIOS, SweepConfig, run_sweep
+    from repro.sim.cluster import ClusterSim
+
+    scale = int(os.environ.get("SIM_PERF_SCALE", "16"))
+    reps = int(os.environ.get("SIM_PERF_REPS", "2"))
+    names = [e.scenario for e in BY_TABLE["3a"]]
+
+    def lane(scalar: bool):
+        best_dt, events, traces = float("inf"), 0, None
+        for _ in range(reps):
+            dt_tot, ev_tot, tr = 0.0, 0, []
+            for name in names:
+                sc = SCENARIOS[name].variant(seed=seed,
+                                             scalar_synth=scalar,
+                                             scale=scale)
+                params = dataclasses.replace(
+                    sc.params, flush_events=1 if scalar else 65536)
+                wl = dataclasses.replace(sc.workload,
+                                         duration=params.duration * 0.98)
+                rec = EventTraceRecorder()
+                sim = ClusterSim(params, wl, sc.fault, plane=rec)
+                t0 = time.perf_counter()
+                sim.run()
+                dt_tot += time.perf_counter() - t0
+                ev_tot += sum(len(b) for b in rec.batches)
+                tr.append(rec.batches)
+            if dt_tot < best_dt:
+                best_dt, events, traces = dt_tot, ev_tot, tr
+        return best_dt, events, traces
+
+    def canon(batches):
+        """Order-independent canonical form of one scenario's trace."""
+        cols = [np.concatenate([getattr(b, c) for b in batches])
+                for c in BATCH_COLUMNS]
+        order = np.lexsort(cols[::-1])
+        return [c[order] for c in cols]
+
+    dt_vec, ev_vec, tr_vec = lane(False)
+    dt_sca, ev_sca, tr_sca = lane(True)
+    identical = int(ev_vec == ev_sca and all(
+        all(np.array_equal(a, b) for a, b in zip(canon(tv), canon(ts_)))
+        for tv, ts_ in zip(tr_vec, tr_sca)))
+
+    # golden-fixture finding parity at canonical scale (the committed
+    # fixture is generated from the scalar reference path)
+    golden_path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "tests", "golden",
+        "scenario_findings.json")
+    parity, checked = 1, 0
+    with open(golden_path) as fh:
+        golden = json.load(fh)["scenarios"]
+    from repro.sim import run_scenario
+    for name in names:
+        sc = SCENARIOS[name].variant(scalar_synth=False)
+        _, plane, _ = run_scenario(sc.fault, sc.params, sc.workload)
+        got = [[f.name, f.node, f.ts, f.severity, f.score]
+               for f in plane.findings]
+        checked += 1
+        if got != golden[name]["findings"]:
+            parity = 0
+
+    sweep_scenarios = (("healthy", "tp_straggler", "hot_replica")
+                       if os.environ.get("SIM_PERF_SWEEP") == "smoke"
+                       else None)      # None = the whole registry
+    sweep = run_sweep(SweepConfig(seeds=(seed,),
+                                  scenarios=sweep_scenarios))
+    summ = sweep.summary()
+
+    def row(label, dt, ev, extra=""):
+        return (f"sim_perf/{label}", dt / max(ev, 1) * 1e6,
+                f"events={ev};events_per_sec={ev / dt:.0f};"
+                f"scale={scale};reps={reps}" + extra)
+
+    return [
+        row("columnar", dt_vec, ev_vec,
+            f";speedup={dt_sca / dt_vec * ev_vec / max(ev_sca, 1):.2f};"
+            f"identical_traces={identical};golden_parity={parity};"
+            f"golden_checked={checked}"),
+        row("scalar_synth", dt_sca, ev_sca,
+            f";identical_traces={identical}"),
+        (f"sim_perf/registry_sweep", sweep.wall_s * 1e6,
+         f"cells={summ['cells']};workers={summ['workers']};"
+         f"wall_s={summ['wall_s']};events={summ['events']};"
+         f"events_per_sec={summ['events_per_sec']};"
+         f"hit_rate={summ['hit_rate']:.3f};"
+         f"healthy_false_positives={summ['healthy_false_positives']}"),
+    ]
+
+
+def router_policies(seed: int = 0) -> list[tuple]:
     """Cross-replica router: policies vs throughput / TTFT under a bursty,
     flow-skewed workload (4 single-node DP replicas, no injected fault —
     the policy itself is the variable)."""
@@ -266,12 +376,14 @@ def router_policies() -> list[tuple]:
     from repro.serving.router import POLICIES
     rows = []
     dur = 4.0
-    wl = WorkloadSpec(rate=65.0, duration=dur - 0.1, decode_mean=48,
+    # rate 55 / seed 13: partially-loaded regime where routing policy
+    # matters (see tests/test_router.py's closed-loop headline)
+    wl = WorkloadSpec(rate=55.0, duration=dur - 0.1, decode_mean=48,
                       decode_cv=0.6, burst_factor=8.0, flow_skew=1.2,
-                      seed=42)
+                      seed=13 + 2003 * seed)
     for policy in POLICIES:
         params = SimParams(n_nodes=4, n_replicas=4, router_policy=policy,
-                           duration=dur, seed=3)
+                           duration=dur, seed=3 + 1009 * seed)
         t0 = time.perf_counter()
         m, _, sim = run_scenario(FaultSpec(start=1e9), params, wl,
                                  mitigate=False)
@@ -400,7 +512,7 @@ def roofline_readout() -> list[tuple]:
 
 
 ALL_TABLES = [
-    table1_archzoo, table2_signals, telemetry_perf, table3a, table3b,
-    table3c, table3d, router_policies, mitigation_loop, serving_engine,
-    kernels_bench, roofline_readout,
+    table1_archzoo, table2_signals, telemetry_perf, sim_perf, table3a,
+    table3b, table3c, table3d, router_policies, mitigation_loop,
+    serving_engine, kernels_bench, roofline_readout,
 ]

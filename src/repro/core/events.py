@@ -213,24 +213,40 @@ class EventBatch:
 class EventBatchBuilder:
     """Columnar accumulator for one emission phase.
 
-    ``add``/``add_event`` append one row; ``add_many`` appends a column
-    vector with scalar broadcast (the per-phase bulk path — a simulator
-    phase that emits N egress packets pushes one list of timestamps and
-    one list of flows instead of N records).  ``build`` freezes the columns
-    into a time-sorted :class:`EventBatch`.
+    Three append granularities, freely mixable (insertion order preserved):
+
+      ``add``/``add_event`` — one row (the scalar compatibility path);
+      ``add_many``          — row-staged bulk append: ``ts`` plus per-column
+                              sequences/arrays or scalar broadcast;
+      ``add_columns``       — the line-rate path: whole numpy column arrays
+                              are appended as a chunk with no per-row Python
+                              work (a simulator phase that synthesizes N
+                              egress packets hands over N-row arrays once).
+
+    ``build`` freezes everything into a time-sorted :class:`EventBatch`.
+    Arrays passed to ``add_columns`` are adopted by the builder and must not
+    be mutated by the caller afterwards.
     """
 
-    __slots__ = ("_cols",)
+    __slots__ = ("_cols", "_chunk_cols", "_chunk_sizes")
 
     def __init__(self) -> None:
+        # row staging (scalar adds) + sealed column chunks, in insertion
+        # order: staged rows are sealed into a chunk whenever a column
+        # chunk arrives, so build() sees one ordered chunk list
         self._cols: list[list] = [[] for _ in BATCH_COLUMNS]
+        self._chunk_cols: list[list] = [[] for _ in BATCH_COLUMNS]
+        self._chunk_sizes: list[int] = []
 
     def __len__(self) -> int:
-        return len(self._cols[0])
+        return sum(self._chunk_sizes) + len(self._cols[0])
 
     def clear(self) -> None:
         for c in self._cols:
             c.clear()
+        for c in self._chunk_cols:
+            c.clear()
+        self._chunk_sizes.clear()
 
     def add(self, ts: float, kind: int, node: int, device: int = -1,
             flow: int = -1, size: int = 0, depth: int = 0, op: int = -1,
@@ -255,25 +271,118 @@ class EventBatchBuilder:
     def add_many(self, ts: Sequence[float], kind: int, node=0, device=-1,
                  flow=-1, size=0, depth=0, op=-1, group=-1, meta=0,
                  replica=-1) -> None:
-        """Bulk append: ``ts`` is a sequence; every other column is either a
-        same-length sequence or a scalar broadcast across the rows."""
+        """Bulk append: ``ts`` is a sequence (list/tuple/ndarray); every
+        other column is a same-length sequence/array or a scalar broadcast
+        across the rows.  Lengths are validated; mismatches raise."""
         n = len(ts)
         if n == 0:
             return
+        vals = (kind, node, device, flow, size, depth, op, group, meta,
+                replica)
+        # validate every column length BEFORE extending any row staging,
+        # so a raised error cannot leave ragged partial rows behind
+        for i, v in enumerate(vals, start=1):
+            if isinstance(v, np.ndarray):
+                if v.shape != (n,):
+                    raise ValueError(
+                        f"add_many: column {BATCH_COLUMNS[i]} has shape "
+                        f"{v.shape}, expected ({n},)")
+            elif isinstance(v, (list, tuple)) and len(v) != n:
+                raise ValueError(
+                    f"add_many: column {BATCH_COLUMNS[i]} has length "
+                    f"{len(v)}, expected {n}")
         c = self._cols
-        c[0].extend(ts)
-        for i, v in enumerate((kind, node, device, flow, size, depth, op,
-                               group, meta, replica), start=1):
-            if isinstance(v, (list, tuple)):
+        c[0].extend(ts.tolist() if isinstance(ts, np.ndarray) else ts)
+        for i, v in enumerate(vals, start=1):
+            if isinstance(v, np.ndarray):
+                c[i].extend(v.tolist())
+            elif isinstance(v, (list, tuple)):
                 c[i].extend(v)
             else:
                 c[i].extend(itertools.repeat(int(v), n))
 
+    def add_columns(self, ts, kind, node=0, device=-1, flow=-1, size=0,
+                    depth=0, op=-1, group=-1, meta=0, replica=-1) -> None:
+        """Append whole column arrays as one chunk — zero per-row work.
+
+        ``ts`` is a 1-D float array (or sequence); every other column is a
+        same-length integer array or a scalar, broadcast lazily at
+        ``build`` time (scalars are stored as-is, so an N-row chunk with
+        ten scalar columns costs one array, not eleven).  Dtypes are
+        validated: integer columns reject float arrays rather than
+        silently truncating.
+        """
+        if type(ts) is not np.ndarray or ts.dtype != np.float64:
+            ts = np.asarray(ts, np.float64)
+        if ts.ndim != 1:
+            raise ValueError(f"add_columns: ts must be 1-D, got {ts.shape}")
+        n = ts.shape[0]
+        if n == 0:
+            return
+        # validate/cook every column BEFORE touching builder state, so a
+        # raised error cannot leave orphaned column fragments behind
+        cooked = [ts]
+        i = 1
+        for v in (kind, node, device, flow, size, depth, op, group, meta,
+                  replica):
+            if isinstance(v, np.ndarray):
+                if v.shape != (n,):
+                    raise ValueError(
+                        f"add_columns: column {BATCH_COLUMNS[i]} has shape "
+                        f"{v.shape}, expected ({n},)")
+                if v.dtype != np.int64:
+                    if not np.issubdtype(v.dtype, np.integer):
+                        raise TypeError(
+                            f"add_columns: column {BATCH_COLUMNS[i]} has "
+                            f"dtype {v.dtype}; integer required")
+                    v = v.astype(np.int64)
+                cooked.append(v)
+            else:
+                cooked.append(int(v))
+            i += 1
+        if self._cols[0]:
+            self._seal_rows()
+        chunk_cols = self._chunk_cols
+        for i, v in enumerate(cooked):
+            chunk_cols[i].append(v)
+        self._chunk_sizes.append(n)
+
+    def _seal_rows(self) -> None:
+        if not self._cols[0]:
+            return
+        self._chunk_sizes.append(len(self._cols[0]))
+        self._chunk_cols[0].append(np.asarray(self._cols[0], np.float64))
+        for i in range(1, len(BATCH_COLUMNS)):
+            self._chunk_cols[i].append(np.asarray(self._cols[i], np.int64))
+        for c in self._cols:
+            c.clear()
+
     def build(self, sort: bool = True) -> EventBatch:
-        c = self._cols
-        ts = np.asarray(c[0], np.float64)
-        cols = [ts] + [np.asarray(col, np.int64) for col in c[1:]]
-        if sort and len(ts) > 1 and np.any(ts[1:] < ts[:-1]):
+        self._seal_rows()
+        sizes = self._chunk_sizes
+        if not sizes:
+            return EventBatch.empty()
+        if len(sizes) == 1:
+            n = sizes[0]
+            cols = [self._chunk_cols[0][0]]
+            for col in self._chunk_cols[1:]:
+                v = col[0]
+                cols.append(v if isinstance(v, np.ndarray)
+                            else np.full(n, v, np.int64))
+        else:
+            # preallocate + slice-fill: scalar chunks become C-level fills
+            # instead of materialized broadcast arrays
+            total = sum(sizes)
+            cols = [np.concatenate(self._chunk_cols[0])]
+            for col in self._chunk_cols[1:]:
+                out = np.empty(total, np.int64)
+                pos = 0
+                for v, n in zip(col, sizes):
+                    out[pos:pos + n] = v
+                    pos += n
+                cols.append(out)
+        ts = cols[0]
+        if sort and ts.shape[0] > 1 and np.any(ts[1:] < ts[:-1]):
             order = np.argsort(ts, kind="stable")
             cols = [col[order] for col in cols]
         return EventBatch(*cols)

@@ -219,6 +219,8 @@ class InferenceEngine:
                    size=len(slots) * 4)
         self.stats["steps"] += 1
         nxt = np.asarray(jnp.argmax(logits[:, 0, -1], axis=-1))
+        eg_flow: list[int] = []
+        eg_meta: list[int] = []
         for s in slots:
             req = self.sched.running[s]
             if req.first_token < 0:
@@ -228,14 +230,22 @@ class InferenceEngine:
             self.pool.extend(req.req_id)
             self._slot_next_token[s] = int(nxt[s])
             fin = req.tokens_out >= req.max_new_tokens
-            self._emit(EventKind.EGRESS_PKT, flow=req.req_id,
-                       size=8 if not self.kv_compress else 4,
-                       group=self.cfg.node,
-                       meta=META_FIN if fin else 0)
+            eg_flow.append(req.req_id)
+            eg_meta.append(META_FIN if fin else 0)
             if fin:
                 self.sched.release(s, self.clock)
                 self.pool.free(req.req_id)
                 self.completed.append(req)
+        # token egress leaves as one columnar append per step (the same
+        # bulk path the simulator's producer plane uses)
+        if self.plane is not None and eg_flow:
+            self._pending.add_columns(
+                np.full(len(eg_flow), self.clock), EventKind.EGRESS_PKT,
+                node=self.cfg.node,
+                flow=np.asarray(eg_flow, np.int64),
+                size=8 if not self.kv_compress else 4,
+                group=self.cfg.node,
+                meta=np.asarray(eg_meta, np.int64))
         # KV occupancy sample (Table 2b)
         self._emit(EventKind.QUEUE_SAMPLE,
                    depth=int(self.pool.occupancy() * 100),

@@ -43,6 +43,8 @@ from __future__ import annotations
 import random
 from dataclasses import dataclass, field
 
+import numpy as np
+
 from repro.core.events import EventBatchBuilder, EventKind
 
 
@@ -358,15 +360,19 @@ class ReplicaSet:
         self._pending = EventBatchBuilder() if plane is not None else None
 
     def refresh(self, now: float = 0.0) -> None:
+        depths: list[int] = []
         for i, eng in enumerate(self.engines):
             snap = engine_snapshot(eng, i, now)
             self.router.observe(snap)
-            if self._pending is not None:
-                # meta 0 == META_DIR_INGRESS: the front-end's per-replica
-                # ingress queue depth, as a NIC-side queue sample
-                self._pending.add(ts=now, kind=EventKind.QUEUE_SAMPLE,
-                                  node=i, depth=snap.queue_depth, meta=0,
-                                  replica=i)
+            depths.append(snap.queue_depth)
+        if self._pending is not None:
+            # meta 0 == META_DIR_INGRESS: the front-end's per-replica
+            # ingress queue depths, one columnar append per refresh
+            ids = np.arange(len(self.engines), dtype=np.int64)
+            self._pending.add_columns(
+                np.full(len(depths), now), EventKind.QUEUE_SAMPLE,
+                node=ids, depth=np.asarray(depths, np.int64), meta=0,
+                replica=ids)
 
     def flush_telemetry(self) -> None:
         """Hand buffered front-end telemetry to the plane as one batch."""

@@ -2,10 +2,12 @@
 
 from repro.sim.cluster import ClusterSim, FaultSpec, SimMetrics, SimParams, run_scenario
 from repro.sim.faults import SCENARIOS, Scenario, make_scenarios
+from repro.sim.sweep import SweepConfig, SweepReport, SweepResult, run_sweep
 from repro.sim.workload import Request, WorkloadSpec, generate
 
 __all__ = [
     "ClusterSim", "FaultSpec", "SCENARIOS", "Scenario", "SimMetrics",
-    "SimParams", "Request", "WorkloadSpec", "generate", "make_scenarios",
-    "run_scenario",
+    "SimParams", "Request", "SweepConfig", "SweepReport", "SweepResult",
+    "WorkloadSpec", "generate", "make_scenarios", "run_scenario",
+    "run_sweep",
 ]

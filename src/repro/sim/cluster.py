@@ -13,7 +13,17 @@ The simulator serves three purposes:
   2. *Closed-loop evaluation* (§5): the sim implements ``EngineControls``;
      the mitigation controller's actions actually remove the fault effect,
      so throughput/latency deltas quantify the benefit.
-  3. *Benchmark substrate* for Tables 3(a)/(b)/(c).
+  3. *Benchmark substrate* for Tables 3(a)/(b)/(c)/(d) and the sweep runner.
+
+Event synthesis is columnar-native: each phase computes whole-round numpy
+column arrays (timestamps, sizes, flows, retransmit masks via vectorized
+Bernoulli draws) and hands them to ``EventBatchBuilder.add_columns`` — the
+producer mirror of the PR-2 consumer plane.  ``SimParams.scalar_synth=True``
+replays the *same* columns through per-row ``add`` calls (the per-event
+reference path): both paths draw from one seeded ``np.random.Generator``
+and stage rows in the same order, so they produce bit-identical batches —
+detector-finding parity holds by construction and is pinned by the golden
+per-scenario fixtures in ``tests/golden/``.
 
 Fidelity notes: timing constants approximate a TP-sharded decode loop at a
 2 ms step cadence.  The sim is NOT a queueing-theoretic model of a specific
@@ -24,9 +34,11 @@ sizes, and gaps).
 
 from __future__ import annotations
 
-import math
-import random
+from bisect import bisect_left
+from collections import deque
 from dataclasses import dataclass, field
+
+import numpy as np
 
 from repro.core.detectors import (
     META_DIR_EGRESS,
@@ -70,6 +82,17 @@ class SimParams:
     # pathologies (paper: "no remap of freed resources") set this False.
     continuous_batching: bool = True
     seed: int = 0
+    # True = per-event reference synthesis (same draws, row-at-a-time
+    # emission); the golden-fixture parity tests pin vectorized == scalar
+    scalar_synth: bool = False
+    # flush the accumulated columns to the plane once this many rows are
+    # staged.  Default 1 = flush every round (the detector-validated
+    # cadence: batches delivered round-major, as the PR-2 consumer plane
+    # expects).  Line-rate producer benchmarks raise this to ring-DMA
+    # window sizes (e.g. 65536); the telemetry plane splits any batch at
+    # poll boundaries either way.  With a mitigation controller attached
+    # the sim flushes every round regardless, so actuation stays prompt.
+    flush_events: int = 1
 
 
 @dataclass
@@ -162,8 +185,20 @@ class SimMetrics:
         return self.slot_rounds_idle / tot if tot else 0.0
 
 
+#: rows of the per-node active-request mirror array
+MIR_FLOW, MIR_DEC, MIR_PROMPT, MIR_DEV, MIR_REM = range(5)
+
+
 class ClusterSim:
-    """Round-driven simulator; implements EngineControls for the closed loop."""
+    """Round-driven simulator; implements EngineControls for the closed loop.
+
+    The hot path is phase-major: each round, every emission phase computes
+    its column arrays across ALL nodes at once and appends them in one
+    ``add_columns`` call.  Request/queue bookkeeping (admission, slot
+    refill, completion) stays scalar — it is a few dozen objects per round —
+    while the event volume (tens of thousands of rows per second of sim
+    time) never touches per-row Python on the vectorized path.
+    """
 
     def __init__(self, params: SimParams, workload: WorkloadSpec,
                  fault: FaultSpec | None = None,
@@ -175,14 +210,66 @@ class ClusterSim:
         self.p = params
         self.fault = fault or FaultSpec()
         self.plane = plane
-        self.rng = random.Random(params.seed ^ 0xD0)
+        # one seeded Generator feeds BOTH synthesis paths: the scalar
+        # reference replays the vectorized draws row-by-row, so parity
+        # never depends on matching two RNG implementations
+        self.rng = np.random.default_rng(params.seed ^ 0xD0)
+        self.scalar_synth = params.scalar_synth
         self.requests = generate(workload)
         if self.fault.early_stop_skew:
             self._skew_decode_lengths()
+        # arrival-sorted admission backlog consumed by an index cursor
+        # (a pop(0) list is O(n^2) across a bursty run)
         self.pending: list[Request] = sorted(self.requests,
                                              key=lambda r: r.arrival)
-        self.queues: list[list[Request]] = [[] for _ in range(params.n_nodes)]
+        self._pend_i = 0
+        self.queues: list[deque[Request]] = [deque()
+                                             for _ in range(params.n_nodes)]
+        # incrementally-maintained sum(max(decode_len,1)) per queue so the
+        # router view refresh is O(replicas), not O(queued requests)
+        self._queued_work: list[int] = [0] * params.n_nodes
         self.active: list[list[Request]] = [[] for _ in range(params.n_nodes)]
+        # SoA mirrors of the active lists (index-aligned): the decode-round
+        # hot path reads/updates these as whole arrays; the Request objects
+        # only back completion metadata.  ``_act_tok`` is authoritative for
+        # in-flight token counts (synced back to objects on completion and
+        # at end of run).
+        n_nodes = params.n_nodes
+        # one (5, n_active) int64 array per node; rows are MIR_* below.
+        # Token accounting is lazy: the REM row holds remaining-token
+        # counts as of the last fold; ``_tok_off`` counts egress rounds
+        # since then (true remaining = rem - off).  ``_rem_min`` gates the
+        # completion scan so the common no-completion round costs zero
+        # numpy; ``_kv_base`` caches sum(prompt + consumed-at-fold) so KV
+        # occupancy is O(1) per sample.
+        self._mir = [np.empty((5, 0), np.int64) for _ in range(n_nodes)]
+        self._mver = 0            # membership version (cache invalidation)
+        self._tok_off = [0] * n_nodes
+        self._rem_min = [1 << 60] * n_nodes
+        self._kv_base = [0] * n_nodes
+        # fused per-round column templates (rebuilt when membership or the
+        # running-node set changes)
+        self._eg_key = None
+        self._eg_tmpl: dict | None = None
+        self._disp_key = None
+        self._disp_tmpl: tuple | None = None
+        self._rt_key = None
+        self._rt_tmpl: tuple | None = None
+        self._nic_key = None
+        self._nic_tmpl: tuple | None = None
+        # live per-device sequence counts (drives placement, doorbells, D2H)
+        self._dev_count = [[0] * params.devices_per_node
+                           for _ in range(n_nodes)]
+        # sorted (node, device) pairs with live sequences + parallel D2H
+        # byte sizes, maintained incrementally (bisect) so doorbell/D2H
+        # columns never need a full node x device scan per round
+        self._pairs: list[tuple[int, int]] = []
+        self._pair_sizes: list[int] = []
+        self._pairs_dirty = True
+        self._pairs_node = np.empty(0, np.int64)
+        self._pairs_dev = np.empty(0, np.int64)
+        self._pairs_off = np.empty(0, np.float64)
+        self._ar_eg = np.arange(params.slots_per_node) * 2e-6
         self.batch_open: list[bool] = [True] * params.n_nodes
         self.metrics = SimMetrics()
         self.round = 0
@@ -190,12 +277,34 @@ class ClusterSim:
         self._next_credit = 0.0
         self._egress_backlog = [0.0] * params.n_nodes
         self._pp_extra_gap = 0.0
-        # columnar emission: phases append rows to one builder per round;
-        # the built batch goes to the plane in one observe_batch call
+        # columnar emission: phases record column chunks into a deferred
+        # accumulator; flushes merge them per kind into one builder whose
+        # batch goes to the plane at ring-DMA granularity
         self._batch = EventBatchBuilder()
+        self._acc: list[tuple] = []
+        self._acc_rows = 0
         self._continuous = params.continuous_batching
+        # prefill H2D specs collected during slot refill, emitted per round
+        self._pref_ts: list[float] = []
+        self._pref_nodes: list[int] = []
+        self._pref_devs: list[int] = []
+        self._pref_bytes: list[int] = []
+        self._pref_flows: list[int] = []
+        # cached constant column templates (node/device/flow grids repeat
+        # every round; add_columns adopts them read-only)
+        self._tmpl_h2d: dict[tuple, tuple] = {}
+        self._tmpl_pp: dict[tuple, tuple] = {}
+        self._tmpl_p2p: dict[tuple, tuple] = {}
+        self._tmpl_kv: dict[tuple, tuple] = {}
+        self._tmpl_sample: dict[int, tuple] = {}
+        self._all_nodes = np.arange(params.n_nodes, dtype=np.int64)
+        fa = self.fault
+        self._h2d_knobs = (fa.skew_device is not None or fa.h2d_split > 1
+                           or fa.reg_churn or fa.pcie_background_frac > 0)
         # --- data-parallel replica dimension ---
         self.nodes_per_replica = params.n_nodes // params.n_replicas
+        self._replica_ids = np.arange(params.n_replicas, dtype=np.int64)
+        self._replica_lo = self._replica_ids * self.nodes_per_replica
         self.router = Router(params.n_replicas,
                              policy=params.router_policy,
                              staleness=params.router_staleness,
@@ -233,10 +342,12 @@ class ClusterSim:
             backlog.extend(q)
             q.clear()
         backlog.sort(key=lambda r: r.arrival)
+        self._queued_work = [0] * self.p.n_nodes
         for i, r in enumerate(backlog):
             node = i % self.p.n_nodes
             r.node = node
             self.queues[node].append(r)
+            self._queued_work[node] += max(r.decode_len, 1)
 
     # ------------------------------------------------------------------
     # main loop
@@ -245,22 +356,182 @@ class ClusterSim:
     def run(self) -> SimMetrics:
         t = 0.0
         p = self.p
+        # a live controller must see findings the round they happen —
+        # closed-loop actuation timing is part of the experiment
+        per_round = (self.plane is not None
+                     and getattr(self.plane, "controller", None) is not None)
+        flush_events = max(int(p.flush_events), 1)
         while t < p.duration:
-            self._batch.clear()
             self._admit(t)
             self._sample_queues(t)
             self._decode_round(t)
             self._credits(t)
-            if self.plane is not None:
-                self.plane.observe_batch(self._batch.build(sort=True))
-                if (self.metrics.first_finding_ts < 0 and self.plane.findings):
-                    for f in self.plane.findings:
-                        if f.name == self.fault.row_id:
-                            self.metrics.first_finding_ts = f.ts
-                            break
+            if self.plane is not None and (
+                    per_round or self._acc_rows >= flush_events):
+                self._flush()
             self.round += 1
             t += p.decode_step
+        if self.plane is not None:
+            self._flush()
+        # mirrors are authoritative for in-flight token counts; sync the
+        # objects so post-run inspection sees consistent state
+        for nd in range(p.n_nodes):
+            self._fold_tokens(nd)
+            mir = self._mir[nd]
+            rem = mir[MIR_REM].tolist()
+            dec = mir[MIR_DEC].tolist()
+            for i, r in enumerate(self.active[nd]):
+                r.tokens_out = dec[i] - rem[i]
         return self.metrics
+
+    def _flush(self) -> None:
+        self._assemble()
+        if len(self._batch) == 0:
+            return
+        self.plane.observe_batch(self._batch.build(sort=True))
+        self._batch.clear()
+        if self.metrics.first_finding_ts < 0 and self.plane.findings:
+            for f in self.plane.findings:
+                if f.name == self.fault.row_id:
+                    self.metrics.first_finding_ts = f.ts
+                    break
+
+    # ------------------------------------------------------------------
+    # columnar emission core
+    # ------------------------------------------------------------------
+
+    def _emit_cols(self, ts, kind: EventKind, node=0, device=-1, flow=-1,
+                   size=0, depth=0, op=-1, group=-1, meta=0,
+                   replica=-1) -> None:
+        """Record one phase-call's columns (``ts`` array + array/scalar
+        columns).  Emission is deferred: calls accumulate per flush window
+        and are merged per event kind at assemble time, so the builder
+        sees one chunk per kind per window instead of one per phase-round.
+        """
+        if type(ts) is tuple:
+            n = ts[1]      # (scalar_ts, count): broadcast at assemble time
+        else:
+            if type(ts) is not np.ndarray:
+                ts = np.asarray(ts, np.float64)
+            n = ts.shape[0]
+        if n == 0:
+            return
+        self._acc.append((int(kind), ts, (node, device, flow, size, depth,
+                                          op, group, meta, replica)))
+        self._acc_rows += n
+
+    def _assemble(self) -> None:
+        """Merge the accumulated phase calls into builder chunks.
+
+        Calls are grouped by event kind (group order = first occurrence,
+        i.e. the fixed per-round phase sequence); within a group, call
+        order is kept.  The scalar_synth reference path replays the same
+        grouped sequence through per-row ``add`` calls, so both paths
+        stage identical rows in identical order — bit-identical batches
+        after the stable time sort.
+        """
+        acc = self._acc
+        if not acc:
+            return
+        groups: dict[int, list] = {}
+        for call in acc:
+            g = groups.get(call[0])
+            if g is None:
+                groups[call[0]] = g = []
+            g.append(call)
+        acc.clear()
+        self._acc_rows = 0
+        scalar = self.scalar_synth
+        for kind, calls in groups.items():
+            if scalar:
+                self._replay_rows(kind, calls)
+            elif len(calls) == 1:
+                _, ts, vals = calls[0]
+                if type(ts) is tuple:
+                    ts = np.full(ts[1], ts[0])
+                self._batch.add_columns(ts, kind, *vals)
+            else:
+                self._merge_calls(kind, calls)
+
+    def _merge_calls(self, kind: int, calls: list) -> None:
+        sizes = [ts[1] if type(ts) is tuple else ts.shape[0]
+                 for _, ts, _ in calls]
+        total = sum(sizes)
+        ts0 = calls[0][1]
+        if type(ts0) is not tuple and all(
+                type(c[1]) is not tuple for c in calls[1:]):
+            ts_col = np.concatenate([c[1] for c in calls])
+        else:
+            ts_col = np.empty(total, np.float64)
+            pos = 0
+            for n, c in zip(sizes, calls):
+                v = c[1]
+                ts_col[pos:pos + n] = v[0] if type(v) is tuple else v
+                pos += n
+        merged = [None] * 9
+        sizes_a = None
+        for i in range(9):
+            first = calls[0][2][i]
+            if type(first) is np.ndarray:
+                parts = []
+                pure = True
+                for c in calls:
+                    v = c[2][i]
+                    if type(v) is not np.ndarray:
+                        pure = False
+                        break
+                    parts.append(v)
+                if pure:
+                    merged[i] = np.concatenate(parts)
+                    continue
+            else:
+                mixed = False
+                uniform = True
+                for c in calls:
+                    v = c[2][i]
+                    if type(v) is np.ndarray:
+                        mixed = True
+                        break
+                    if v != first:
+                        uniform = False
+                if not mixed:
+                    if uniform:
+                        merged[i] = int(first)  # broadcast at build time
+                    else:
+                        if sizes_a is None:
+                            sizes_a = np.asarray(sizes, np.int64)
+                        merged[i] = np.repeat(np.asarray(
+                            [int(c[2][i]) for c in calls], np.int64),
+                            sizes_a)
+                    continue
+            # mixed arrays and scalars: segment-fill (rare — only when one
+            # kind is fed by producers of different shapes in one window)
+            out = np.empty(total, np.int64)
+            pos = 0
+            for n, c in zip(sizes, calls):
+                out[pos:pos + n] = c[2][i]
+                pos += n
+            merged[i] = out
+        self._batch.add_columns(ts_col, kind, *merged)
+
+    def _replay_rows(self, kind: int, calls: list) -> None:
+        # the per-event reference path: same rows, same order, one add()
+        # per event (what the pre-columnar producer paid per packet)
+        add = self._batch.add
+        for _, ts, vals in calls:
+            if type(ts) is tuple:
+                ts_l = [ts[0]] * ts[1]
+            else:
+                ts_l = ts.tolist()
+            n = len(ts_l)
+            cols = [v.tolist() if type(v) is np.ndarray else None
+                    for v in vals]
+            consts = [0 if c is not None else int(v)
+                      for v, c in zip(vals, cols)]
+            for i in range(n):
+                add(ts_l[i], kind,
+                    *(c[i] if c is not None else s
+                      for c, s in zip(cols, consts)))
 
     # ------------------------------------------------------------------
     # request admission / ingress path
@@ -269,12 +540,10 @@ class ClusterSim:
     def _skew_decode_lengths(self) -> None:
         # randomized so stragglers land on every node (a modular pattern
         # would alias with round-robin placement)
-        rng = random.Random(0xBEEF)
-        for r in self.requests:
-            r.decode_len = 400 if rng.random() < 0.25 else 8
-
-    def _emit(self, **kw) -> None:
-        self._batch.add(**kw)
+        rng = np.random.default_rng(0xBEEF)
+        long_mask = rng.random(len(self.requests)) < 0.25
+        for r, is_long in zip(self.requests, long_mask.tolist()):
+            r.decode_len = 400 if is_long else 8
 
     def _replica_of(self, node: int) -> int:
         return node // self.nodes_per_replica
@@ -297,64 +566,147 @@ class ClusterSim:
         return replica * self.nodes_per_replica + local
 
     def _admit(self, t: float) -> None:
-        p, f = self.p, self.fault
-        while self.pending and self.pending[0].arrival <= t:
-            r = self.pending.pop(0)
+        f = self.fault
+        pend = self.pending
+        i, n = self._pend_i, len(pend)
+        if i >= n or pend[i].arrival > t:
+            return
+        starve = f.ingress_starve_node if f.active(t) else -1
+        admitted: list[Request] = []
+        while i < n and pend[i].arrival <= t:
+            r = pend[i]
+            i += 1
             node = self._node_for(r, t)
-            if f.active(t) and f.ingress_starve_node == node:
+            if node == starve:
                 # upstream dried up: this node's share silently vanishes
                 continue
             r.node = node
-            self._ingress_packets(r, t)
             self.queues[node].append(r)
+            self._queued_work[node] += max(r.decode_len, 1)
+            admitted.append(r)
+        self._pend_i = i
+        if admitted:
+            self._ingress_phase(t, admitted)
 
-    def _ingress_packets(self, r: Request, t: float) -> None:
+    def _ingress_phase(self, t: float, admitted: list[Request]) -> None:
         p, f = self.p, self.fault
-        nbytes = r.prompt_len * 2  # token ids on the wire
-        npkt = max(1, min(8, math.ceil(nbytes / p.mtu)))
-        base = max(r.arrival, t - p.decode_step)
-        for j in range(npkt):
-            ts = base + j * 2e-5 + self.rng.random() * 1e-5
-            self._emit(ts=ts, kind=EventKind.INGRESS_PKT, node=r.node,
-                       flow=r.flow, size=min(nbytes, p.mtu),
-                       group=r.node)
-            if f.active(ts) and self.rng.random() < f.ingress_retx_p:
-                self._emit(ts=ts + 5e-4, kind=EventKind.RETRANSMIT,
-                           node=r.node, flow=r.flow, size=p.mtu,
-                           meta=META_DIR_INGRESS)
+        k = len(admitted)
+        retx_on = f.ingress_retx_p > 0.0 and not f.mitigated
+        if k <= 4:
+            # steady-state rounds admit a request or two: plain Python
+            # beats array setup at this size (draw structure stays
+            # per-request, shared by both synthesis paths)
+            floor_ts = t - p.decode_step
+            ts_l: list[float] = []
+            node_l: list[int] = []
+            flow_l: list[int] = []
+            size_l: list[int] = []
+            rt_ts: list[float] = []
+            rt_node: list[int] = []
+            rt_flow: list[int] = []
+            for r in admitted:
+                nbytes = r.prompt_len * 2   # token ids on the wire
+                npkt = (nbytes + p.mtu - 1) // p.mtu
+                if npkt > 8:
+                    npkt = 8
+                base = r.arrival if r.arrival > floor_ts else floor_ts
+                u = self.rng.random(npkt).tolist()
+                sz = nbytes if nbytes < p.mtu else p.mtu
+                for j in range(npkt):
+                    ts_l.append(base + j * 2e-5 + u[j] * 1e-5)
+                    node_l.append(r.node)
+                    flow_l.append(r.flow)
+                    size_l.append(sz)
+                if retx_on:
+                    u2 = self.rng.random(npkt).tolist()
+                    for j in range(npkt):
+                        ts_j = ts_l[j - npkt]
+                        if ts_j >= f.start and u2[j] < f.ingress_retx_p:
+                            rt_ts.append(ts_j + 5e-4)
+                            rt_node.append(r.node)
+                            rt_flow.append(r.flow)
+            if k == 1:
+                r = admitted[0]
+                self._emit_cols(np.asarray(ts_l), EventKind.INGRESS_PKT,
+                                node=r.node, flow=r.flow, size=size_l[0],
+                                group=r.node)
+            else:
+                node_a = np.asarray(node_l, np.int64)
+                self._emit_cols(np.asarray(ts_l), EventKind.INGRESS_PKT,
+                                node=node_a, flow=np.asarray(flow_l,
+                                                             np.int64),
+                                size=np.asarray(size_l, np.int64),
+                                group=node_a)
+            if rt_ts:
+                self._emit_cols(np.asarray(rt_ts), EventKind.RETRANSMIT,
+                                node=np.asarray(rt_node, np.int64),
+                                flow=np.asarray(rt_flow, np.int64),
+                                size=p.mtu, meta=META_DIR_INGRESS)
+            return
+        nbytes = np.fromiter((r.prompt_len for r in admitted),
+                             np.int64, k) * 2    # token ids on the wire
+        npkt = np.clip(-(-nbytes // p.mtu), 1, 8)
+        base = np.maximum(
+            np.fromiter((r.arrival for r in admitted), np.float64, k),
+            t - p.decode_step)
+        nodes = np.fromiter((r.node for r in admitted), np.int64, k)
+        flows = np.fromiter((r.flow for r in admitted), np.int64, k)
+        total = int(npkt.sum())
+        rep = np.repeat(np.arange(k), npkt)
+        ends = np.cumsum(npkt)
+        j = np.arange(total) - np.repeat(ends - npkt, npkt)
+        ts = base[rep] + j * 2e-5 + self.rng.random(total) * 1e-5
+        node_e, flow_e = nodes[rep], flows[rep]
+        self._emit_cols(ts, EventKind.INGRESS_PKT, node=node_e, flow=flow_e,
+                        size=np.minimum(nbytes, p.mtu)[rep], group=node_e)
+        if retx_on:
+            m = (ts >= f.start) & (self.rng.random(total) < f.ingress_retx_p)
+            if m.any():
+                self._emit_cols(ts[m] + 5e-4, EventKind.RETRANSMIT,
+                                node=node_e[m], flow=flow_e[m], size=p.mtu,
+                                meta=META_DIR_INGRESS)
 
     def _sample_queues(self, t: float) -> None:
         p, f = self.p, self.fault
         if t < self._next_queue_sample:
             return
         self._next_queue_sample = t + p.queue_sample_every
-        for node in range(p.n_nodes):
-            depth = len(self.queues[node])
-            self._emit(ts=t, kind=EventKind.QUEUE_SAMPLE, node=node,
-                       depth=depth, meta=META_DIR_INGRESS,
-                       replica=self._replica_of(node))
-            if f.active(t) and f.egress_backlog_rate > 0:
-                self._egress_backlog[node] += f.egress_backlog_rate
-            else:
-                self._egress_backlog[node] = max(
-                    0.0, self._egress_backlog[node] - 2.0)
-            self._emit(ts=t, kind=EventKind.QUEUE_SAMPLE, node=node,
-                       depth=int(self._egress_backlog[node]),
-                       meta=META_DIR_EGRESS,
-                       replica=self._replica_of(node))
-            if f.active(t) and f.fabric_jitter > 0:
-                self._emit(ts=t, kind=EventKind.QUEUE_SAMPLE, node=node,
-                           depth=20 + self.rng.randrange(20), meta=2)
+        n = p.n_nodes
+        if f.active(t) and f.egress_backlog_rate > 0:
+            r = f.egress_backlog_rate
+            self._egress_backlog = [b + r for b in self._egress_backlog]
+        else:
+            self._egress_backlog = [b - 2.0 if b > 2.0 else 0.0
+                                    for b in self._egress_backlog]
+        jitter = f.active(t) and f.fabric_jitter > 0
+        rows = 3 if jitter else 2
+        tmpl = self._tmpl_sample.get(rows)
+        if tmpl is None:
+            nodes = np.arange(n, dtype=np.int64)
+            reps = nodes // self.nodes_per_replica
+            rep_c = np.empty((n, rows), np.int64)
+            rep_c[:, 0] = reps
+            rep_c[:, 1] = reps
+            meta_row = [META_DIR_INGRESS, META_DIR_EGRESS]
+            if jitter:
+                rep_c[:, 2] = -1
+                meta_row.append(2)
+            tmpl = (np.repeat(nodes, rows),
+                    np.tile(np.asarray(meta_row, np.int64), n),
+                    rep_c.ravel())
+            self._tmpl_sample[rows] = tmpl
+        node_c, meta_c, rep_c = tmpl
+        # per-node interleave [ingress, egress(, jitter)] exactly as the
+        # scalar sim emitted them, so equal-ts stable order is preserved
+        depth_c = np.empty((n, rows), np.int64)
+        depth_c[:, 0] = [len(q) for q in self.queues]
+        depth_c[:, 1] = self._egress_backlog
+        if jitter:
+            depth_c[:, 2] = 20 + self.rng.integers(20, size=n)
+        self._emit_cols((t, n * rows), EventKind.QUEUE_SAMPLE,
+                        node=node_c, depth=depth_c.ravel(),
+                        meta=meta_c, replica=rep_c)
         self._refresh_router(t)
-
-    def _replica_kv_occupancy(self, replica: int) -> float:
-        p = self.p
-        lo = replica * self.nodes_per_replica
-        tokens = sum(r.prompt_len + r.tokens_out
-                     for node in range(lo, lo + self.nodes_per_replica)
-                     for r in self.active[node])
-        cap = self.nodes_per_replica * p.slots_per_node * p.kv_tokens_per_slot
-        return min(tokens / cap, 1.0) if cap else 0.0
 
     def _refresh_router(self, t: float) -> None:
         """Feed the router's view + emit the router-visible KV telemetry.
@@ -367,107 +719,143 @@ class ClusterSim:
         self.router.staleness = (f.router_stale if f.active(t)
                                  and f.router_stale > 0
                                  else p.router_staleness)
+        # fused decode-work estimate: one clamped subtraction over the
+        # cluster-wide remaining-token concat instead of per-node reductions
+        if self._rt_key != self._mver:
+            counts = [self._mir[nd].shape[1] for nd in range(p.n_nodes)]
+            self._rt_tmpl = (np.asarray(counts, np.int64), counts,
+                             np.concatenate([self._mir[nd][MIR_REM]
+                                             for nd in range(p.n_nodes)]))
+            self._rt_key = self._mver
+        counts_a, counts_l, rem_all = self._rt_tmpl
+        if rem_all.shape[0]:
+            off_rep = np.repeat(np.asarray(self._tok_off, np.int64),
+                                counts_a)
+            w_all = np.maximum(rem_all - off_rep, 1)
+        else:
+            w_all = rem_all
+        occ_l: list[int] = []
+        cap = self.nodes_per_replica * p.slots_per_node * p.kv_tokens_per_slot
+        npr = self.nodes_per_replica
+        starts = [0] * (p.n_nodes + 1)
+        for i, c in enumerate(counts_l):
+            starts[i + 1] = starts[i] + c
         for replica in range(p.n_replicas):
-            lo = replica * self.nodes_per_replica
-            nodes = range(lo, lo + self.nodes_per_replica)
-            queued = sum(len(self.queues[n]) for n in nodes)
-            act = [r for n in nodes for r in self.active[n]]
-            work = sum(max(r.decode_len - r.tokens_out, 1) for r in act)
-            work += sum(max(r.decode_len, 1)
-                        for n in nodes for r in self.queues[n])
-            occ = self._replica_kv_occupancy(replica)
+            lo = replica * npr
+            nodes = range(lo, lo + npr)
+            queued = 0
+            work = 0
+            n_act = 0
+            tokens = 0
+            for n in nodes:
+                queued += len(self.queues[n])
+                work += self._queued_work[n]
+                k = counts_l[n]
+                if k:
+                    n_act += k
+                    tokens += self._kv_base[n] + self._tok_off[n] * k
+            if n_act:
+                work += int(w_all[starts[lo]:starts[lo + npr]].sum())
+            occ = min(tokens / cap, 1.0) if cap else 0.0
             self.router.observe(ReplicaSnapshot(
-                replica=replica, ts=t, queue_depth=queued, active=len(act),
+                replica=replica, ts=t, queue_depth=queued, active=n_act,
                 slots=self.nodes_per_replica * p.slots_per_node,
                 kv_occupancy=occ, expected_work=float(work)))
-            self._emit(ts=t, kind=EventKind.QUEUE_SAMPLE, node=lo,
-                       depth=int(occ * 100), meta=META_KV_OCC,
-                       replica=replica)
+            occ_l.append(int(occ * 100))
+        # router-visible KV telemetry, one row per replica
+        self._emit_cols((t, p.n_replicas), EventKind.QUEUE_SAMPLE,
+                        node=self._replica_lo, depth=np.asarray(occ_l,
+                                                                np.int64),
+                        meta=META_KV_OCC, replica=self._replica_ids)
 
     # ------------------------------------------------------------------
-    # decode round: the heart of the sim
+    # decode round: the heart of the sim (phase-major, columnar)
     # ------------------------------------------------------------------
 
     def _decode_round(self, t: float) -> None:
         p, f = self.p, self.fault
-        for node in range(p.n_nodes):
-            # a degraded replica: every node in it decodes at 1/k cadence
-            # (thermal throttling / a bad host in the DP group) — egress
-            # thins out and its queue builds while peers stay healthy
-            if (f.active(t) and f.replica_slow >= 0
-                    and self._replica_of(node) == f.replica_slow
-                    and (self.round % max(int(f.replica_slow_mult), 1)) != 0):
-                continue
-            # a CPU-bottlenecked host can't admit/prefill either
-            if not (f.active(t) and f.host_slow_node == node
-                    and (self.round % 6) != 0):
+        act_t = f.active(t)
+        # a degraded replica: every node in it decodes at 1/k cadence
+        # (thermal throttling / a bad host in the DP group) — egress
+        # thins out and its queue builds while peers stay healthy
+        if (act_t and f.replica_slow >= 0
+                and (self.round % max(int(f.replica_slow_mult), 1)) != 0):
+            run_nodes = [nd for nd in range(p.n_nodes)
+                         if self._replica_of(nd) != f.replica_slow]
+        else:
+            run_nodes = list(range(p.n_nodes))
+        # a CPU-bottlenecked host can't admit/prefill either
+        hs_node = (f.host_slow_node
+                   if act_t and f.host_slow_node >= 0
+                   and (self.round % 6) != 0 else -1)
+        for node in run_nodes:
+            if node != hs_node:
                 self._refill_slots(node, t)
-            act = self.active[node]
-            busy = len(act)
-            self.metrics.slot_rounds_busy += busy
+        self._flush_prefills()
+        m = self.metrics
+        for node in run_nodes:
+            b = len(self.active[node])
+            m.slot_rounds_busy += b
             if self.queues[node]:
-                self.metrics.slot_rounds_idle += p.slots_per_node - busy
-            # background NIC load rides the wire regardless of decode state
-            if f.active(t) and f.nic_background_frac > 0:
-                cap = 200e9 / 8  # matches DetectorConfig.nic_Bps
-                per_round = f.nic_background_frac * cap * p.decode_step
-                for j in range(8):
-                    self._emit(
-                               ts=t + (j + self.rng.random()) * p.decode_step / 8,
-                               kind=EventKind.INGRESS_PKT, node=node, flow=-1,
-                               size=int(per_round / 8))
-            if not act:
-                continue
-            stopped = (f.active(t) and f.node_stop == node
-                       and t >= f.node_stop_at)
-            # a CPU-bottlenecked host orchestrates every decode step; when
-            # it stalls, the node's whole loop runs at 1/6 cadence — DMA
-            # rate sags, doorbells go sparse, and it straggles collectives
-            host_stalled = (f.active(t) and f.host_slow_node == node
-                            and (self.round % 6) != 0)
-            if host_stalled:
+                m.slot_rounds_idle += p.slots_per_node - b
+        # background NIC load rides the wire regardless of decode state
+        if act_t and f.nic_background_frac > 0:
+            self._nic_background_phase(t, run_nodes)
+        live = [nd for nd in run_nodes if self.active[nd]]
+        if not live:
+            return
+        # a CPU-bottlenecked host orchestrates every decode step; when it
+        # stalls, the node's whole loop runs at 1/6 cadence — DMA rate
+        # sags, doorbells go sparse, and it straggles collectives
+        normal = [nd for nd in live if nd != hs_node]
+        stop_on = act_t and f.node_stop >= 0 and t >= f.node_stop_at
+
+        # ---- H2D feed (decode inputs) per device ----
+        self._h2d_phase(t, normal)
+
+        # ---- dispatch (doorbell): only devices that hold work ----
+        disp = self._dispatch_phase(t, normal)
+
+        # ---- TP collective burst (east-west) ----
+        coll_nodes, coll_disp = [], []
+        for nd in live:
+            if nd == hs_node:
                 # still answers the TP collective, late (bunched dispatch)
-                self._collective_phase(node, t, t + 6e-3)
-                continue
+                coll_nodes.append(nd)
+                coll_disp.append(t + 6e-3)
+            elif not (stop_on and f.node_stop == nd):
+                coll_nodes.append(nd)
+                coll_disp.append(disp[nd])
+        self._collective_phase(t, coll_nodes, coll_disp)
 
-            # ---- H2D feed (decode inputs) per device ----
-            self._h2d_phase(node, t, busy)
+        # ---- PP stage handoff (nodes pair up across stages) ----
+        self._pp_phase(t, normal)
 
-            # ---- dispatch (doorbell): only devices that hold work ----
-            live_devs = sorted({r.device for r in act if r.device >= 0})
-            disp_t = self._dispatch_phase(node, t, live_devs)
+        # ---- intra-node P2P ----
+        self._p2p_intra_phase(t, normal)
 
-            # ---- TP collective burst (east-west) ----
-            if not stopped:
-                self._collective_phase(node, t, disp_t)
+        # ---- D2H returns + egress ----
+        self._d2h_egress_phase(t, normal, stop_on)
 
-            # ---- PP stage handoff (nodes pair up across stages) ----
-            self._pp_phase(node, t)
-
-            # ---- intra-node P2P ----
-            self._p2p_intra_phase(node, t)
-
-            # ---- D2H returns + egress ----
-            self._d2h_egress_phase(node, t, stopped)
-
-            # ---- KV transfers ----
-            self._kv_phase(node, t)
+        # ---- KV transfers ----
+        self._kv_phase(t, normal)
 
     def _refill_slots(self, node: int, t: float) -> None:
         p = self.p
         act = self.active[node]
-        if self._continuous:
-            while len(act) < p.slots_per_node and self.queues[node]:
-                r = self.queues[node].pop(0)
-                self._prefill(r, t)
-                act.append(r)
-        else:
+        q = self.queues[node]
+        if not q or (not self._continuous and act):
             # static batching: only admit when the whole batch drained
-            if not act and self.queues[node]:
-                while len(act) < p.slots_per_node and self.queues[node]:
-                    r = self.queues[node].pop(0)
-                    self._prefill(r, t)
-                    act.append(r)
+            return
+        added: list[Request] = []
+        while len(act) < p.slots_per_node and q:
+            r = q.popleft()
+            self._queued_work[node] -= max(r.decode_len, 1)
+            self._prefill(r, t)
+            act.append(r)
+            added.append(r)
+        if added:
+            self._extend_mirrors(node, added)
 
     def _prefill(self, r: Request, t: float) -> None:
         p = self.p
@@ -476,103 +864,310 @@ class ClusterSim:
         self.metrics.ttfts.append(
             t - r.arrival + p.egress_frac * p.decode_step)
         # scheduler places the sequence on the least-loaded device slot
-        counts = [0] * p.devices_per_node
-        for q in self.active[r.node]:
-            if q.device >= 0:
-                counts[q.device] += 1
+        counts = self._dev_count[r.node]
         r.device = counts.index(min(counts))
-        nbytes = r.prompt_len * p.h2d_tok_bytes
-        self._emit_h2d(r.node, r.device, t + 1e-4, nbytes, flow=r.flow)
+        counts[r.device] += 1
+        self._pair_add(r.node, r.device)
+        self._pref_ts.append(t + 1e-4)
+        self._pref_nodes.append(r.node)
+        self._pref_devs.append(r.device)
+        self._pref_bytes.append(r.prompt_len * p.h2d_tok_bytes)
+        self._pref_flows.append(r.flow)
 
-    def _emit_h2d(self, node: int, dev: int, ts: float, nbytes: int,
-                  flow: int = -1) -> None:
+    def _pair_add(self, node: int, dev: int) -> None:
+        pair = (node, dev)
+        i = bisect_left(self._pairs, pair)
+        if i < len(self._pairs) and self._pairs[i] == pair:
+            self._pair_sizes[i] += self.p.d2h_tok_bytes
+        else:
+            self._pairs.insert(i, pair)
+            self._pair_sizes.insert(i, self.p.d2h_tok_bytes)
+            self._pairs_dirty = True
+
+    def _pair_remove(self, node: int, dev: int) -> None:
+        pair = (node, dev)
+        i = bisect_left(self._pairs, pair)
+        if self._pair_sizes[i] > self.p.d2h_tok_bytes:
+            self._pair_sizes[i] -= self.p.d2h_tok_bytes
+        else:
+            del self._pairs[i]
+            del self._pair_sizes[i]
+            self._pairs_dirty = True
+
+    def _pair_arrays(self) -> tuple:
+        if self._pairs_dirty:
+            if self._pairs:
+                arr = np.asarray(self._pairs, np.int64)
+                self._pairs_node = np.ascontiguousarray(arr[:, 0])
+                self._pairs_dev = np.ascontiguousarray(arr[:, 1])
+                self._pairs_off = self._pairs_dev * 1e-6
+            else:
+                self._pairs_node = np.empty(0, np.int64)
+                self._pairs_dev = np.empty(0, np.int64)
+                self._pairs_off = np.empty(0, np.float64)
+            self._pairs_dirty = False
+        return self._pairs_node, self._pairs_dev, self._pairs_off
+
+    def _fold_tokens(self, node: int) -> None:
+        """Fold the lazy egress-round offset into the remaining counts."""
+        off = self._tok_off[node]
+        if off:
+            mir = self._mir[node]
+            mir[MIR_REM] -= off
+            self._kv_base[node] += off * mir.shape[1]
+            self._rem_min[node] -= off
+            self._tok_off[node] = 0
+
+    def _extend_mirrors(self, node: int, added: list[Request]) -> None:
+        self._fold_tokens(node)
+        rem_new = [r.decode_len - r.tokens_out for r in added]
+        new = np.asarray([[r.flow for r in added],
+                          [r.decode_len for r in added],
+                          [r.prompt_len for r in added],
+                          [r.device for r in added],
+                          rem_new], np.int64)
+        old = self._mir[node]
+        self._mir[node] = (np.concatenate([old, new], axis=1)
+                           if old.shape[1] else new)
+        self._rem_min[node] = min(self._rem_min[node], min(rem_new))
+        self._kv_base[node] += sum(r.prompt_len + r.tokens_out
+                                   for r in added)
+        self._mver += 1
+
+    def _flush_prefills(self) -> None:
+        if not self._pref_ts:
+            return
+        self._emit_h2d_cols(
+            np.asarray(self._pref_ts, np.float64),
+            np.asarray(self._pref_nodes, np.int64),
+            np.asarray(self._pref_devs, np.int64),
+            np.asarray(self._pref_bytes, np.int64),
+            np.asarray(self._pref_flows, np.int64))
+        self._pref_ts.clear()
+        self._pref_nodes.clear()
+        self._pref_devs.clear()
+        self._pref_bytes.clear()
+        self._pref_flows.clear()
+
+    def _emit_h2d_cols(self, ts: np.ndarray, node: np.ndarray,
+                       dev: np.ndarray, nbytes: np.ndarray,
+                       flow: np.ndarray | None) -> None:
+        """All H2D side effects, columnar: split DMAs, device skew,
+        registration churn, PCIe background load."""
         p, f = self.p, self.fault
-        split = f.h2d_split if f.active(ts) else 1
-        if f.active(ts) and f.skew_device == (node, dev):
-            nbytes = int(nbytes * f.skew_factor)
-        per = max(1, nbytes // split)
-        for j in range(split):
-            self._emit(ts=ts + j * 1e-5, kind=EventKind.H2D_XFER,
-                       node=node, device=dev, flow=flow, size=per)
-            if f.active(ts) and f.reg_churn:
-                # short-lived buffers: map before + unmap after every DMA
-                self._emit(ts=ts + j * 1e-5 - 2e-6,
-                           kind=EventKind.MEM_REG, node=node,
-                           device=dev, size=per)
-                self._emit(ts=ts + j * 1e-5 + 2e-6,
-                           kind=EventKind.MEM_REG, node=node,
-                           device=dev, size=per)
+        n = ts.shape[0]
+        if n == 0:
+            return
+        if not self._h2d_knobs or f.mitigated:
+            # healthy fast path: no fault shaping, sizes already >= 1
+            self._emit_cols(ts, EventKind.H2D_XFER, node=node, device=dev,
+                            flow=-1 if flow is None else flow, size=nbytes)
+            return
+        if flow is None:
+            flow = np.full(n, -1, np.int64)
+        act = (ts >= f.start) if not f.mitigated else np.zeros(n, bool)
+        any_act = bool(act.any())
+        if any_act and f.skew_device is not None:
+            sn, sd = f.skew_device
+            m = act & (node == sn) & (dev == sd)
+            if m.any():
+                nbytes = np.where(
+                    m, (nbytes * f.skew_factor).astype(np.int64), nbytes)
+        if any_act and f.h2d_split > 1:
+            # short-lived tiny DMAs: expand each transfer into its splits
+            split = np.where(act, np.int64(f.h2d_split), np.int64(1))
+            per = np.maximum(1, nbytes // split)
+            rep = np.repeat(np.arange(n), split)
+            ends = np.cumsum(split)
+            j = np.arange(int(ends[-1])) - np.repeat(ends - split, split)
+            ts_e = ts[rep] + j * 1e-5
+            node_e, dev_e = node[rep], dev[rep]
+            flow_e, per_e, act_e = flow[rep], per[rep], act[rep]
+        else:
+            per = np.maximum(1, nbytes)
+            ts_e, node_e, dev_e = ts, node, dev
+            flow_e, per_e, act_e = flow, per, act
+        self._emit_cols(ts_e, EventKind.H2D_XFER, node=node_e, device=dev_e,
+                        flow=flow_e, size=per_e)
+        if any_act and f.reg_churn:
+            # short-lived buffers: map before + unmap after every DMA
+            tsm, nm = ts_e[act_e], node_e[act_e]
+            dm, pm = dev_e[act_e], per_e[act_e]
+            self._emit_cols(tsm - 2e-6, EventKind.MEM_REG, node=nm,
+                            device=dm, size=pm)
+            self._emit_cols(tsm + 2e-6, EventKind.MEM_REG, node=nm,
+                            device=dm, size=pm)
         # PCIe background load (saturation fault)
-        if f.active(ts) and f.pcie_background_frac > 0:
-            cap = 64e9
-            per_round = f.pcie_background_frac * cap * p.decode_step
-            self._emit(ts=ts + 2e-4, kind=EventKind.H2D_XFER, node=node,
-                       device=dev, size=int(per_round))
+        if any_act and f.pcie_background_frac > 0:
+            per_round = int(f.pcie_background_frac * 64e9 * p.decode_step)
+            self._emit_cols(ts[act] + 2e-4, EventKind.H2D_XFER,
+                            node=node[act], device=dev[act], size=per_round)
 
-    def _h2d_phase(self, node: int, t: float, busy: int) -> None:
+    def _h2d_grid(self, nodes: tuple[int, ...]) -> tuple:
+        """Cached (node, device) grid columns for a node set — the grids
+        repeat every round, so the arrays are built once and shared
+        (add_columns adopts them read-only)."""
+        tmpl = self._tmpl_h2d.get(nodes)
+        if tmpl is None:
+            D = self.p.devices_per_node
+            tmpl = (np.repeat(np.asarray(nodes, np.int64), D),
+                    np.tile(np.arange(D, dtype=np.int64), len(nodes)))
+            self._tmpl_h2d[nodes] = tmpl
+        return tmpl
+
+    def _h2d_phase(self, t: float, normal: list[int]) -> None:
         p, f = self.p, self.fault
-        stall = (f.active(t) and f.h2d_stall_node == node)
-        if stall and (self.round % int(f.h2d_stall_mult)) != 0:
+        act_t = f.active(t)
+        nodes = [nd for nd in normal
+                 if not (act_t and f.h2d_stall_node == nd
+                         and (self.round % int(f.h2d_stall_mult)) != 0)]
+        if not nodes:
             return   # feed goes quiet for most rounds -> open gap grows
-        for dev in range(p.devices_per_node):
-            nbytes = busy * p.h2d_tok_bytes // p.devices_per_node + 1
-            self._emit_h2d(node, dev, t + self.rng.random() * 1e-4, nbytes)
+        k = len(nodes)
+        D = p.devices_per_node
+        node_a, dev_a = self._h2d_grid(tuple(nodes))
+        per_node = [len(self.active[nd]) * p.h2d_tok_bytes // D + 1
+                    for nd in nodes]
+        nbytes = np.repeat(np.asarray(per_node, np.int64), D)
+        ts = t + self.rng.random(k * D) * 1e-4
+        self._emit_h2d_cols(ts, node_a, dev_a, nbytes, None)
 
-    def _dispatch_phase(self, node: int, t: float,
-                        live_devs: list[int]) -> float:
+    def _dispatch_phase(self, t: float, normal: list[int]) -> dict:
         p, f = self.p, self.fault
+        if not normal:
+            return {}
         delay = 2e-4
+        jit_l = None
         if f.active(t):
             delay += f.dispatch_delay
             if f.dispatch_jitter_mult > 1.0:
-                delay += self.rng.expovariate(1.0 / (
-                    f.dispatch_jitter_mult * 2e-4))
-        ts = t + delay
-        for dev in live_devs:
-            self._emit(ts=ts + dev * 1e-6, kind=EventKind.DISPATCH,
-                       node=node, device=dev)
-        return ts
+                jit_l = self.rng.exponential(
+                    f.dispatch_jitter_mult * 2e-4, len(normal)).tolist()
+        if len(normal) == p.n_nodes:
+            # all nodes live and running: the doorbell columns are exactly
+            # the incrementally-maintained (node, device) pair arrays
+            node_a, dev_a, off_a = self._pair_arrays()
+            per_node = None
+        else:
+            key = (self._mver, tuple(normal))
+            tmpl = self._disp_tmpl if key == self._disp_key else None
+            if tmpl is None:
+                D = p.devices_per_node
+                node_l: list[int] = []
+                dev_l: list[int] = []
+                per_node = []
+                for nd in normal:
+                    cnt = self._dev_count[nd]
+                    k = 0
+                    for dv in range(D):
+                        if cnt[dv]:
+                            node_l.append(nd)
+                            dev_l.append(dv)
+                            k += 1
+                    per_node.append(k)
+                tmpl = (np.asarray(node_l, np.int64),
+                        np.asarray(dev_l, np.int64),
+                        np.asarray(dev_l, np.float64) * 1e-6,
+                        per_node)
+                self._disp_key = key
+                self._disp_tmpl = tmpl
+            node_a, dev_a, off_a, per_node = tmpl
+        if jit_l is None:
+            base = t + delay
+            disp = dict.fromkeys(normal, base)
+            ts = base + off_a
+        else:
+            bases = [t + delay + j for j in jit_l]
+            disp = dict(zip(normal, bases))
+            if per_node is None:
+                per_node = [0] * p.n_nodes
+                for nd, _ in self._pairs:
+                    per_node[nd] += 1
+            ts = np.repeat(np.asarray(bases), per_node) + off_a
+        if ts.shape[0]:
+            self._emit_cols(ts, EventKind.DISPATCH, node=node_a,
+                            device=dev_a)
+        return disp
 
-    def _collective_phase(self, node: int, t: float, disp_t: float) -> None:
+    def _collective_phase(self, t: float, nodes: list[int],
+                          disp_ts: list[float]) -> None:
         p, f = self.p, self.fault
+        k = len(nodes)
+        if k == 0:
+            return
+        node_a = np.asarray(nodes, np.int64)
         # realistic per-node arrival jitter (no exact ties)
-        arrive = (disp_t + p.compute_frac * p.decode_step
-                  + self.rng.random() * 4e-5)
+        arrive = (np.asarray(disp_ts)
+                  + (p.compute_frac * p.decode_step
+                     + self.rng.random(k) * 4e-5))
         nbytes = p.collective_bytes
         if f.active(t):
-            if f.straggler_node == node:
-                arrive += f.straggler_delay
-            if f.collective_bytes_node == node:
-                nbytes = int(nbytes * f.collective_bytes_mult)
+            if f.straggler_node >= 0:
+                arrive[node_a == f.straggler_node] += f.straggler_delay
+            if f.collective_bytes_node >= 0:
+                nbytes = np.where(
+                    node_a == f.collective_bytes_node,
+                    np.int64(int(p.collective_bytes
+                                 * f.collective_bytes_mult)),
+                    np.int64(p.collective_bytes))
             if f.fabric_jitter > 0:
-                arrive += abs(self.rng.gauss(0.0, f.fabric_jitter))
-            if self.rng.random() < f.ew_retx_p:
-                self._emit(ts=arrive + 3e-4,
-                           kind=EventKind.RETRANSMIT, node=node,
-                           size=p.mtu, meta=META_DIR_EW)
-        self._emit(ts=arrive, kind=EventKind.COLLECTIVE_BURST,
-                   node=node, size=nbytes,
-                   op=int(CollectiveOp.ALL_REDUCE), group=0,
-                   meta=self.round)
+                arrive += np.abs(self.rng.normal(0.0, f.fabric_jitter, k))
+            if f.ew_retx_p > 0:
+                m = self.rng.random(k) < f.ew_retx_p
+                if m.any():
+                    self._emit_cols(arrive[m] + 3e-4, EventKind.RETRANSMIT,
+                                    node=node_a[m], size=p.mtu,
+                                    meta=META_DIR_EW)
+        self._emit_cols(arrive, EventKind.COLLECTIVE_BURST, node=node_a,
+                        size=nbytes, op=int(CollectiveOp.ALL_REDUCE),
+                        group=0, meta=self.round)
 
-    def _pp_phase(self, node: int, t: float) -> None:
+    def _pp_phase(self, t: float, normal: list[int]) -> None:
         p, f = self.p, self.fault
         half = p.n_nodes // 2
-        if half == 0 or node >= half:
+        if half == 0:
             return
-        gap_extra = 0.0
+        nodes = [nd for nd in normal if nd < half]
+        if not nodes:
+            return
+        k = len(nodes)
+        node_a = np.asarray(nodes, np.int64)
+        group_a = None
         if f.active(t) and f.stage_gap_growth > 0:
-            self._pp_extra_gap += f.stage_gap_growth / max(half, 1)
-            gap_extra = self._pp_extra_gap
-        ts = t + 0.6 * p.decode_step + gap_extra
-        if ts > t + 5 * p.decode_step:
-            # stalled stage: usually emit nothing this round (bubble widens)
-            if self.rng.random() < 0.8:
-                return
-            ts = t + 5 * p.decode_step   # clamp near the round
-        self._emit(ts=ts, kind=EventKind.P2P_BURST, node=node,
-                   size=p.collective_bytes // 2, group=100 + node,
-                   meta=META_P2P_INTER)
+            inc = f.stage_gap_growth / max(half, 1)
+            gaps = self._pp_extra_gap + inc * np.arange(1, k + 1)
+            self._pp_extra_gap = float(gaps[-1])
+            ts = t + 0.6 * p.decode_step + gaps
+            limit = t + 5 * p.decode_step
+            over = ts > limit
+            if over.any():
+                # stalled stage: usually emit nothing this round (bubble
+                # widens); survivors clamp near the round
+                u = self.rng.random(int(over.sum()))
+                drop = np.zeros(k, bool)
+                drop[over] = u < 0.8
+                keep = ~drop
+                ts = np.where(over, limit, ts)[keep]
+                node_a = node_a[keep]
+                group_a = 100 + node_a
+        else:
+            key = tuple(nodes)
+            tmpl = self._tmpl_pp.get(key)
+            if tmpl is None:
+                tmpl = (node_a, 100 + node_a)
+                self._tmpl_pp[key] = tmpl
+            node_a, group_a = tmpl
+            self._emit_cols((t + 0.6 * p.decode_step, k),
+                            EventKind.P2P_BURST, node=node_a,
+                            size=p.collective_bytes // 2, group=group_a,
+                            meta=META_P2P_INTER)
+            return
+        if ts.shape[0]:
+            self._emit_cols(ts, EventKind.P2P_BURST, node=node_a,
+                            size=p.collective_bytes // 2,
+                            group=100 + node_a if group_a is None
+                            else group_a,
+                            meta=META_P2P_INTER)
 
     def _hol_stalled(self, node: int, t: float) -> bool:
         """HoL fault: a subset of nodes' streams freeze in 0.3 s windows."""
@@ -582,98 +1177,234 @@ class ClusterSim:
         n_stalled = max(1, int(f.hol_stall_frac * self.p.n_nodes))
         return node < n_stalled and (int(t / 0.3) % 2) == 1
 
-    def _p2p_intra_phase(self, node: int, t: float) -> None:
+    def _p2p_intra_phase(self, t: float, normal: list[int]) -> None:
         p, f = self.p, self.fault
-        slow = f.active(t) and f.p2p_slow_node == node
         # same size, but a slow node's bursts come at 1/3 cadence -> the
         # size/dt throughput proxy drops 3x
-        if slow and (self.round % 3) != 0:
+        slow_skip = (f.active(t) and f.p2p_slow_node >= 0
+                     and (self.round % 3) != 0)
+        nodes = [nd for nd in normal
+                 if not (slow_skip and nd == f.p2p_slow_node)
+                 and not self._hol_stalled(nd, t)]
+        if not nodes:
             return
-        if self._hol_stalled(node, t):
-            return
-        self._emit(ts=t + 0.4 * p.decode_step,
-                   kind=EventKind.P2P_BURST, node=node,
-                   device=self.round % p.devices_per_node,
-                   flow=10 + node, size=p.p2p_intra_bytes,
-                   meta=META_P2P_INTRA)
+        key = tuple(nodes)
+        tmpl = self._tmpl_p2p.get(key)
+        if tmpl is None:
+            node_a = np.asarray(nodes, np.int64)
+            tmpl = (node_a, 10 + node_a)
+            self._tmpl_p2p[key] = tmpl
+        node_a, flow_a = tmpl
+        self._emit_cols((t + 0.4 * p.decode_step, len(nodes)),
+                        EventKind.P2P_BURST, node=node_a,
+                        device=self.round % p.devices_per_node,
+                        flow=flow_a, size=p.p2p_intra_bytes,
+                        meta=META_P2P_INTRA)
 
-    def _d2h_egress_phase(self, node: int, t: float, stopped: bool) -> None:
+    def _egress_tmpl(self, normal: list[int]) -> dict:
+        """Fused cross-node egress column template, rebuilt only when
+        active-set membership or the running-node set changes."""
+        key = (self._mver, tuple(normal))
+        if key == self._eg_key:
+            return self._eg_tmpl
+        counts = [self._mir[nd].shape[1] for nd in normal]
+        starts = [0] * (len(normal) + 1)
+        for i, c in enumerate(counts):
+            starts[i + 1] = starts[i] + c
+        node_col = np.repeat(np.asarray(normal, np.int64), counts)
+        tmpl = {
+            "counts": np.asarray(counts, np.int64),
+            "counts_l": counts,
+            "starts": starts,
+            "total": starts[-1],
+            "flow": np.concatenate([self._mir[nd][MIR_FLOW]
+                                    for nd in normal]),
+            "node": node_col,
+            "replica": node_col // self.nodes_per_replica,
+            "within": np.concatenate([self._ar_eg[:c] for c in counts]),
+        }
+        self._eg_key = key
+        self._eg_tmpl = tmpl
+        return tmpl
+
+    def _d2h_egress_phase(self, t: float, normal: list[int],
+                          stop_on: bool) -> None:
         p, f = self.p, self.fault
-        act = self.active[node]
-        done: list[Request] = []
+        act_t = f.active(t)
         base = t + p.egress_frac * p.decode_step
-        d2h_delay = 0.0
-        if f.active(t) and f.d2h_delay_mult > 1.0:
-            d2h_delay = (f.d2h_delay_mult - 1.0) * 5e-4
+        d2h_delay = ((f.d2h_delay_mult - 1.0) * 5e-4
+                     if act_t and f.d2h_delay_mult > 1.0 else 0.0)
+        jit = act_t and f.egress_jitter_mult > 1.0
+        retx = act_t and f.egress_retx_p > 0
+        m = self.metrics
+        tmpl = self._egress_tmpl(normal)
+        total = tmpl["total"]
         # one aggregated D2H (logits/sampled ids) per device per step, the
         # way a real outfeed looks on the bus
-        if not stopped:
-            per_dev: dict[int, int] = {}
-            for r in act:
-                per_dev[r.device] = per_dev.get(r.device, 0) + p.d2h_tok_bytes
-            for dev, nbytes in per_dev.items():
-                self._emit(ts=base + d2h_delay + dev * 1e-6,
-                           kind=EventKind.D2H_XFER, node=node,
-                           device=dev, size=nbytes)
-        for i, r in enumerate(act):
-            r.tokens_out += 1
-            self.metrics.tokens_out += 1
-            fin = r.tokens_out >= r.decode_len
-            ts = base + 2e-4 + i * 2e-6
-            if f.active(t) and f.egress_jitter_mult > 1.0:
-                # cap so event time stays near the round (the plane's clock
-                # follows event timestamps)
-                ts += min(self.rng.expovariate(
-                    1.0 / (f.egress_jitter_mult * 2e-4)), 10e-3)
-            ts += min(self._egress_backlog[node], 40.0) * 1e-4
-            self._emit(ts=ts, kind=EventKind.EGRESS_PKT, node=node,
-                       flow=r.flow, size=p.egress_tok_bytes,
-                       group=node, meta=META_FIN if fin else 0,
-                       replica=self._replica_of(node))
-            if f.active(t) and self.rng.random() < f.egress_retx_p:
-                self._emit(ts=ts + 4e-4, kind=EventKind.RETRANSMIT,
-                           node=node, flow=r.flow, size=p.mtu,
-                           meta=META_DIR_EGRESS)
-            if fin:
-                r.finish = ts
-                self.metrics.completed += 1
-                self.metrics.latencies.append(r.latency)
-                done.append(r)
-        for r in done:
-            act.remove(r)
+        stop_nd = f.node_stop if stop_on else -1
+        if stop_nd == -1 and len(normal) == self.p.n_nodes:
+            node_a, dev_a, off_a = self._pair_arrays()
+            if node_a.shape[0]:
+                self._emit_cols((base + d2h_delay) + off_a,
+                                EventKind.D2H_XFER, node=node_a,
+                                device=dev_a,
+                                size=np.asarray(self._pair_sizes, np.int64))
+        else:
+            d2h_node: list[int] = []
+            d2h_dev: list[int] = []
+            d2h_size: list[int] = []
+            d2h_off: list[float] = []
+            normal_s = set(normal)
+            for i, (nd, dv) in enumerate(self._pairs):
+                if nd != stop_nd and nd in normal_s:
+                    d2h_node.append(nd)
+                    d2h_dev.append(dv)
+                    d2h_size.append(self._pair_sizes[i])
+                    d2h_off.append(dv * 1e-6)
+            if d2h_node:
+                self._emit_cols((base + d2h_delay)
+                                + np.asarray(d2h_off, np.float64),
+                                EventKind.D2H_XFER,
+                                node=np.asarray(d2h_node, np.int64),
+                                device=np.asarray(d2h_dev, np.int64),
+                                size=np.asarray(d2h_size, np.int64))
+        if not total:
+            return
+        backlog = self._egress_backlog
+        eb = [base + 2e-4 + (b if b < 40.0 else 40.0) * 1e-4
+              for b in (backlog[nd] for nd in normal)]
+        ts = np.repeat(np.asarray(eb), tmpl["counts"]) + tmpl["within"]
+        if jit:
+            # cap jitter so event time stays near the round (the plane's
+            # clock follows event timestamps)
+            ts = ts + np.minimum(self.rng.exponential(
+                f.egress_jitter_mult * 2e-4, total), 10e-3)
+        m.tokens_out += total
+        tok_off = self._tok_off
+        fin_nodes = None
+        for i, nd in enumerate(normal):
+            if tmpl["counts_l"][i]:
+                off = tok_off[nd] + 1
+                tok_off[nd] = off
+                if off >= self._rem_min[nd]:
+                    if fin_nodes is None:
+                        fin_nodes = []
+                    fin_nodes.append(i)
+        flows = tmpl["flow"]
+        if retx:
+            um = self.rng.random(total) < f.egress_retx_p
+            if um.any():
+                self._emit_cols(ts[um] + 4e-4, EventKind.RETRANSMIT,
+                                node=tmpl["node"][um], flow=flows[um],
+                                size=p.mtu, meta=META_DIR_EGRESS)
+        meta = 0
+        if fin_nodes is not None:
+            meta = np.zeros(total, np.int64)
+            starts = tmpl["starts"]
+            for i in fin_nodes:
+                nd = normal[i]
+                s, e = starts[i], starts[i + 1]
+                fin = self._mir[nd][MIR_REM] <= tok_off[nd]
+                meta[s:e] = np.where(fin, int(META_FIN), 0)
+                self._complete(nd, fin, ts[s:e])
+        self._emit_cols(ts, EventKind.EGRESS_PKT, node=tmpl["node"],
+                        flow=flows, size=p.egress_tok_bytes,
+                        group=tmpl["node"], meta=meta,
+                        replica=tmpl["replica"])
 
-    def _kv_phase(self, node: int, t: float) -> None:
+    def _complete(self, nd: int, fin: np.ndarray, ts: np.ndarray) -> None:
+        """Retire finished sequences: metrics, object sync, mirror filter."""
+        m = self.metrics
+        act = self.active[nd]
+        cnt = self._dev_count[nd]
+        mir = self._mir[nd]
+        dev = mir[MIR_DEV]
+        dec = mir[MIR_DEC]
+        fin_l = fin.tolist()
+        for i in np.flatnonzero(fin).tolist():
+            r = act[i]
+            r.finish = float(ts[i])
+            r.tokens_out = int(dec[i])   # finished exactly at decode_len
+            m.completed += 1
+            m.latencies.append(r.finish - r.arrival)
+            cnt[dev[i]] -= 1
+            self._pair_remove(nd, int(dev[i]))
+        self.active[nd] = [r for i, r in enumerate(act) if not fin_l[i]]
+        self._fold_tokens(nd)
+        mir = self._mir[nd][:, ~fin]
+        self._mir[nd] = mir
+        if mir.shape[1]:
+            rem = mir[MIR_REM]
+            self._rem_min[nd] = int(rem.min())
+            self._kv_base[nd] = int((mir[MIR_PROMPT] + mir[MIR_DEC]
+                                     - rem).sum())
+        else:
+            self._rem_min[nd] = 1 << 60
+            self._kv_base[nd] = 0
+        self._mver += 1
+
+    def _kv_phase(self, t: float, normal: list[int]) -> None:
         p, f = self.p, self.fault
-        if self._hol_stalled(node, t):
+        nodes = [nd for nd in normal if not self._hol_stalled(nd, t)]
+        if not nodes:
             return
         # healthy background: steady small page migrations, stable stream id
-        if self.round % 16 == 0 and self.active[node]:
-            self._emit(ts=t + 0.5 * p.decode_step,
-                       kind=EventKind.P2P_BURST, node=node,
-                       flow=50 + node, size=p.kv_page_bytes,
-                       meta=META_P2P_KV)
+        if self.round % 16 == 0:
+            healthy = [nd for nd in nodes if self.active[nd]]
+            if healthy:
+                node_a, flow_a, _ = self._kv_tmpl(tuple(healthy))
+                self._emit_cols(
+                    (t + 0.5 * p.decode_step, len(healthy)),
+                    EventKind.P2P_BURST, node=node_a, flow=flow_a,
+                    size=p.kv_page_bytes, meta=META_P2P_KV)
         if f.active(t) and f.kv_heavy:
             # one flow per node repeatedly migrates big KV slabs, hogging
             # the link while the regular page streams starve
-            self._emit(ts=t + 0.55 * p.decode_step,
-                       kind=EventKind.P2P_BURST, node=node,
-                       flow=node * 1000,
-                       size=192 * p.kv_page_bytes, meta=META_P2P_KV)
+            node_a, _, heavy_a = self._kv_tmpl(tuple(nodes))
+            self._emit_cols((t + 0.55 * p.decode_step, len(nodes)),
+                            EventKind.P2P_BURST, node=node_a,
+                            flow=heavy_a,
+                            size=192 * p.kv_page_bytes, meta=META_P2P_KV)
+
+    def _kv_tmpl(self, key: tuple) -> tuple:
+        tmpl = self._tmpl_kv.get(key)
+        if tmpl is None:
+            node_a = np.asarray(key, np.int64)
+            tmpl = (node_a, 50 + node_a, node_a * 1000)
+            self._tmpl_kv[key] = tmpl
+        return tmpl
+
+    def _nic_background_phase(self, t: float, run_nodes: list[int]) -> None:
+        p, f = self.p, self.fault
+        cap = 200e9 / 8  # matches DetectorConfig.nic_Bps
+        per_round = f.nic_background_frac * cap * p.decode_step
+        k = len(run_nodes)
+        key = tuple(run_nodes)
+        if key != self._nic_key:
+            self._nic_tmpl = (np.tile(np.arange(8, dtype=np.float64), k),
+                              np.repeat(np.asarray(run_nodes, np.int64), 8))
+            self._nic_key = key
+        j, node_a = self._nic_tmpl
+        ts = t + (j + self.rng.random(8 * k)) * (p.decode_step / 8)
+        self._emit_cols(ts, EventKind.INGRESS_PKT, node=node_a,
+                        flow=-1, size=int(per_round / 8))
 
     def _credits(self, t: float) -> None:
         p, f = self.p, self.fault
         if t < self._next_credit:
             return
         self._next_credit = t + p.credit_every
-        for node in range(p.n_nodes):
-            if f.active(t) and f.credit_starve:
-                # credits trickle in rarely and empty
-                if self.rng.random() < 0.1:
-                    self._emit(ts=t, kind=EventKind.CREDIT_UPDATE,
-                               node=node, depth=0)
-            else:
-                self._emit(ts=t, kind=EventKind.CREDIT_UPDATE,
-                           node=node, depth=32)
+        n = p.n_nodes
+        if f.active(t) and f.credit_starve:
+            # credits trickle in rarely and empty
+            starved = self.rng.random(n) < 0.1
+            if starved.any():
+                nodes = np.flatnonzero(starved).astype(np.int64)
+                self._emit_cols((t, nodes.shape[0]),
+                                EventKind.CREDIT_UPDATE, node=nodes, depth=0)
+        else:
+            self._emit_cols((t, n), EventKind.CREDIT_UPDATE,
+                            node=self._all_nodes, depth=32)
 
 
 def run_scenario(fault: FaultSpec,

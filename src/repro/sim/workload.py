@@ -7,8 +7,9 @@ sequence-length variance that drives every early-stop pathology).
 
 from __future__ import annotations
 
-import random
 from dataclasses import dataclass, field
+
+import numpy as np
 
 
 @dataclass
@@ -42,10 +43,13 @@ class WorkloadSpec:
 
 
 def generate(spec: WorkloadSpec) -> list[Request]:
-    rng = random.Random(spec.seed)
+    # same seeded np.random.Generator family the simulator draws from, so
+    # one (seed, spec) pair fully determines a scenario end to end
+    rng = np.random.default_rng(spec.seed)
     reqs: list[Request] = []
     t = 0.0
     flow = 0
+    mean_gap = 1.0 / spec.rate
     while t < spec.duration:
         if (spec.burst_factor > 1.0 and t >= spec.burst_start
                 and rng.random() < 0.05):
@@ -54,18 +58,19 @@ def generate(spec: WorkloadSpec) -> list[Request]:
             for _ in range(n):
                 reqs.append(_mk(rng, flow, t + rng.random() * 1e-4, spec))
                 flow += 1
-            t += rng.expovariate(spec.rate) * spec.burst_factor
+            t += rng.exponential(mean_gap) * spec.burst_factor
         else:
             reqs.append(_mk(rng, flow, t, spec))
             flow += 1
-            t += rng.expovariate(spec.rate)
+            t += rng.exponential(mean_gap)
     return reqs
 
 
-def _mk(rng: random.Random, flow: int, t: float, spec: WorkloadSpec) -> Request:
-    prompt = max(8, int(rng.lognormvariate(0, 0.4) * spec.prompt_mean))
+def _mk(rng: np.random.Generator, flow: int, t: float,
+        spec: WorkloadSpec) -> Request:
+    prompt = max(8, int(rng.lognormal(0, 0.4) * spec.prompt_mean))
     sigma = spec.decode_cv
-    decode = max(4, int(rng.lognormvariate(0, sigma) * spec.decode_mean))
+    decode = max(4, int(rng.lognormal(0, sigma) * spec.decode_mean))
     if spec.flow_skew > 0 and flow % 7 == 0:
         # heavy-hitter sessions: much longer prompts+decodes
         prompt = int(prompt * (1 + 10 * spec.flow_skew))

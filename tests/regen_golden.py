@@ -1,0 +1,66 @@
+"""Regenerate the golden per-scenario fixtures in ``tests/golden/``.
+
+The fixture captures, for every registry scenario, the detector findings
+and SimMetrics produced by the **scalar-synthesis reference path**
+(``SimParams.scalar_synth=True``) at canonical scale.  The vectorized
+producer must reproduce it bit-for-bit (``tests/test_sim_columnar.py``;
+``benchmarks sim_perf`` asserts the same in-bench).
+
+Regenerate ONLY when an intentional change to the simulator/workload/
+detectors shifts the reference behavior::
+
+    PYTHONPATH=src python tests/regen_golden.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+GOLDEN_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "golden", "scenario_findings.json")
+
+
+def generate() -> dict:
+    from repro.sim import SCENARIOS
+    from repro.sim.cluster import run_scenario
+
+    scenarios = {}
+    for name in sorted(SCENARIOS):
+        sc = SCENARIOS[name].variant(scalar_synth=True)
+        m, plane, _ = run_scenario(sc.fault, sc.params, sc.workload)
+        scenarios[name] = {
+            "row_id": sc.row_id,
+            "findings": [[f.name, f.node, f.ts, f.severity, f.score]
+                         for f in plane.findings],
+            "metrics": {
+                "completed": m.completed,
+                "tokens_out": m.tokens_out,
+                "first_finding_ts": m.first_finding_ts,
+                "p50_latency": m.p(0.5),
+                "p99_latency": m.p(0.99),
+                "p50_ttft": m.p_ttft(0.5),
+                "p99_ttft": m.p_ttft(0.99),
+            },
+        }
+    return {
+        "format": 1,
+        "note": ("scalar-synthesis reference findings/metrics per scenario;"
+                 " regenerate with tests/regen_golden.py"),
+        "scenarios": scenarios,
+    }
+
+
+def main() -> None:
+    data = generate()
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    with open(GOLDEN_PATH, "w") as fh:
+        json.dump(data, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    n = sum(len(s["findings"]) for s in data["scenarios"].values())
+    print(f"wrote {GOLDEN_PATH}: {len(data['scenarios'])} scenarios, "
+          f"{n} findings")
+
+
+if __name__ == "__main__":
+    main()

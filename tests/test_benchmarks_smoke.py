@@ -4,6 +4,9 @@ cheap table per family and assert zero ERROR rows.
 Families and their cheap representatives:
   telemetry-overhead -> table2_signals
   columnar ingest    -> telemetry_perf (batched vs per-event, 3a mix)
+  producer synthesis -> sim_perf      (columnar vs scalar_synth; smoke
+                        scale via SIM_PERF_SCALE/REPS so the suite stays
+                        bounded — CI's bench step runs the larger scale)
   per-row detection  -> table3d      (1 row + healthy baseline)
   router policies    -> router       (4 sim runs, no model compile)
   closed-loop        -> mitigation   (sim only)
@@ -23,13 +26,19 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 
+# sim_perf is exercised by its dedicated assertion test below (running it
+# in the family sweep too would double its cost for no added coverage)
 CHEAP_TABLES = ["table2_signals", "telemetry_perf", "table3d", "router",
                 "mitigation", "roofline"]
 
 
 def _run_only(only: str) -> str:
     env = {**os.environ,
-           "PYTHONPATH": SRC + os.pathsep + REPO}
+           "PYTHONPATH": SRC + os.pathsep + REPO,
+           # sim_perf: tiny synthesis grid + smoke sweep in the suite;
+           # CI's bench step runs the larger scale and the full registry
+           "SIM_PERF_SCALE": "2", "SIM_PERF_REPS": "1",
+           "SIM_PERF_SWEEP": "smoke"}
     out = subprocess.run(
         [sys.executable, os.path.join(REPO, "benchmarks", "run.py"),
          "--only", only],
@@ -68,6 +77,29 @@ def test_telemetry_perf_batched_faster_and_identical():
     assert rows["batched"]["identical_findings"] == "1"
     speedup = float(rows["scalar"]["batched_speedup"])
     assert speedup >= 4.0, f"batched ingest only {speedup}x over per-event"
+
+
+@pytest.mark.slow
+def test_sim_perf_columnar_faster_with_identical_traces_and_golden():
+    """Producer-plane acceptance, asserted on the benchmark output: the
+    vectorized synthesis must beat the per-event reference even at the
+    tiny smoke scale (the margin grows with cluster size — CI's bench
+    step runs SIM_PERF_SCALE=8; see README for the line-rate numbers),
+    with the identical event multiset and golden finding parity."""
+    stdout = _run_only("sim_perf")
+    rows = {}
+    for line in stdout.strip().splitlines()[1:]:
+        name, _, derived = line.split(",", 2)
+        rows[name.split("/", 1)[1]] = dict(
+            kv.split("=", 1) for kv in derived.split(";"))
+    col = rows["columnar"]
+    assert col["identical_traces"] == "1"
+    assert col["golden_parity"] == "1"
+    assert float(col["speedup"]) >= 1.3, (
+        f"columnar synthesis only {col['speedup']}x over scalar reference")
+    sweep = rows["registry_sweep"]
+    assert sweep["hit_rate"] == "1.000"
+    assert sweep["healthy_false_positives"] == "0"
 
 
 @pytest.mark.slow

@@ -1,0 +1,197 @@
+"""Columnar producer plane: vectorized-vs-scalar synthesis parity, golden
+per-scenario regression fixtures, admission-path invariants, and the
+parallel sweep runner.
+
+The core property: ``SimParams.scalar_synth=True`` (per-event reference
+emission) and the default vectorized path draw from ONE seeded
+``np.random.Generator`` stream and stage identical rows in identical
+order, so the produced ``EventBatch`` traces are bit-identical — and
+therefore so are detector findings and SimMetrics.  The committed golden
+fixture (``tests/golden/scenario_findings.json``, generated from the
+scalar reference via ``tests/regen_golden.py``) pins that behavior."""
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:     # clean checkout: seeded-random fallback
+    from proptest_fallback import given, settings, st
+
+from repro.core.events import BATCH_COLUMNS, EventTraceRecorder
+from repro.sim import (
+    SCENARIOS,
+    SimParams,
+    SweepConfig,
+    WorkloadSpec,
+    run_scenario,
+    run_sweep,
+)
+from repro.sim.cluster import ClusterSim
+
+GOLDEN_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "golden", "scenario_findings.json")
+with open(GOLDEN_PATH) as fh:
+    GOLDEN = json.load(fh)["scenarios"]
+
+
+def _run(name: str, scalar: bool, flush: int = 1, scale: int = 1):
+    sc = SCENARIOS[name].variant(scalar_synth=scalar, scale=scale)
+    sc.params.flush_events = flush
+    wl = dataclasses.replace(sc.workload, duration=sc.params.duration * 0.98)
+    rec = EventTraceRecorder()
+    sim = ClusterSim(sc.params, wl, sc.fault, plane=rec)
+    sim.run()
+    return rec.batches, sim
+
+
+def _assert_traces_equal(a, b, ctx=""):
+    assert len(a) == len(b), f"{ctx}: batch count {len(a)} != {len(b)}"
+    for i, (x, y) in enumerate(zip(a, b)):
+        for col in BATCH_COLUMNS:
+            assert np.array_equal(getattr(x, col), getattr(y, col)), (
+                f"{ctx}: batch {i} column {col} differs")
+
+
+class TestSynthesisParity:
+    """Vectorized and scalar-reference synthesis are bit-identical."""
+
+    @pytest.mark.parametrize("name", ["healthy", "burst_admission",
+                                      "egress_jitter", "registration_churn",
+                                      "hot_replica"])
+    def test_traces_bit_identical(self, name):
+        bv, _ = _run(name, scalar=False)
+        bs, _ = _run(name, scalar=True)
+        _assert_traces_equal(bv, bs, name)
+
+    def test_traces_bit_identical_at_ring_dma_window(self):
+        # parity is cadence-independent: same rows, same order, whatever
+        # the flush granularity
+        bv, _ = _run("nic_saturation", scalar=False, flush=65536)
+        bs, _ = _run("nic_saturation", scalar=True, flush=65536)
+        _assert_traces_equal(bv, bs, "nic_saturation@65536")
+
+    def test_traces_bit_identical_at_scale(self):
+        bv, _ = _run("flow_skew", scalar=False, scale=4)
+        bs, _ = _run("flow_skew", scalar=True, scale=4)
+        _assert_traces_equal(bv, bs, "flow_skew@x4")
+
+    @given(st.integers(0, 10_000), st.integers(2, 4))
+    @settings(max_examples=5, deadline=None)
+    def test_parity_on_random_small_workloads(self, seed, n_nodes):
+        # property form: any (seed, topology) cell keeps the two paths
+        # bit-identical — not just the registry's hand-picked scenarios
+        params = SimParams(n_nodes=n_nodes, duration=0.3, seed=seed)
+        wl = WorkloadSpec(rate=150.0, duration=0.29, seed=seed)
+        traces = []
+        for scalar in (False, True):
+            rec = EventTraceRecorder()
+            ClusterSim(dataclasses.replace(params, scalar_synth=scalar),
+                       wl, None, plane=rec).run()
+            traces.append(rec.batches)
+        _assert_traces_equal(*traces, ctx=f"seed={seed},n={n_nodes}")
+
+
+@pytest.mark.slow
+class TestGoldenFixtures:
+    """The committed scalar-reference fixture pins findings AND metrics;
+    the vectorized path must reproduce it exactly."""
+
+    @pytest.mark.parametrize("name", sorted(SCENARIOS))
+    def test_vectorized_reproduces_golden(self, name):
+        sc = SCENARIOS[name].variant(scalar_synth=False)
+        m, plane, _ = run_scenario(sc.fault, sc.params, sc.workload)
+        got = [[f.name, f.node, f.ts, f.severity, f.score]
+               for f in plane.findings]
+        g = GOLDEN[name]
+        assert got == g["findings"], f"{name}: findings diverge from golden"
+        gm = g["metrics"]
+        assert m.completed == gm["completed"]
+        assert m.tokens_out == gm["tokens_out"]
+        assert m.first_finding_ts == gm["first_finding_ts"]
+        assert m.p(0.5) == gm["p50_latency"]
+        assert m.p(0.99) == gm["p99_latency"]
+        assert m.p_ttft(0.5) == gm["p50_ttft"]
+        assert m.p_ttft(0.99) == gm["p99_ttft"]
+
+    @pytest.mark.parametrize("name", ["healthy", "tp_straggler",
+                                      "early_completion"])
+    def test_scalar_reference_still_matches_golden(self, name):
+        # staleness guard: the fixture IS the scalar path's output
+        sc = SCENARIOS[name].variant(scalar_synth=True)
+        m, plane, _ = run_scenario(sc.fault, sc.params, sc.workload)
+        got = [[f.name, f.node, f.ts, f.severity, f.score]
+               for f in plane.findings]
+        assert got == GOLDEN[name]["findings"], (
+            f"{name}: scalar reference drifted from committed golden — "
+            "if intentional, run tests/regen_golden.py")
+
+    def test_golden_covers_registry(self):
+        assert set(GOLDEN) == set(SCENARIOS)
+
+
+class TestAdmissionPath:
+    """The O(n^2) pop(0) admission is gone; semantics are preserved."""
+
+    def test_cursor_admits_every_arrival_exactly_once(self):
+        params = SimParams(duration=1.0, seed=5)
+        wl = WorkloadSpec(rate=400.0, duration=0.98, burst_factor=16.0,
+                          seed=5)
+        sim = ClusterSim(params, wl, None, plane=None)
+        sim.run()
+        # every generated request was either admitted (queued/active/
+        # completed) — none lost, none duplicated
+        n_active = sum(len(a) for a in sim.active)
+        n_queued = sum(len(q) for q in sim.queues)
+        assert sim._pend_i == len(sim.pending)
+        assert n_active + n_queued + sim.metrics.completed == len(
+            sim.requests)
+        # the backlog list itself is never mutated by admission
+        assert sim.pending == sorted(sim.requests, key=lambda r: r.arrival)
+
+    def test_queued_work_accounting_stays_consistent(self):
+        params = SimParams(duration=0.8, seed=9)
+        wl = WorkloadSpec(rate=500.0, duration=0.78, seed=9)
+        sim = ClusterSim(params, wl, None, plane=None)
+        sim.run()
+        for node, q in enumerate(sim.queues):
+            assert sim._queued_work[node] == sum(
+                max(r.decode_len, 1) for r in q)
+
+
+@pytest.mark.slow
+class TestSweepRunner:
+    SCENARIO_SUBSET = ("healthy", "tp_straggler", "hot_replica")
+
+    def test_parallel_sweep_detects_and_aggregates(self):
+        report = run_sweep(SweepConfig(
+            scenarios=self.SCENARIO_SUBSET, seeds=(0,), workers=2))
+        assert len(report.results) == 3
+        assert report.hit_rate() == 1.0
+        assert report.false_positives() == 0
+        assert report.events > 0
+        summary = report.summary()
+        assert summary["cells"] == 3
+        assert set(summary["scenarios"]) == set(self.SCENARIO_SUBSET)
+
+    def test_parallel_equals_sequential(self):
+        cfg = dict(scenarios=self.SCENARIO_SUBSET, seeds=(0, 1))
+        par = run_sweep(SweepConfig(workers=2, **cfg))
+        seq = run_sweep(SweepConfig(workers=1, **cfg))
+        key = lambda r: (r.scenario, r.seed)
+        for a, b in zip(sorted(par.results, key=key),
+                        sorted(seq.results, key=key)):
+            assert (a.scenario, a.seed, a.hit, a.findings, a.completed,
+                    a.tokens_out, a.detect_latency) == \
+                   (b.scenario, b.seed, b.hit, b.findings, b.completed,
+                    b.tokens_out, b.detect_latency)
+
+    def test_seed_grid_and_unknown_scenario_rejected(self):
+        cfg = SweepConfig(scenarios=("healthy",), seeds=(0, 1, 2))
+        assert len(cfg.jobs()) == 3
+        with pytest.raises(ValueError):
+            SweepConfig(scenarios=("nope",)).jobs()

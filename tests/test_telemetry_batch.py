@@ -14,6 +14,7 @@ bounded ring-buffer EventStream.
 import dataclasses
 import random
 
+import numpy as np
 import pytest
 
 try:
@@ -24,6 +25,7 @@ except ImportError:     # clean checkout: seeded-random fallback
 from repro.core import TelemetryPlane
 from repro.core.detectors import Detector, DetectorConfig
 from repro.core.events import (
+    BATCH_COLUMNS,
     CollectiveOp,
     Event,
     EventBatch,
@@ -208,6 +210,98 @@ class TestEventBatch:
         mask = batch.kind == EventKind.INGRESS_PKT
         assert batch.compress(mask).to_events() == [
             e for e in evs if e.kind == EventKind.INGRESS_PKT]
+
+    def test_add_many_array_columns_and_length_validation(self):
+        b = EventBatchBuilder()
+        b.add_many(np.asarray([0.1, 0.2, 0.3]), kind=EventKind.EGRESS_PKT,
+                   node=np.asarray([1, 2, 3]), flow=[7, 8, 9], size=64)
+        evs = b.build().to_events()
+        assert [e.node for e in evs] == [1, 2, 3]
+        assert [e.flow for e in evs] == [7, 8, 9]
+        assert all(e.size == 64 for e in evs)
+        with pytest.raises(ValueError):
+            b.add_many([0.1, 0.2], kind=EventKind.EGRESS_PKT,
+                       flow=[1, 2, 3])
+        with pytest.raises(ValueError):
+            b.add_many([0.1, 0.2], kind=EventKind.EGRESS_PKT,
+                       flow=np.asarray([1]))
+
+    def test_add_columns_mixed_scalar_and_array(self):
+        b = EventBatchBuilder()
+        b.add_columns(np.asarray([0.3, 0.1, 0.2]),
+                      EventKind.INGRESS_PKT,
+                      node=np.asarray([3, 1, 2]),
+                      flow=5, size=np.asarray([30, 10, 20]), meta=9)
+        evs = b.build(sort=True).to_events()
+        assert [e.ts for e in evs] == [0.1, 0.2, 0.3]
+        assert [e.node for e in evs] == [1, 2, 3]       # sorted with ts
+        assert [e.size for e in evs] == [10, 20, 30]
+        assert all(e.flow == 5 and e.meta == 9
+                   and e.kind == EventKind.INGRESS_PKT for e in evs)
+
+    def test_add_columns_interleaves_with_row_adds(self):
+        # insertion order across granularities is preserved for stable
+        # tie-breaking
+        b = EventBatchBuilder()
+        b.add(ts=1.0, kind=EventKind.EGRESS_PKT, node=0)
+        b.add_columns(np.asarray([1.0, 1.0]), EventKind.EGRESS_PKT,
+                      node=np.asarray([1, 2]))
+        b.add(ts=1.0, kind=EventKind.EGRESS_PKT, node=3)
+        assert len(b) == 4
+        assert [e.node for e in b.build().to_events()] == [0, 1, 2, 3]
+        b.clear()
+        assert len(b) == 0
+        assert b.build().to_events() == []
+
+    def test_add_columns_validation(self):
+        b = EventBatchBuilder()
+        with pytest.raises(ValueError):       # length mismatch
+            b.add_columns(np.asarray([0.1, 0.2]), EventKind.EGRESS_PKT,
+                          node=np.asarray([1, 2, 3]))
+        with pytest.raises(TypeError):        # float array in int column
+            b.add_columns(np.asarray([0.1, 0.2]), EventKind.EGRESS_PKT,
+                          size=np.asarray([1.5, 2.5]))
+        with pytest.raises(ValueError):       # ts must be 1-D
+            b.add_columns(np.zeros((2, 2)), EventKind.EGRESS_PKT)
+        with pytest.raises(ValueError):
+            b.add_many([0.1, 0.2], kind=EventKind.EGRESS_PKT, node=[1])
+        # failed appends must leave NO state behind: a later valid append
+        # and build must reflect only the valid rows (no orphan fragments)
+        b.add_columns(np.asarray([0.25]), EventKind.INGRESS_PKT, node=4)
+        evs = b.build().to_events()
+        assert len(evs) == 1
+        assert (evs[0].ts, evs[0].node, evs[0].kind) == (
+            0.25, 4, EventKind.INGRESS_PKT)
+        b.clear()
+        b.add_columns(np.empty(0), EventKind.EGRESS_PKT)   # empty is a no-op
+        assert len(b) == 0
+        # smaller int dtypes are widened, not rejected
+        b.add_columns(np.asarray([0.5]), EventKind.EGRESS_PKT,
+                      size=np.asarray([7], np.int32))
+        assert b.build().to_events()[0].size == 7
+
+    def test_add_columns_equivalent_to_row_adds(self):
+        rng = random.Random(7)
+        evs = _random_trace(rng, 60)
+        rows = EventBatchBuilder()
+        cols = EventBatchBuilder()
+        for ev in evs:
+            rows.add_event(ev)
+        cols.add_columns(
+            np.asarray([e.ts for e in evs]),
+            np.asarray([int(e.kind) for e in evs]),
+            node=np.asarray([e.node for e in evs]),
+            device=np.asarray([e.device for e in evs]),
+            flow=np.asarray([e.flow for e in evs]),
+            size=np.asarray([e.size for e in evs]),
+            depth=np.asarray([e.depth for e in evs]),
+            op=np.asarray([e.op for e in evs]),
+            group=np.asarray([e.group for e in evs]),
+            meta=np.asarray([e.meta for e in evs]),
+            replica=np.asarray([e.replica for e in evs]))
+        a, b = rows.build(sort=True), cols.build(sort=True)
+        for col in BATCH_COLUMNS:
+            assert np.array_equal(getattr(a, col), getattr(b, col)), col
 
 
 class TestEventStreamRing:
