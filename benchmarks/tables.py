@@ -9,6 +9,9 @@ Each returns a list of (name, us_per_call, derived) rows; run.py prints CSV.
                       hit/miss, and healthy-run false positives
   mitigation_loop   — §5 closed loop: throughput/latency with mitigation
                       off vs on
+  control_loop      — closed-loop topology comparison (dpu / instant /
+                      none): time-to-detect/actuate/recover + p99 per
+                      scenario; CONTROL_LOOP_SCENARIOS narrows the grid
   kernels_bench     — Pallas kernel hot spots vs jnp oracle (CPU interpret
                       overhead is not meaningful; we time the oracle path
                       and validate the kernel separately)
@@ -419,6 +422,99 @@ def mitigation_loop() -> list[tuple]:
     return rows
 
 
+def control_loop(seed: int = 0) -> list[tuple]:
+    """Closed-loop topology comparison: ``dpu`` vs ``instant`` vs ``none``.
+
+    Every registry fault scenario (plus the healthy baselines) runs under
+    three control topologies:
+
+      none    — detection only, nobody acts (the damage baseline)
+      instant — the legacy in-process controller (zero loop latency)
+      dpu     — the DPUSidecar: modeled transport + on-DPU budget + policy
+                arbitration + command bus (the paper's actual deployment)
+
+    Per-cell derived fields: ``hit`` (bound detector fired),
+    ``t_detect_s`` (host round the loop first saw the bound finding,
+    relative to fault start), ``t_actuate_s`` (first applied action),
+    ``t_recover_s`` (fault neutralized), ``recovered``, ``p99_latency_s``,
+    ``actions``.  Scenario durations are extended by 1 s over canonical so
+    slow-confirming rows fit their confirmation + actuation inside the run.
+
+    The summary row asserts the acceptance properties: dpu recovers every
+    fault scenario with hit_rate 1.0, healthy runs take zero actions in
+    every mode, and time-to-mitigate under dpu is strictly greater than
+    instant wherever instant recovers at all.
+    """
+    import os
+
+    from repro.sim import SCENARIOS, run_scenario
+
+    names = os.environ.get("CONTROL_LOOP_SCENARIOS")
+    if names:
+        picked = names.split(",")
+    else:
+        picked = [n for n, sc in SCENARIOS.items()]
+    rows = []
+    recover = {}
+    hits = {}
+    healthy_actions = 0
+    for name in picked:
+        sc = SCENARIOS[name].variant(seed=seed)
+        for mode in ("none", "instant", "dpu"):
+            params = dataclasses.replace(
+                sc.params, duration=sc.params.duration + 1.0, control=mode)
+            t0 = time.perf_counter()
+            m, plane, sim = run_scenario(
+                dataclasses.replace(sc.fault), params, sc.workload,
+                mitigate=(mode != "none"))
+            wall = (time.perf_counter() - t0) * 1e6
+            fired = {f.name for f in plane.findings}
+            start = sc.fault.start if sc.row_id else 0.0
+            if sc.row_id:
+                hit = sc.row_id in fired
+                hits.setdefault(name, {})[mode] = hit
+                recover.setdefault(name, {})[mode] = (
+                    sim.fault.mitigated, m.mitigated_ts - start
+                    if m.mitigated_ts >= 0 else float("nan"))
+            else:
+                hit = not fired
+                healthy_actions += len(plane.actions)
+            rows.append((
+                f"control_loop/{name}/{mode}", wall,
+                f"hit={int(hit)};"
+                f"t_detect_s={m.detect_wall_ts - start:.3f};"
+                f"t_actuate_s={m.first_action_ts - start:.3f};"
+                f"t_recover_s={m.mitigated_ts - start:.3f};"
+                f"recovered={int(sim.fault.mitigated)};"
+                f"p99_latency_s={m.p(0.99):.3f};"
+                f"actions={len(plane.actions)}"))
+    faulted = [n for n in picked if SCENARIOS[n].row_id]
+    dpu_recovered = all(recover[n]["dpu"][0] for n in faulted)
+    dpu_hit = all(hits[n]["dpu"] for n in faulted)
+    both = [n for n in faulted if recover[n]["instant"][0]]
+    strictly_slower = all(recover[n]["dpu"][1] > recover[n]["instant"][1]
+                          for n in both)
+    only_dpu = [n for n in faulted if not recover[n]["instant"][0]]
+    summary = (
+        f"scenarios={len(faulted)};"
+        f"dpu_hit_rate={1.0 if dpu_hit else 0.0:.3f};"
+        f"dpu_recovered_all={int(dpu_recovered)};"
+        f"dpu_ttm_gt_instant={int(strictly_slower)};"
+        f"instant_unrecovered={len(only_dpu)};"
+        f"healthy_fp_actions={healthy_actions}")
+    rows.append(("control_loop/summary", 0.0, summary))
+    # the acceptance properties are a GATE, not a printout: a regression on
+    # any grid (smoke or the CI full registry) must exit nonzero
+    if not (dpu_hit and dpu_recovered and strictly_slower
+            and healthy_actions == 0):
+        failed = sorted(n for n in faulted
+                        if not (hits[n]["dpu"] and recover[n]["dpu"][0]))
+        raise AssertionError(
+            f"control_loop acceptance failed ({summary}); "
+            f"bad scenarios: {failed or 'ttm/healthy property'}")
+    return rows
+
+
 def serving_engine() -> list[tuple]:
     """Live-engine throughput: continuous vs static batching (the paper's
     early-completion pathology on the real JAX engine)."""
@@ -514,5 +610,5 @@ def roofline_readout() -> list[tuple]:
 ALL_TABLES = [
     table1_archzoo, table2_signals, telemetry_perf, sim_perf, table3a,
     table3b, table3c, table3d, router_policies, mitigation_loop,
-    serving_engine, kernels_bench, roofline_readout,
+    control_loop, serving_engine, kernels_bench, roofline_readout,
 ]

@@ -4,8 +4,9 @@ attribution, and mitigation plane for distributed LLM inference/training.
 Public surface:
   events       — DPU-observable event schema (the §4.3 boundary, enforced)
   sketch       — O(1) streaming statistics (line-rate processing)
-  detectors    — 29 executable detectors, one per runbook row
-                 (the paper's 28 + the 3d data-parallel routing extension)
+  detectors    — 30 executable detectors, one per runbook row (the paper's
+                 28 + the 3d data-parallel routing extension + the DPU
+                 self-diagnosis row)
   runbooks     — Tables 3(a)/(b)/(c) as a declarative registry
   attribution  — §4.2 cross-vantage root-cause attribution
   mitigation   — §5 closed-loop controller
@@ -33,9 +34,11 @@ from repro.core.runbooks import (
     ALL_RUNBOOKS,
     BY_ID,
     BY_TABLE,
+    DEFAULT_TABLES,
     RUNBOOK_3A,
     RUNBOOK_3B,
     RUNBOOK_3C,
+    RUNBOOK_DPU,
     RunbookEntry,
     build_detectors,
 )
@@ -43,10 +46,11 @@ from repro.core.telemetry import DPUAgent, TelemetryPlane, TelemetryStats
 
 __all__ = [
     "ACTIONS", "ALL_DETECTORS", "ALL_RUNBOOKS", "Attribution", "Attributor",
-    "BY_ID", "BY_TABLE", "CollectiveOp", "Detector", "DetectorConfig",
+    "BY_ID", "BY_TABLE", "CollectiveOp", "DEFAULT_TABLES", "Detector",
+    "DetectorConfig",
     "DPUAgent", "EngineControls", "Event", "EventBatch",
     "EventBatchBuilder", "EventKind", "EventStream",
     "Finding", "ActionRecord", "MitigationController", "NullEngine",
-    "RUNBOOK_3A", "RUNBOOK_3B", "RUNBOOK_3C", "RunbookEntry",
+    "RUNBOOK_3A", "RUNBOOK_3B", "RUNBOOK_3C", "RUNBOOK_DPU", "RunbookEntry",
     "TelemetryPlane", "TelemetryStats", "build_detectors",
 ]

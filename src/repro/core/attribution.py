@@ -32,6 +32,7 @@ LOCUS_NETWORK = "internode_network"     # E-W fabric
 LOCUS_EGRESS = "egress_path"            # NIC -> client
 LOCUS_WORKLOAD = "workload_shape"       # seq-length variance, early stop
 LOCUS_ROUTER = "router_dispatch"        # DP-replica routing layer
+LOCUS_DPU = "telemetry_plane"           # the observer itself is overloaded
 LOCUS_UNKNOWN = "unknown"
 
 #: finding name -> the locus that finding is *direct* evidence for
@@ -69,6 +70,8 @@ DIRECT_LOCUS: dict[str, str] = {
     "early_stop_skew_across_nodes": LOCUS_WORKLOAD,
     # 3d
     "cross_replica_skew": LOCUS_ROUTER,
+    # DPU self-diagnosis
+    "dpu_saturation": LOCUS_DPU,
 }
 
 
@@ -255,6 +258,20 @@ class Attributor:
                     "Ingress healthy but per-replica egress rates diverge "
                     f"and replica {f.node}'s queue grows: the DP routing "
                     "layer is concentrating load (policy/staleness/affinity)."))
+
+        # Rule 6: the observer itself saturating is always self-attributed —
+        # and it taints confidence in everything else this window, so it
+        # carries high confidence of its own locus.
+        if f.name == "dpu_saturation":
+            return Attribution(
+                f.ts, LOCUS_DPU, node=-1, confidence=0.9, primary=f,
+                supporting=(),
+                narrative=(
+                    "DPU ingest budget saturated (ring "
+                    f"{f.evidence.get('ring_occupancy_pct', '?')}%, "
+                    f"{f.evidence.get('shed_rows', 0)} rows shed): the "
+                    "telemetry plane is degraded; concurrent findings may "
+                    "be late or missing — shed load at the tap."))
 
         # Fallback: direct single-vantage mapping.
         locus = DIRECT_LOCUS.get(f.name, LOCUS_UNKNOWN)

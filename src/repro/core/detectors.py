@@ -48,6 +48,12 @@ META_P2P_INTRA = 0       # P2P_BURST inside one node (PCIe peer path)
 META_P2P_INTER = 1       # P2P_BURST between nodes (PP handoff)
 META_P2P_KV = 2          # P2P_BURST carrying KV-cache pages
 META_KV_OCC = 3          # QUEUE_SAMPLE carrying KV-occupancy (% of pool)
+META_TAP_DEBUG = 4       # QUEUE_SAMPLE from a verbose debug tap (payload
+#                          noise for the telemetry plane; no detector keys
+#                          on it — it only consumes DPU ingest budget)
+META_DPU_RING = 5        # QUEUE_SAMPLE: DPU self-telemetry (ingest-ring
+#                          occupancy % in depth, rows shed since the last
+#                          sample in size; node = -1)
 
 
 @dataclass(frozen=True)
@@ -1710,6 +1716,80 @@ class CrossReplicaSkew(Detector):
             queue_depths=depths)]
 
 
+# ======================================================================
+# DPU self-diagnosis — the telemetry plane watching itself
+# ======================================================================
+
+
+class DPUSaturation(Detector):
+    """dpu.1 — the DPU's own ingest budget saturates and sheds load.
+
+    Signal source is the sidecar's self-telemetry (``META_DPU_RING``
+    QUEUE_SAMPLEs: ring occupancy percent in ``depth``, rows shed since the
+    previous sample in ``size``).  Any shed is critical — findings are now
+    provably incomplete; sustained high occupancy without shed is the
+    warning precursor.  This row exists because a control plane that cannot
+    notice its *own* overload silently degrades every other row.
+    """
+
+    name = "dpu_saturation"
+    table = "dpu"
+    stage = "telemetry plane (all vantages degraded)"
+    root_cause = "event volume exceeds DPU ingest/compute budget " \
+                 "(debug-tap storm, line-rate burst, undersized budget)"
+    directive = "raise tap sampling stride; shed low-priority event " \
+                "classes; bound per-class event rates"
+    interested = frozenset({EventKind.QUEUE_SAMPLE})
+
+    WARN_OCCUPANCY = 80      # ring percent considered "about to shed"
+    MIN_SAMPLES = 4          # self-samples before the row may fire
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        self.occ = 0             # latest ring occupancy percent
+        self.occ_peak = 0        # peak since the last poll
+        self.shed = 0            # rows shed since the last poll
+
+    def update(self, ev: Event) -> None:
+        if ev.kind != EventKind.QUEUE_SAMPLE or ev.meta != META_DPU_RING:
+            return
+        self.events_seen += 1
+        self.occ = int(ev.depth)
+        if self.occ > self.occ_peak:
+            self.occ_peak = self.occ
+        self.shed += int(ev.size)
+
+    def update_batch(self, batch: EventBatch) -> None:
+        # single-kind safe: only QUEUE_SAMPLE rows arrive; order within the
+        # kind is wire order, so "latest occupancy" matches the scalar path
+        m = batch.meta == META_DPU_RING
+        if not m.any():
+            return
+        self.events_seen += int(m.sum())
+        depths = batch.depth[m]
+        self.occ = int(depths[-1])
+        peak = int(depths.max())
+        if peak > self.occ_peak:
+            self.occ_peak = peak
+        self.shed += int(batch.size[m].sum())
+
+    def poll(self, now: float) -> list[Finding]:
+        if self.events_seen < self.MIN_SAMPLES:
+            # keep accumulating: sheds during warmup must surface in the
+            # first eligible poll, not vanish
+            return []
+        shed, self.shed = self.shed, 0
+        peak, self.occ_peak = self.occ_peak, self.occ
+        if shed > 0:
+            return [self._mk(now, score=10.0 + shed / 100.0,
+                             severity="critical", shed_rows=shed,
+                             ring_occupancy_pct=peak)]
+        if peak >= self.WARN_OCCUPANCY:
+            return [self._mk(now, score=peak / 10.0, severity="warn",
+                             shed_rows=0, ring_occupancy_pct=peak)]
+        return []
+
+
 ALL_DETECTORS: tuple[type[Detector], ...] = (
     # 3(a)
     BurstAdmissionBacklog, IngressStarvation, FlowSkewAcrossSessions,
@@ -1726,4 +1806,6 @@ ALL_DETECTORS: tuple[type[Detector], ...] = (
     KVCacheTransferBottleneck, EarlyStopSkewAcrossNodes,
     # 3(d)
     CrossReplicaSkew,
+    # DPU self-diagnosis
+    DPUSaturation,
 )

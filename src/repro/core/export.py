@@ -7,19 +7,20 @@ registry — documentation stays generated from the single source of truth.
 from __future__ import annotations
 
 from repro.core.mitigation import ACTIONS
-from repro.core.runbooks import BY_TABLE
+from repro.core.runbooks import DEFAULT_TABLES, BY_TABLE
 
 TITLES = {
     "3a": "Table 3(a) — North-South Runbook",
     "3b": "Table 3(b) — PCIe Observer Runbook",
     "3c": "Table 3(c) — East-West Sensing Runbook",
     "3d": "Table 3(d) — Data-Parallel Replica Runbook (extension)",
+    "dpu": "Table (dpu) — DPU Self-Diagnosis Runbook (extension)",
 }
 
 
 def render() -> str:
     out = ["# Runbooks (generated from repro.core.runbooks)\n"]
-    for table in ("3a", "3b", "3c", "3d"):
+    for table in DEFAULT_TABLES:
         out.append(f"\n## {TITLES[table]}\n")
         out.append("| Skew/Imbalance | Signal (Red Flag) | Lifecycle "
                    "Stages | Likely Root Cause | Mitigation Directives | "

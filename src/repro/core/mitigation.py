@@ -9,8 +9,18 @@ The controller consumes attributions (``core.attribution``) and issues typed
 *actions* against anything implementing ``EngineControls`` — the live JAX
 serving engine, the trainer, and the cluster simulator all implement it.
 Every runbook row's "Mitigation Directives" column maps to one action key
-(see ``runbooks.RunbookEntry.action``); the controller adds hysteresis so a
-single noisy finding doesn't thrash the engine.
+(``runbooks.RunbookEntry.action``); an import-time assertion below keeps the
+two registries in lockstep.  The controller adds per-(action, node)
+hysteresis and a cooldown so a single noisy finding doesn't thrash the
+engine.
+
+This is the *instant*-mode reference: attribution -> action in the same
+call, zero transport latency.  The default closed-loop topology routes
+decisions through ``repro.dpu`` instead (``PolicyEngine`` arbitration over
+a modeled transport and command bus), which subsumes this hysteresis; the
+controller is retained verbatim so instant-mode golden fixtures and the
+``control_loop`` benchmark's baseline stay bit-identical to the seed
+behavior.
 """
 
 from __future__ import annotations
@@ -61,7 +71,18 @@ ACTIONS: dict[str, str] = {
     "compress_kv": "enable KV-cache compression for transfers",
     "rebalance_replicas": "redistribute queued requests across DP replicas; "
                           "refresh the router view / break hot affinity",
+    "throttle_telemetry": "raise the telemetry tap's sampling stride / shed "
+                          "low-priority event classes so the DPU ingest "
+                          "budget recovers",
 }
+
+# keep the two registries in lockstep: every runbook row must actuate
+# through a key the controller (and the DPU policy engine) understands.
+# BY_ID is imported above, so a row added with an unregistered action fails
+# at import time, not at actuation time.
+_orphan_actions = sorted({e.action for e in BY_ID.values()} - set(ACTIONS))
+assert not _orphan_actions, (
+    f"runbook rows reference actions missing from ACTIONS: {_orphan_actions}")
 
 
 @dataclass(frozen=True)
@@ -110,6 +131,9 @@ class MitigationController:
             "locus": attribution.locus,
             "score": f.score,
             "narrative": attribution.narrative,
+            # instant topology: actuation time IS the attribution time
+            # (actuators like ReplicaSet read wall time from here)
+            "now": attribution.ts,
             **f.evidence,
         }
         applied = self.engine.apply_action(entry.action, attribution.node,

@@ -323,17 +323,38 @@ RUNBOOK_3D: tuple[RunbookEntry, ...] = (
         scenario="hot_replica"),
 )
 
+RUNBOOK_DPU: tuple[RunbookEntry, ...] = (
+    RunbookEntry(
+        "dpu_saturation", "dpu", "DPU telemetry-plane saturation",
+        "On-DPU ingest ring fills; event batches shed; ring occupancy "
+        "pinned high while shed counters climb",
+        "Telemetry plane (all vantages degraded)",
+        "Findings arrive late or never, cluster-wide; the mitigation loop "
+        "reacts to a stale picture",
+        "Event volume exceeds the DPU's ingest/compute budget (verbose "
+        "debug tap, line-rate burst, undersized budget)",
+        "Raise tap sampling stride; shed low-priority event classes; "
+        "bound per-class event rates at the source",
+        D.DPUSaturation, action="throttle_telemetry",
+        scenario="dpu_saturation"),
+)
+
+#: every table the full DPU agent runs (the paper's three runbooks, the
+#: 3d data-parallel extension, and the plane's self-diagnosis row)
+DEFAULT_TABLES: tuple[str, ...] = ("3a", "3b", "3c", "3d", "dpu")
+
 ALL_RUNBOOKS: tuple[RunbookEntry, ...] = (
-    RUNBOOK_3A + RUNBOOK_3B + RUNBOOK_3C + RUNBOOK_3D)
+    RUNBOOK_3A + RUNBOOK_3B + RUNBOOK_3C + RUNBOOK_3D + RUNBOOK_DPU)
 
 BY_ID: dict[str, RunbookEntry] = {e.row_id: e for e in ALL_RUNBOOKS}
 BY_TABLE: dict[str, tuple[RunbookEntry, ...]] = {
     "3a": RUNBOOK_3A, "3b": RUNBOOK_3B, "3c": RUNBOOK_3C, "3d": RUNBOOK_3D,
+    "dpu": RUNBOOK_DPU,
 }
 
 
 def build_detectors(cfg: DetectorConfig | None = None,
-                    tables: tuple[str, ...] = ("3a", "3b", "3c", "3d"),
+                    tables: tuple[str, ...] = DEFAULT_TABLES,
                     ) -> dict[str, Detector]:
     """Instantiate one detector per runbook row (the full DPU agent)."""
     cfg = cfg or DetectorConfig()

@@ -29,7 +29,7 @@ from repro.core.mitigation import (
     MitigationController,
     NullEngine,
 )
-from repro.core.runbooks import build_detectors
+from repro.core.runbooks import DEFAULT_TABLES, build_detectors
 
 
 @dataclass
@@ -81,7 +81,7 @@ class DPUAgent:
     SMALL_BATCH = 64
 
     def __init__(self, node: int, cfg: DetectorConfig | None = None,
-                 tables: tuple[str, ...] = ("3a", "3b", "3c", "3d"),
+                 tables: tuple[str, ...] = DEFAULT_TABLES,
                  full_trace: bool = False,
                  sample_every: int = 32) -> None:
         self.node = node
@@ -179,7 +179,7 @@ class TelemetryPlane:
                  cfg: DetectorConfig | None = None,
                  engine: EngineControls | None = None,
                  poll_interval: float = 0.25,
-                 tables: tuple[str, ...] = ("3a", "3b", "3c", "3d"),
+                 tables: tuple[str, ...] = DEFAULT_TABLES,
                  mitigate: bool = True,
                  full_trace: bool = False) -> None:
         self.cfg = cfg or DetectorConfig()

@@ -1,0 +1,29 @@
+"""DPU-resident control plane — the paper's sidecar, modeled honestly.
+
+Everything the repo previously did in-process (detectors polled inline,
+mitigation applied the same instant an attribution appeared) moves behind a
+modeled transport and a bounded compute budget here:
+
+  transport  — one-way links with delay, jitter, and loss
+  budget     — events/sec ceiling + bounded ingest ring (load shedding)
+  policy     — arbitration of concurrent attributions (priority, cooldown,
+               flap damping, conflict resolution)
+  command    — command bus with RTT, acks, retries, stale invalidation
+  sidecar    — DPUSidecar tying tap -> budget -> detectors -> policy ->
+               command bus -> host actuator
+
+``sim.cluster.run_scenario(control="dpu")`` runs the full asynchronous
+loop; ``control="instant"`` preserves the legacy zero-latency topology for
+golden parity.
+"""
+
+from repro.dpu.budget import DPUBudget
+from repro.dpu.command import BusStats, CommandBus
+from repro.dpu.policy import CONFLICT_GROUPS, Command, PolicyEngine
+from repro.dpu.sidecar import DPUParams, DPUSidecar
+from repro.dpu.transport import LinkParams, ModeledLink
+
+__all__ = [
+    "BusStats", "CONFLICT_GROUPS", "Command", "CommandBus", "DPUBudget",
+    "DPUParams", "DPUSidecar", "LinkParams", "ModeledLink", "PolicyEngine",
+]

@@ -1,0 +1,149 @@
+"""Command bus — reliable-ish delivery of mitigation commands to the host.
+
+The downlink half of the control loop: commands cross a ``ModeledLink`` to
+the host actuator, the actuation result crosses another link back as an
+ack, and the bus supervises the exchange the way a real DPU control agent
+must:
+
+  retries             — an unacked command is re-sent after ``ack_timeout``
+                        up to ``max_retries`` attempts (each resend re-risks
+                        the wire);
+  idempotent delivery — a retry that races a slow ack is applied at most
+                        once (the host tracks applied cmd ids and re-acks);
+  stale invalidation  — a command older than ``stale_after`` at delivery
+                        time is discarded unapplied: the evidence that
+                        produced it no longer describes the cluster;
+  supersession        — if a newer command for the same (action, node) has
+                        already been applied, an older straggler is dropped.
+
+Every applied command is recorded as a ``core.mitigation.ActionRecord``
+(host-clock timestamped) so closed-loop consumers see one action log
+regardless of whether the instant controller or the DPU path produced it.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.mitigation import ActionRecord, EngineControls
+from repro.dpu.policy import Command
+from repro.dpu.transport import LinkParams, ModeledLink
+
+
+@dataclass
+class _Outstanding:
+    cmd: Command
+    attempt: int
+    last_sent: float
+
+
+@dataclass
+class BusStats:
+    sent: int = 0
+    retries: int = 0
+    acked: int = 0
+    applied: int = 0
+    rejected: int = 0            # delivered but actuator returned False
+    stale_dropped: int = 0
+    superseded: int = 0
+    duplicates: int = 0          # retry arrived after the original applied
+    expired: int = 0             # gave up after max_retries
+    extra: dict = field(default_factory=dict)
+
+
+class CommandBus:
+    """Down/ack link pair + retry supervisor around one host actuator."""
+
+    def __init__(self, engine: EngineControls | None, rng,
+                 down: LinkParams | None = None,
+                 ack: LinkParams | None = None,
+                 ack_timeout: float = 20e-3,
+                 max_retries: int = 3,
+                 stale_after: float = 0.5,
+                 on_ack=None) -> None:
+        self.engine = engine
+        self.down = ModeledLink(down or LinkParams(), rng)
+        self.ack = ModeledLink(ack or down or LinkParams(), rng)
+        self.ack_timeout = ack_timeout
+        self.max_retries = max_retries
+        self.stale_after = stale_after
+        self.on_ack = on_ack
+        self._outstanding: dict[int, _Outstanding] = {}
+        self._applied_ids: set[int] = set()
+        # newest applied command id per (action, node): supersession check
+        self._newest_applied: dict[tuple[str, int], int] = {}
+        self.stats = BusStats()
+        self.log: list[ActionRecord] = []
+
+    # -- DPU side --------------------------------------------------------
+
+    def send(self, cmd: Command, now: float) -> None:
+        self.stats.sent += 1
+        self._outstanding[cmd.cmd_id] = _Outstanding(cmd, 1, now)
+        self.down.send(now, cmd)
+
+    # -- pump (called once per host round, both clocks agree on ``now``) --
+
+    def advance(self, now: float) -> list[ActionRecord]:
+        """Deliver due commands, process acks, drive retries.
+
+        Returns the ActionRecords applied during this call.
+        """
+        applied_now: list[ActionRecord] = []
+        for cmd in self.down.deliver(now):
+            applied_now.extend(self._deliver(cmd, now))
+        for cmd, ok in self.ack.deliver(now):
+            if cmd.cmd_id in self._outstanding:
+                del self._outstanding[cmd.cmd_id]
+                self.stats.acked += 1
+                if self.on_ack is not None:
+                    self.on_ack(cmd, ok)
+        self._retry(now)
+        return applied_now
+
+    def _deliver(self, cmd: Command, now: float) -> list[ActionRecord]:
+        if cmd.cmd_id in self._applied_ids:
+            # retry raced the ack: apply-at-most-once, re-ack
+            self.stats.duplicates += 1
+            self.ack.send(now, (cmd, True))
+            return []
+        if now - cmd.ts > self.stale_after:
+            self.stats.stale_dropped += 1
+            self.ack.send(now, (cmd, False))
+            return []
+        newest = self._newest_applied.get((cmd.action, cmd.node))
+        if newest is not None and newest > cmd.cmd_id:
+            self.stats.superseded += 1
+            self.ack.send(now, (cmd, False))
+            return []
+        # actuators that need wall time (e.g. ReplicaSet view refresh) read
+        # it from the detail; the command's own ts is its decision time
+        detail = {**cmd.detail, "now": now}
+        ok = (self.engine.apply_action(cmd.action, cmd.node, detail)
+              if self.engine is not None else False)
+        self._applied_ids.add(cmd.cmd_id)
+        self._newest_applied[(cmd.action, cmd.node)] = cmd.cmd_id
+        self.stats.applied += 1
+        if not ok:
+            self.stats.rejected += 1
+        rec = ActionRecord(ts=now, action=cmd.action, node=cmd.node,
+                           row_id=cmd.row_id, locus=cmd.locus, applied=ok,
+                           detail=cmd.detail)
+        self.log.append(rec)
+        self.ack.send(now, (cmd, ok))
+        return [rec]
+
+    def _retry(self, now: float) -> None:
+        for cid in list(self._outstanding):
+            st = self._outstanding[cid]
+            if now - st.last_sent < self.ack_timeout:
+                continue
+            if (st.attempt >= self.max_retries
+                    or now - st.cmd.ts > self.stale_after):
+                del self._outstanding[cid]
+                self.stats.expired += 1
+                continue
+            st.attempt += 1
+            st.last_sent = now
+            self.stats.retries += 1
+            self.down.send(now, st.cmd)

@@ -1,0 +1,215 @@
+"""DPUSidecar — the DPU as a first-class asynchronous node.
+
+Composes the whole on-DPU control plane and exposes the same producer-facing
+protocol a ``TelemetryPlane`` does, so any event producer (the cluster
+simulator, the live serving engine, a ReplicaSet front-end) can be pointed
+at a *modeled* DPU instead of an in-process plane:
+
+    host tap --(uplink: delay/jitter/drop)--> ingest ring (bounded)
+      --> budget-paced drain --> detectors + attribution (TelemetryPlane)
+      --> PolicyEngine (arbitration) --> CommandBus (RTT/acks/retries)
+      --(downlink)--> host actuator (EngineControls.apply_action)
+
+The host drives the loop by calling ``advance(now)`` once per scheduling
+round; everything in between is event-time deterministic, so golden
+fixtures can pin dpu-mode findings the same way they pin instant-mode ones.
+
+Clock discipline: the detector plane runs on *event time* (batch
+timestamps), exactly as in the direct-attach topology — transport delay
+shifts *when* the DPU learns about an event, never the event's own
+timestamp, so detector math (gap trackers, rate meters) is unchanged.  The
+DPU's self-telemetry (ingest-ring occupancy / shed counters, the
+``dpu_saturation`` row's signal) is stamped with the stream clock — the
+newest event timestamp the plane has seen — keeping the plane's poll
+cadence monotone.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.detectors import META_DPU_RING
+from repro.core.events import EventBatch, EventBatchBuilder, EventKind
+from repro.core.mitigation import EngineControls
+from repro.core.telemetry import TelemetryPlane
+from repro.dpu.budget import DPUBudget
+from repro.dpu.command import CommandBus
+from repro.dpu.policy import PolicyEngine
+from repro.dpu.transport import LinkParams, ModeledLink
+
+
+@dataclass(frozen=True)
+class DPUParams:
+    """Everything that distinguishes a modeled DPU from an in-process tap."""
+
+    uplink: LinkParams = field(default_factory=LinkParams)     # host -> DPU
+    downlink: LinkParams = field(default_factory=LinkParams)   # DPU -> host
+    events_per_s: float = 2e6        # on-DPU detector compute ceiling
+    ring_events: int = 65536         # bounded ingest ring (rows)
+    ack_timeout: float = 20e-3
+    max_retries: int = 3
+    stale_after: float = 0.5         # command older than this is invalid
+    # policy-engine knobs (see repro.dpu.policy for the 0.5 floor rationale)
+    min_confidence: float = 0.5
+    confirmations: int = 2
+    cooldown: float = 5.0
+    flap_window: float = 2.0
+    flap_limit: int = 2
+    flap_backoff: float = 2.0
+    quorum: int = 3
+    quorum_dwell: float = 1.6
+
+
+class DPUSidecar:
+    """Asynchronous feedback loop around one TelemetryPlane."""
+
+    def __init__(self, plane: TelemetryPlane,
+                 params: DPUParams | None = None,
+                 engine: EngineControls | None = None,
+                 seed: int = 0,
+                 mitigate: bool = True) -> None:
+        self.plane = plane
+        if plane.controller is not None:
+            # actuation belongs to the policy engine on this topology; the
+            # inner plane only detects and attributes
+            plane.controller = None
+        self.params = p = params or DPUParams()
+        self.rng = np.random.default_rng(seed ^ 0xD9B0)
+        self.uplink = ModeledLink(p.uplink, self.rng)
+        self.budget = DPUBudget(p.events_per_s, p.ring_events)
+        self.policy: PolicyEngine | None = None
+        self.bus: CommandBus | None = None
+        if mitigate:
+            self.policy = PolicyEngine(
+                min_confidence=p.min_confidence,
+                confirmations=p.confirmations, cooldown=p.cooldown,
+                flap_window=p.flap_window, flap_limit=p.flap_limit,
+                flap_backoff=p.flap_backoff, quorum=p.quorum,
+                quorum_dwell=p.quorum_dwell)
+            self.bus = CommandBus(
+                engine, self.rng, down=p.downlink, ack=p.downlink,
+                ack_timeout=p.ack_timeout, max_retries=p.max_retries,
+                stale_after=p.stale_after, on_ack=self.policy.on_ack)
+        self._att_i = 0               # attributions already arbitrated
+        self._shed_seen = 0           # sheds already self-reported
+        self._stream_clock = 0.0      # newest event ts forwarded to the plane
+        # newest event ts that ARRIVED at the DPU (delivered off the uplink,
+        # whether or not the budget has processed it yet).  Self-telemetry
+        # is stamped with this clock: a fully starved budget that forwards
+        # nothing must still report its own saturation — that is the whole
+        # point of the row.
+        self._tap_clock = 0.0
+        self._sample_builder = EventBatchBuilder()
+
+    # -- producer-facing plane protocol -----------------------------------
+
+    def observe_batch(self, batch: EventBatch) -> None:
+        """Tap: the host hands a batch to the wire, not to the detectors."""
+        n = len(batch)
+        if n == 0:
+            return
+        # the tap forwards as soon as the producer flushes: send time is the
+        # newest timestamp in the batch (batches are built time-sorted)
+        self.uplink.send(float(batch.ts[-1]), batch)
+
+    def observe(self, ev) -> None:
+        """Per-event compatibility shim (single-row batch on the wire)."""
+        b = EventBatchBuilder()
+        b.add(ev.ts, int(ev.kind), ev.node, ev.device, ev.flow, ev.size,
+              ev.depth, ev.op, ev.group, ev.meta, ev.replica)
+        self.observe_batch(b.build(sort=False))
+
+    @property
+    def findings(self):
+        return self.plane.findings
+
+    @property
+    def attributions(self):
+        return self.plane.attributions
+
+    @property
+    def actions(self):
+        return self.plane.actions
+
+    @property
+    def stats(self):
+        return self.plane.stats
+
+    @property
+    def controller(self):
+        """Non-None while actuation is live (producers use this to keep
+        flushing per round so the loop timing stays honest)."""
+        return self.policy
+
+    def bind(self, engine: EngineControls) -> None:
+        """Point the command bus at the host actuator."""
+        if self.bus is not None:
+            self.bus.engine = engine
+
+    # -- the DPU's own cycle ----------------------------------------------
+
+    def advance(self, now: float) -> None:
+        """One DPU scheduling quantum, driven by the host clock."""
+        for batch in self.uplink.deliver(now):
+            self._tap_clock = max(self._tap_clock, float(batch.ts[-1]))
+            self.budget.offer(batch)
+        drained = self.budget.drain(now)
+        for batch in drained:
+            self._stream_clock = max(self._stream_clock,
+                                     float(batch.ts[-1]))
+            self.plane.observe_batch(batch)
+        self._self_telemetry()
+        if self.policy is None:
+            return
+        atts = self.plane.attributions
+        for a in atts[self._att_i:]:
+            self.policy.observe(a)
+        self._att_i = len(atts)
+        for cmd in self.policy.decide(now):
+            self.bus.send(cmd, now)
+        recs = self.bus.advance(now)
+        if recs:
+            self.plane.actions.extend(recs)
+            self.plane.agent.stats.actions += len(recs)
+
+    def _self_telemetry(self) -> None:
+        """Report ring occupancy + shed deltas into the plane itself —
+        the ``dpu_saturation`` row's signal source."""
+        if self._tap_clock <= 0.0:
+            return                     # nothing has arrived yet; clock unset
+        shed_delta = self.budget.events_shed - self._shed_seen
+        self._shed_seen = self.budget.events_shed
+        b = self._sample_builder
+        b.add(self._tap_clock, int(EventKind.QUEUE_SAMPLE), -1, -1, -1,
+              shed_delta, int(self.budget.occupancy() * 100), -1, -1,
+              META_DPU_RING, -1)
+        self.plane.observe_batch(b.build(sort=False))
+        b.clear()
+
+    # -- reporting ----------------------------------------------------------
+
+    def report(self) -> dict:
+        out = {
+            "uplink": {"sent": self.uplink.sent,
+                       "dropped": self.uplink.dropped,
+                       "delivered": self.uplink.delivered},
+            "budget": {"offered": self.budget.events_offered,
+                       "accepted": self.budget.events_accepted,
+                       "shed": self.budget.events_shed,
+                       "processed": self.budget.events_processed,
+                       "backlog": self.budget.backlog},
+        }
+        if self.bus is not None:
+            s = self.bus.stats
+            out["commands"] = {
+                "sent": s.sent, "retries": s.retries, "acked": s.acked,
+                "applied": s.applied, "rejected": s.rejected,
+                "stale_dropped": s.stale_dropped,
+                "superseded": s.superseded, "expired": s.expired,
+            }
+        if self.policy is not None:
+            out["policy"] = {"issued": len(self.policy.issued),
+                             "suppressed": len(self.policy.suppressed)}
+        return out

@@ -1,0 +1,74 @@
+"""Modeled message transport between host and DPU.
+
+The paper places the DPU *on the network path* — telemetry reaches it over
+a real link and mitigation commands travel back over the same fabric the
+inference traffic shares.  ``ModeledLink`` is that wire: a one-way channel
+with configurable base delay, bounded uniform jitter, and Bernoulli loss.
+Payloads are opaque (EventBatches on the uplink, Commands/acks on the
+control channel), so one implementation serves both directions.
+
+Determinism contract: the link draws from the RNG handed to it *only* when
+the corresponding knob is nonzero (jitter -> one uniform per send, drop ->
+one uniform per send).  A zero-jitter zero-loss link therefore consumes no
+randomness at all, which keeps the golden scenario fixtures reproducible
+and keeps the simulator's own generator stream untouched.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class LinkParams:
+    """One-way channel model."""
+
+    delay: float = 1e-3       # base one-way latency (s)
+    jitter: float = 0.0       # extra uniform [0, jitter) latency per message
+    drop_p: float = 0.0       # Bernoulli loss probability per message
+
+
+class ModeledLink:
+    """Delay/jitter/loss channel with in-order-by-arrival delivery.
+
+    ``send`` timestamps the message with its arrival time (or drops it);
+    ``deliver`` pops every message whose arrival time has passed.  A
+    monotone sequence number breaks arrival-time ties so delivery order is
+    deterministic and messages never compare against each other.
+    """
+
+    def __init__(self, params: LinkParams, rng) -> None:
+        self.params = params
+        self.rng = rng
+        self._seq = itertools.count()
+        self._inflight: list[tuple[float, int, object]] = []
+        self.sent = 0
+        self.dropped = 0
+        self.delivered = 0
+
+    def __len__(self) -> int:
+        return len(self._inflight)
+
+    def send(self, now: float, payload) -> bool:
+        """Enqueue one message; returns False if the wire ate it."""
+        p = self.params
+        self.sent += 1
+        if p.drop_p > 0.0 and self.rng.random() < p.drop_p:
+            self.dropped += 1
+            return False
+        arrival = now + p.delay
+        if p.jitter > 0.0:
+            arrival += self.rng.random() * p.jitter
+        heapq.heappush(self._inflight, (arrival, next(self._seq), payload))
+        return True
+
+    def deliver(self, now: float) -> list:
+        """Pop every message whose arrival time is <= now."""
+        out = []
+        q = self._inflight
+        while q and q[0][0] <= now:
+            out.append(heapq.heappop(q)[2])
+        self.delivered += len(out)
+        return out

@@ -43,6 +43,12 @@ class EngineConfig:
     telemetry: bool = True
     mitigate: bool = True
     greedy: bool = True
+    # "instant" — in-process MitigationController (legacy topology);
+    # "dpu"     — telemetry crosses a modeled transport into a DPUSidecar
+    #             and mitigation commands ride the command bus back
+    control: str = "instant"
+    dpu: "object | None" = None      # repro.dpu.DPUParams override
+    dpu_seed: int = 0                # sidecar wire RNG (XORed with node)
 
 
 class InferenceEngine:
@@ -58,7 +64,23 @@ class InferenceEngine:
         self.plane = plane
         if self.plane is None and self.cfg.telemetry:
             self.plane = TelemetryPlane(n_nodes=1, mitigate=self.cfg.mitigate)
-        if self.plane is not None and self.plane.controller is not None:
+        # telemetry sink: the plane directly (instant) or a DPU sidecar
+        # whose command bus actuates this engine (dpu)
+        if self.cfg.control not in ("instant", "dpu"):
+            raise ValueError(
+                f"unknown EngineConfig.control {self.cfg.control!r} "
+                "(expected 'instant' or 'dpu')")
+        self.dpu = None
+        self._sink = self.plane
+        if self.plane is not None and self.cfg.control == "dpu":
+            from repro.dpu import DPUSidecar
+            # per-replica wire seed: correlated loss across a ReplicaSet's
+            # engines would be an accidental common-mode failure
+            self.dpu = DPUSidecar(self.plane, self.cfg.dpu, engine=self,
+                                  seed=self.cfg.dpu_seed ^ self.cfg.node,
+                                  mitigate=self.cfg.mitigate)
+            self._sink = self.dpu
+        elif self.plane is not None and self.plane.controller is not None:
             self.plane.controller.engine = self
         # stacked per-slot caches: leaf shape (slots, ...)
         single = model.init_cache(1, self.cfg.max_seq)
@@ -72,6 +94,9 @@ class InferenceEngine:
         self.clock = 0.0
         self.completed: list[ServeRequest] = []
         self.kv_compress = False
+        # telemetry back-pressure knob: emit low-priority samples (KV
+        # occupancy) every Nth step; throttle_telemetry doubles the stride
+        self.telemetry_stride = 1
         self.stats = {"steps": 0, "tokens": 0, "prefills": 0}
         # telemetry taps accumulate columnar rows; one batch per step goes
         # to the plane (the engine feeds the same line-rate path as the sim)
@@ -99,6 +124,9 @@ class InferenceEngine:
         if action == "compress_kv":
             self.kv_compress = True
             return True
+        if action == "throttle_telemetry":
+            self.telemetry_stride = min(self.telemetry_stride * 2, 64)
+            return True
         if action in ("rebalance_microbatches", "rebalance_shards",
                       "rebalance_frontend", "pin_and_coalesce",
                       "batch_launches"):
@@ -120,11 +148,14 @@ class InferenceEngine:
                               node=self.cfg.node, **kw)
 
     def _flush_telemetry(self) -> None:
-        if self.plane is None or len(self._pending) == 0:
+        if self.plane is None:
             return
-        batch = self._pending.build(sort=True)
-        self._pending.clear()
-        self.plane.observe_batch(batch)
+        if len(self._pending):
+            batch = self._pending.build(sort=True)
+            self._pending.clear()
+            self._sink.observe_batch(batch)
+        if self.dpu is not None:
+            self.dpu.advance(self.clock)
 
     def _prefill_fn(self, bucket: int):
         if bucket not in self._prefill_jit:
@@ -246,10 +277,12 @@ class InferenceEngine:
                 size=8 if not self.kv_compress else 4,
                 group=self.cfg.node,
                 meta=np.asarray(eg_meta, np.int64))
-        # KV occupancy sample (Table 2b)
-        self._emit(EventKind.QUEUE_SAMPLE,
-                   depth=int(self.pool.occupancy() * 100),
-                   meta=META_KV_OCC)
+        # KV occupancy sample (Table 2b) — the low-priority event class the
+        # throttle_telemetry actuation strides down
+        if self.stats["steps"] % self.telemetry_stride == 0:
+            self._emit(EventKind.QUEUE_SAMPLE,
+                       depth=int(self.pool.occupancy() * 100),
+                       meta=META_KV_OCC)
 
     # ------------------------------------------------------------------
 

@@ -401,3 +401,39 @@ class ReplicaSet:
 
     def submit_all(self, reqs, now: float = 0.0) -> list[int]:
         return [self.submit(r, now) for r in reqs]
+
+    # ------------------------------------------------------------------
+    # EngineControls — the router is a mitigation actuator too: the DPU
+    # command bus (or the instant controller) can rebalance queued work
+    # across replicas without touching any engine internals
+    # ------------------------------------------------------------------
+
+    def apply_action(self, action: str, node: int, detail: dict) -> bool:
+        if action == "rebalance_replicas":
+            self.rebalance(now=detail.get("now", 0.0))
+            return True
+        # per-engine knobs fall through to the replica named by ``node``
+        if 0 <= node < len(self.engines):
+            eng = self.engines[node]
+            if hasattr(eng, "apply_action"):
+                return bool(eng.apply_action(action, node, detail))
+        return False
+
+    def rebalance(self, now: float = 0.0) -> int:
+        """Drain every replica's scheduler queue and re-deal the backlog
+        round-robin starting from the shallowest replica; refreshes the
+        router view so the next routed request sees the new state.
+        Returns the number of requests moved."""
+        backlog = []
+        for eng in self.engines:
+            q = eng.sched.queue
+            backlog.extend(q)
+            q.clear()
+        backlog.sort(key=lambda r: getattr(r, "arrival", 0.0))
+        order = sorted(range(len(self.engines)),
+                       key=lambda i: len(self.engines[i].sched.running))
+        for i, req in enumerate(backlog):
+            self.engines[order[i % len(order)]].sched.submit(req)
+        self.refresh(now)
+        self.flush_telemetry()
+        return len(backlog)

@@ -49,9 +49,12 @@ from repro.core.detectors import (
     META_P2P_INTER,
     META_P2P_INTRA,
     META_P2P_KV,
+    META_TAP_DEBUG,
 )
 from repro.core.events import CollectiveOp, EventBatchBuilder, EventKind
+from repro.core.runbooks import DEFAULT_TABLES
 from repro.core.telemetry import TelemetryPlane
+from repro.dpu.sidecar import DPUParams, DPUSidecar
 from repro.serving.router import ReplicaSnapshot, RequestInfo, Router
 from repro.sim.workload import Request, WorkloadSpec, generate
 
@@ -93,6 +96,13 @@ class SimParams:
     # poll boundaries either way.  With a mitigation controller attached
     # the sim flushes every round regardless, so actuation stays prompt.
     flush_events: int = 1
+    # --- control-loop topology (repro.dpu) ---
+    # "auto"    -> "dpu" when run_scenario(mitigate=True), else "none"
+    # "none"    -> detection plane attached directly, no actuation
+    # "instant" -> legacy zero-latency in-process controller (golden parity)
+    # "dpu"     -> DPUSidecar: modeled transport + budget + policy + bus
+    control: str = "auto"
+    dpu: DPUParams | None = None     # sidecar knobs when control == "dpu"
 
 
 @dataclass
@@ -143,11 +153,22 @@ class FaultSpec:
     replica_slow_mult: float = 4.0     # slow replica runs every k-th round
     # --- workload shaping ---
     early_stop_skew: bool = False      # extreme decode-length divergence
+    # --- telemetry-plane load (DPU self-diagnosis) ---
+    telemetry_flood: float = 0.0       # extra debug-tap rows per round
+    # --- intermittency ---
+    # > 0: the fault is only active during alternating windows of this
+    # length (fire/clear/fire...) — the oscillation that exercises the
+    # policy engine's flap damping
+    osc_period: float = 0.0
 
     mitigated: bool = False            # controller flips this
 
     def active(self, t: float) -> bool:
-        return t >= self.start and not self.mitigated
+        if t < self.start or self.mitigated:
+            return False
+        if self.osc_period > 0.0:
+            return int((t - self.start) / self.osc_period) % 2 == 0
+        return True
 
 
 @dataclass
@@ -158,7 +179,10 @@ class SimMetrics:
     tokens_out: int = 0
     slot_rounds_busy: int = 0
     slot_rounds_idle: int = 0          # idle WHILE queue nonempty (waste)
-    first_finding_ts: float = -1.0
+    first_finding_ts: float = -1.0     # bound finding's own (event) ts
+    detect_wall_ts: float = -1.0       # host round when the loop SAW it
+    first_action_ts: float = -1.0      # host round of the first actuation
+    mitigated_ts: float = -1.0         # host round the fault was neutralized
     actions_applied: list = field(default_factory=list)
 
     def p(self, q: float) -> float:
@@ -310,6 +334,14 @@ class ClusterSim:
                              staleness=params.router_staleness,
                              seed=params.seed)
         self._replica_rr = [0] * params.n_replicas
+        # --- asynchronous control plane (repro.dpu) ---
+        # a plane with an ``advance`` hook is a DPU sidecar: the host loop
+        # pumps its cycle once per round (uplink delivery, budget drain,
+        # policy decisions, command/ack exchange)
+        self._ctrl = plane if hasattr(plane, "advance") else None
+        self._t = 0.0                  # current round's host-clock time
+        self._flood = self.fault.telemetry_flood > 0
+        self._flood_tmpl: tuple | None = None
 
     # ------------------------------------------------------------------
     # EngineControls
@@ -317,11 +349,16 @@ class ClusterSim:
 
     def apply_action(self, action: str, node: int, detail: dict) -> bool:
         """Mitigation actuation: matching action neutralizes the fault."""
-        self.metrics.actions_applied.append((action, node))
+        m = self.metrics
+        if m.first_action_ts < 0:
+            m.first_action_ts = self._t
+        m.actions_applied.append((action, node))
         from repro.core.runbooks import BY_ID
         entry = BY_ID.get(self.fault.row_id)
         matched = entry is not None and entry.action == action
         if matched:
+            if not self.fault.mitigated:
+                m.mitigated_ts = self._t
             self.fault.mitigated = True
         # actions with a concrete actuation in the sim help regardless of
         # whether they were the prescribed row action
@@ -361,18 +398,31 @@ class ClusterSim:
         per_round = (self.plane is not None
                      and getattr(self.plane, "controller", None) is not None)
         flush_events = max(int(p.flush_events), 1)
+        ctrl = self._ctrl
         while t < p.duration:
+            self._t = t
             self._admit(t)
             self._sample_queues(t)
             self._decode_round(t)
             self._credits(t)
+            if self._flood:
+                self._flood_phase(t)
             if self.plane is not None and (
                     per_round or self._acc_rows >= flush_events):
                 self._flush()
+            if ctrl is not None:
+                # the DPU's cycle: delayed telemetry lands, budget-paced
+                # detection runs, commands/acks cross the wire
+                ctrl.advance(t)
+                self._note_first_finding()
             self.round += 1
             t += p.decode_step
+        self._t = t
         if self.plane is not None:
             self._flush()
+        if ctrl is not None:
+            ctrl.advance(t)
+            self._note_first_finding()
         # mirrors are authoritative for in-flight token counts; sync the
         # objects so post-run inspection sees consistent state
         for nd in range(p.n_nodes):
@@ -390,10 +440,14 @@ class ClusterSim:
             return
         self.plane.observe_batch(self._batch.build(sort=True))
         self._batch.clear()
+        self._note_first_finding()
+
+    def _note_first_finding(self) -> None:
         if self.metrics.first_finding_ts < 0 and self.plane.findings:
             for f in self.plane.findings:
                 if f.name == self.fault.row_id:
                     self.metrics.first_finding_ts = f.ts
+                    self.metrics.detect_wall_ts = self._t
                     break
 
     # ------------------------------------------------------------------
@@ -1406,21 +1460,71 @@ class ClusterSim:
             self._emit_cols((t, n), EventKind.CREDIT_UPDATE,
                             node=self._all_nodes, depth=32)
 
+    def _flood_phase(self, t: float) -> None:
+        """Debug-tap event storm: a misconfigured verbose tap exports k
+        extra rows per round.  The rows carry no pathological signal of
+        their own (``META_TAP_DEBUG``; no detector keys on it) — their only
+        effect is consuming DPU ingest budget, which is exactly the
+        ``dpu_saturation`` experiment."""
+        f = self.fault
+        if not f.active(t):
+            return
+        k = int(f.telemetry_flood)
+        tmpl = self._flood_tmpl
+        if tmpl is None or tmpl[0] != k:
+            self._flood_tmpl = tmpl = (
+                k, np.arange(k, dtype=np.float64),
+                np.arange(k, dtype=np.int64) % self.p.n_nodes)
+        _, j, nodes = tmpl
+        ts = t + (j + self.rng.random(k)) * (self.p.decode_step / k)
+        self._emit_cols(ts, EventKind.QUEUE_SAMPLE, node=nodes,
+                        meta=META_TAP_DEBUG)
+
 
 def run_scenario(fault: FaultSpec,
                  params: SimParams | None = None,
                  workload: WorkloadSpec | None = None,
                  mitigate: bool = False,
-                 tables: tuple[str, ...] = ("3a", "3b", "3c", "3d"),
+                 tables: tuple[str, ...] = DEFAULT_TABLES,
+                 control: str | None = None,
                  ) -> tuple[SimMetrics, TelemetryPlane, ClusterSim]:
-    """Run one fault scenario with the full telemetry plane attached."""
+    """Run one fault scenario with the full telemetry plane attached.
+
+    ``control`` picks the loop topology (defaults to ``params.control``):
+
+      "none"    — detectors watch, nobody acts (the measurement baseline);
+      "instant" — the legacy zero-latency in-process controller;
+      "dpu"     — the default closed-loop path: a :class:`DPUSidecar` with
+                  modeled transport, on-DPU budget, policy arbitration, and
+                  a command bus back to the sim's actuators.  Detection
+                  still runs (budget-paced) when ``mitigate`` is False.
+
+    The returned plane is always the inner :class:`TelemetryPlane`
+    (findings / attributions / actions), whichever topology produced it; in
+    dpu mode the sidecar itself is reachable as ``sim.plane``.
+    """
     import dataclasses
     params = params or SimParams()
     workload = workload or WorkloadSpec()
     # arrivals must span the whole sim: a workload that simply *ends* is
     # indistinguishable from ingress starvation at the DPU vantage point
     workload = dataclasses.replace(workload, duration=params.duration * 0.98)
-    plane = TelemetryPlane(n_nodes=params.n_nodes, mitigate=mitigate,
+    mode = control if control is not None else params.control
+    if mode == "auto":
+        mode = "dpu" if mitigate else "none"
+    if mode == "dpu":
+        plane = TelemetryPlane(n_nodes=params.n_nodes, mitigate=False,
+                               tables=tables)
+        side = DPUSidecar(plane, params.dpu, seed=params.seed,
+                          mitigate=mitigate)
+        sim = ClusterSim(params, workload, fault, side)
+        side.bind(sim)
+        metrics = sim.run()
+        return metrics, plane, sim
+    if mode not in ("none", "instant"):
+        raise ValueError(f"unknown control mode {mode!r}")
+    plane = TelemetryPlane(n_nodes=params.n_nodes,
+                           mitigate=mitigate and mode == "instant",
                            tables=tables)
     sim = ClusterSim(params, workload, fault, plane)
     if mitigate and plane.controller is not None:

@@ -12,6 +12,7 @@ from __future__ import annotations
 import dataclasses
 from dataclasses import dataclass, field
 
+from repro.dpu import DPUParams, LinkParams
 from repro.sim.cluster import FaultSpec, SimParams
 from repro.sim.workload import WorkloadSpec
 
@@ -169,6 +170,45 @@ def make_scenarios() -> dict[str, Scenario]:
         workload=_wl(rate=300.0, duration=2.9),
         params=_pm(duration=3.0, n_replicas=4,
                    router_policy="round_robin"))
+
+    # ---------------- DPU control plane ----------------
+    # The sidecar's own pathologies: these run with ``control="dpu"`` so the
+    # registry test and the golden fixtures exercise the asynchronous loop.
+    # Healthy synthesis is ~90 rows/round at canonical scale; the debug-tap
+    # storm adds 256 rows/round against a 100k rows/s (200 rows/round)
+    # budget, so the ingest ring fills within ~30 rounds of fault start and
+    # the DPU begins shedding — its self-telemetry is the only signal that
+    # survives, which is the point of the row.
+    add("dpu_saturation", "dpu_saturation",
+        FaultSpec(telemetry_flood=256.0),
+        params=_pm(control="dpu",
+                   dpu=DPUParams(events_per_s=1e5, ring_events=4096)))
+    # command-channel loss: detection is clean (uplink untouched) but every
+    # mitigation command flips a coin — recovery leans on the bus's
+    # ack-timeout retries
+    add("lossy_command_channel", "early_completion_skew",
+        FaultSpec(start=0.0, early_stop_skew=True),
+        workload=_wl(decode_cv=0.1, rate=200.0),
+        params=_pm(duration=2.5, continuous_batching=False, control="dpu",
+                   dpu=DPUParams(downlink=LinkParams(delay=1e-3,
+                                                     drop_p=0.5),
+                                 ack_timeout=10e-3)))
+    # late commands: a congested control channel delivers mitigation ~60
+    # rounds after the decision — the paper's stale-feedback regime
+    add("late_command_actuation", "cross_replica_skew",
+        FaultSpec(hot_replica=2, hot_replica_frac=0.65),
+        workload=_wl(rate=300.0, duration=2.9),
+        params=_pm(duration=3.0, n_replicas=4,
+                   router_policy="join_shortest_queue", control="dpu",
+                   dpu=DPUParams(downlink=LinkParams(delay=0.12),
+                                 uplink=LinkParams(delay=2e-3))))
+    # oscillating fault: fire/clear/fire in 0.35 s windows with a short
+    # policy cooldown — the flap-damping (oscillation guard) regime
+    add("flapping_egress_backlog", "egress_backlog_queueing",
+        FaultSpec(egress_backlog_rate=3.0, osc_period=0.35),
+        params=_pm(duration=3.0, control="dpu",
+                   dpu=DPUParams(cooldown=0.25, flap_window=1.5,
+                                 flap_limit=2)))
 
     # healthy baseline (false-positive budget measurement)
     s["healthy"] = Scenario(name="healthy", row_id="",

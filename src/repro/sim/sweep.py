@@ -32,13 +32,15 @@ import sys
 import time
 from dataclasses import dataclass, field
 
+from repro.core.runbooks import DEFAULT_TABLES
+
 
 @dataclass(frozen=True)
 class SweepJob:
     scenario: str
     seed: int
     scalar_synth: bool = False
-    tables: tuple[str, ...] = ("3a", "3b", "3c", "3d")
+    tables: tuple[str, ...] = DEFAULT_TABLES
     mitigate: bool = False
 
 
@@ -48,7 +50,7 @@ class SweepConfig:
     seeds: tuple[int, ...] = (0,)
     workers: int = 0                           # 0 = cpu-bounded default
     scalar_synth: bool = False
-    tables: tuple[str, ...] = ("3a", "3b", "3c", "3d")
+    tables: tuple[str, ...] = DEFAULT_TABLES
     mitigate: bool = False
 
     def jobs(self) -> list[SweepJob]:

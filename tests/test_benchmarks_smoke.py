@@ -10,6 +10,9 @@ Families and their cheap representatives:
   per-row detection  -> table3d      (1 row + healthy baseline)
   router policies    -> router       (4 sim runs, no model compile)
   closed-loop        -> mitigation   (sim only)
+  control topology   -> control_loop (dpu vs instant vs none; smoke grid
+                        via CONTROL_LOOP_SCENARIOS — CI's bench step runs
+                        the whole registry)
   artifact readouts  -> roofline     (pure file scan; 'missing' row is fine)
 
 The jax-compiling tables (table1, serving, kernels) are exercised by their
@@ -31,6 +34,12 @@ SRC = os.path.join(REPO, "src")
 CHEAP_TABLES = ["table2_signals", "telemetry_perf", "table3d", "router",
                 "mitigation", "roofline"]
 
+# control_loop smoke grid: one scenario only the DPU path can recover
+# (d2h_bottleneck: per-node hysteresis can never confirm its one-shot
+# findings), one both paths recover (early_completion), one healthy
+# baseline for the zero-false-positive-actions property
+CONTROL_LOOP_SMOKE = "early_completion,d2h_bottleneck,healthy"
+
 
 def _run_only(only: str) -> str:
     env = {**os.environ,
@@ -38,7 +47,8 @@ def _run_only(only: str) -> str:
            # sim_perf: tiny synthesis grid + smoke sweep in the suite;
            # CI's bench step runs the larger scale and the full registry
            "SIM_PERF_SCALE": "2", "SIM_PERF_REPS": "1",
-           "SIM_PERF_SWEEP": "smoke"}
+           "SIM_PERF_SWEEP": "smoke",
+           "CONTROL_LOOP_SCENARIOS": CONTROL_LOOP_SMOKE}
     out = subprocess.run(
         [sys.executable, os.path.join(REPO, "benchmarks", "run.py"),
          "--only", only],
@@ -100,6 +110,32 @@ def test_sim_perf_columnar_faster_with_identical_traces_and_golden():
     sweep = rows["registry_sweep"]
     assert sweep["hit_rate"] == "1.000"
     assert sweep["healthy_false_positives"] == "0"
+
+
+@pytest.mark.slow
+def test_control_loop_dpu_recovers_and_pays_measured_latency():
+    """The DPU control-plane acceptance, asserted on the benchmark output:
+    dpu mode recovers every scenario in the smoke grid (including the one
+    instant mode cannot), takes zero actions on the healthy baseline, and
+    its time-to-mitigate is strictly greater than instant's wherever both
+    recover — the feedback path's cost is measured, not assumed."""
+    stdout = _run_only("control_loop")
+    rows = {}
+    for line in stdout.strip().splitlines()[1:]:
+        name, _, derived = line.split(",", 2)
+        rows[name.split("/", 1)[1]] = dict(
+            kv.split("=", 1) for kv in derived.split(";"))
+    summ = rows["summary"]
+    assert summ["dpu_hit_rate"] == "1.000"
+    assert summ["dpu_recovered_all"] == "1"
+    assert summ["dpu_ttm_gt_instant"] == "1"
+    assert summ["healthy_fp_actions"] == "0"
+    # per-cell spot checks behind the summary flags
+    assert rows["d2h_bottleneck/instant"]["recovered"] == "0"
+    assert rows["d2h_bottleneck/dpu"]["recovered"] == "1"
+    assert (float(rows["early_completion/dpu"]["t_recover_s"])
+            > float(rows["early_completion/instant"]["t_recover_s"]) > 0)
+    assert rows["healthy/dpu"]["actions"] == "0"
 
 
 @pytest.mark.slow

@@ -163,6 +163,25 @@ class TestReplicaSet:
         rs.submit(self._Req(req_id=0))
         assert engines[1].submitted
 
+    def test_rebalance_action_levels_queued_backlog(self):
+        """ReplicaSet is a mitigation actuator: rebalance_replicas drains
+        the skewed queues and re-deals them level (the command-bus target
+        for the 3d row outside the simulator)."""
+        engines = [self._StubEngine() for _ in range(3)]
+        for e in engines:
+            e.sched.submit = e.sched.queue.append
+        rs = ReplicaSet(engines, policy="round_robin")
+        # pile the whole backlog on replica 0
+        for i in range(12):
+            engines[0].sched.queue.append(
+                dataclasses.replace(self._Req(req_id=i)))
+        assert rs.apply_action("rebalance_replicas", -1, {})
+        depths = [len(e.sched.queue) for e in engines]
+        assert sum(depths) == 12            # conservation
+        assert max(depths) - min(depths) <= 1
+        # unknown per-engine knob on a stub engine: politely refused
+        assert rs.apply_action("compress_kv", 1, {}) is False
+
 
 class TestReplicaSim:
     def test_replica_dimension_validates(self):

@@ -130,6 +130,32 @@ class TestInferenceEngine:
         assert eng.apply_action("compress_kv", 0, {})
         assert eng.kv_compress
         assert eng.apply_action("admission_control", 0, {})
+        assert eng.apply_action("throttle_telemetry", 0, {})
+        assert eng.telemetry_stride == 2
+
+    def test_dpu_control_mode_serves_through_sidecar(self,
+                                                     small_engine_parts):
+        """control="dpu": engine telemetry crosses the modeled transport,
+        detection runs on the sidecar's inner plane, and the loop's
+        actuator is the engine itself."""
+        cfg, m, params = small_engine_parts
+        eng = InferenceEngine(m, params, EngineConfig(
+            max_slots=4, max_seq=128, n_pages=64, page_size=16,
+            control="dpu"))
+        assert eng.dpu is not None
+        assert eng.plane.controller is None     # policy engine owns the loop
+        assert eng.dpu.bus.engine is eng
+        rng = random.Random(2)
+        reqs = [ServeRequest(req_id=i, arrival=i * 0.004,
+                             prompt=[rng.randrange(cfg.vocab)
+                                     for _ in range(12)],
+                             max_new_tokens=6) for i in range(8)]
+        rep = eng.run(reqs, max_steps=400)
+        assert rep["completed"] == 8
+        # the delayed tap still delivered the whole trace to the detectors
+        assert eng.dpu.uplink.dropped == 0
+        assert rep["telemetry"]["events"] > 0
+        assert eng.dpu.budget.events_shed == 0
 
 
 # ----------------------------------------------------------------------
