@@ -372,9 +372,20 @@ def sim_perf(seed: int = 0) -> list[tuple]:
 
 
 def router_policies(seed: int = 0) -> list[tuple]:
-    """Cross-replica router: policies vs throughput / TTFT under a bursty,
-    flow-skewed workload (4 single-node DP replicas, no injected fault —
-    the policy itself is the variable)."""
+    """Hierarchical router: policies vs throughput / TTFT on two workloads.
+
+    Lane 1 (``router/<policy>``): the bursty, flow-skewed general workload
+    (4 single-node DP replicas, no injected fault — the policy itself is
+    the variable).
+
+    Lane 2 (``router/prefix/<policy>``): the prefix-heavy workload — a few
+    dozen sticky sessions against bounded per-node prefix caches, with the
+    prefill model charging each miss real admission capacity.  This is the
+    affinity-vs-balance tension made measurable, and it is a GATE:
+    ``prefix_affinity`` must beat flat JSQ on p99 TTFT while holding its
+    routed imbalance <= 1.25 (the load-ceiling spill doing its job), or
+    the table exits nonzero.
+    """
     from repro.sim import FaultSpec, SimParams, WorkloadSpec, run_scenario
     from repro.serving.router import POLICIES
     rows = []
@@ -398,6 +409,43 @@ def router_policies(seed: int = 0) -> list[tuple]:
             f"p99_ttft_ms={m.p_ttft(0.99) * 1e3:.1f};"
             f"p99_latency_s={m.p(0.99):.3f};"
             f"routed_imbalance={sim.router.imbalance():.2f}"))
+    # --- prefix-heavy lane: 24 sticky sessions, 8-session per-node LRU ---
+    wl_pfx = WorkloadSpec(rate=55.0, duration=dur - 0.1, decode_mean=48,
+                          decode_cv=0.6, burst_factor=8.0, n_sessions=24,
+                          seed=13 + 2003 * seed)
+    stats = {}
+    for policy in ("join_shortest_queue", "prefix_affinity",
+                   "hierarchical_jsq"):
+        params = SimParams(n_nodes=4, n_replicas=4, router_policy=policy,
+                           duration=dur, seed=3 + 1009 * seed,
+                           prefix_cache=True, prefix_cache_sessions=8)
+        t0 = time.perf_counter()
+        m, _, sim = run_scenario(FaultSpec(start=1e9), params, wl_pfx,
+                                 mitigate=False)
+        wall = (time.perf_counter() - t0) * 1e6
+        hit_rate = m.prefix_hits / max(m.prefix_hits + m.prefix_misses, 1)
+        imb = sim.router.imbalance()
+        stats[policy] = (m.p_ttft(0.99), imb)
+        rows.append((
+            f"router/prefix/{policy}", wall,
+            f"tput={m.throughput(dur):.0f};completed={m.completed};"
+            f"p50_ttft_ms={m.p_ttft(0.5) * 1e3:.1f};"
+            f"p99_ttft_ms={m.p_ttft(0.99) * 1e3:.1f};"
+            f"prefix_hit_rate={hit_rate:.2f};"
+            f"routed_imbalance={imb:.2f}"))
+    aff_p99, aff_imb = stats["prefix_affinity"]
+    jsq_p99, _ = stats["join_shortest_queue"]
+    ok_p99 = aff_p99 < jsq_p99
+    ok_imb = aff_imb <= 1.25
+    rows.append((
+        "router/prefix/summary", 0.0,
+        f"affinity_beats_jsq_p99={int(ok_p99)};"
+        f"affinity_imbalance={aff_imb:.2f};imbalance_ok={int(ok_imb)}"))
+    if not (ok_p99 and ok_imb):
+        raise AssertionError(
+            "router prefix-lane acceptance failed: "
+            f"affinity p99_ttft={aff_p99 * 1e3:.1f}ms vs "
+            f"jsq {jsq_p99 * 1e3:.1f}ms, imbalance={aff_imb:.2f}")
     return rows
 
 

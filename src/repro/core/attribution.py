@@ -70,6 +70,7 @@ DIRECT_LOCUS: dict[str, str] = {
     "early_stop_skew_across_nodes": LOCUS_WORKLOAD,
     # 3d
     "cross_replica_skew": LOCUS_ROUTER,
+    "hierarchical_routing_skew": LOCUS_ROUTER,
     # DPU self-diagnosis
     "dpu_saturation": LOCUS_DPU,
 }
@@ -258,6 +259,34 @@ class Attributor:
                     "Ingress healthy but per-replica egress rates diverge "
                     f"and replica {f.node}'s queue grows: the DP routing "
                     "layer is concentrating load (policy/staleness/affinity)."))
+
+        # Rule 5b: intra-replica node skew with replica-balanced ingress is
+        # the placement layer's doing by construction — unless the hot node
+        # itself is locally sick (then the router is feeding a degraded
+        # node, which is a device/host problem wearing routing clothes).
+        if f.name == "hierarchical_routing_skew":
+            local = self._within(f, {
+                "h2d_data_starvation", "host_cpu_bottleneck",
+                "intra_node_gpu_skew", "pcie_link_saturation"},
+                same_node=True)
+            if local:
+                locus = DIRECT_LOCUS[local[0].name]
+                return Attribution(
+                    f.ts, locus, node=f.node, confidence=0.8, primary=f,
+                    supporting=tuple(local),
+                    narrative=(
+                        f"Node {f.node} hoards its replica's requests AND "
+                        f"shows local '{local[0].name}': the node is "
+                        "degraded; placement skew is a symptom."))
+            return Attribution(
+                f.ts, LOCUS_ROUTER, node=f.node, confidence=0.85, primary=f,
+                supporting=(),
+                narrative=(
+                    f"Replica totals balanced but node {f.node} receives "
+                    f"{f.evidence.get('ingress_share', '?')} of its "
+                    "replica's ingress and its queue outgrows its "
+                    "siblings: intra-replica placement skew — the routing "
+                    "layer is blind below the replica tier."))
 
         # Rule 6: the observer itself saturating is always self-attributed —
         # and it taints confidence in everything else this window, so it

@@ -1716,6 +1716,152 @@ class CrossReplicaSkew(Detector):
             queue_depths=depths)]
 
 
+class HierarchicalRoutingSkew(Detector):
+    """3d.2 — intra-replica node skew the replica tier cannot see.
+
+    The hierarchical routing pathology: request *placement* concentrates on
+    one node inside a replica (replica-local scheduler affinity, a broken
+    TP-group spread) while the replica totals stay balanced — so the
+    replica-tier detector (3d.1) is blind to it and the flat router never
+    compensates.  From the DPU vantage this is per-node ingress-rate
+    concentration within a replica (one node receives most of the
+    replica's request bytes) corroborated by that same node's ingress
+    queue outgrowing its siblings.  Keying on ingress *placement* rather
+    than queue depth alone is what separates this row from a slow node
+    (3b): a starved/slow node drains slowly under an even feed; here the
+    feed itself is skewed.
+
+    Node -> replica membership is learned from the ingress QUEUE_SAMPLEs
+    (which carry both coordinates), so the detector needs no topology
+    configuration.
+    """
+
+    name = "hierarchical_routing_skew"
+    table = "3d"
+    stage = "ingress routing -> intra-replica node placement"
+    root_cause = ("replica-local placement affinity / broken TP-group "
+                  "spread concentrating requests on one node")
+    directive = ("rebalance queued requests across the replica's nodes; "
+                 "fix the intra-replica spread policy")
+    interested = frozenset({EventKind.INGRESS_PKT, EventKind.QUEUE_SAMPLE})
+
+    PERSIST = 2          # consecutive skewed polls before firing
+    MIN_SHARE = 0.65     # one node's share of its replica's ingress packets
+    CRIT_SHARE = 0.80
+    MIN_QUEUE_GAP = 8    # hot-node vs replica-mean queue depth floor
+    MIN_RATE = 40.0      # ingress packets/s floor (quiet != skewed)
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        self.rate: dict[int, RateMeter] = {}      # node -> ingress rate
+        self.node_replica: dict[int, int] = {}    # learned membership
+        self.depth: dict[int, int] = {}           # node -> ingress depth
+        self.streak = 0
+
+    def update(self, ev: Event) -> None:
+        if ev.kind == EventKind.INGRESS_PKT:
+            # flow < 0 is background/bulk traffic, not request placement
+            if ev.node < 0 or ev.flow < 0:
+                return
+            self.events_seen += 1
+            m = self.rate.get(ev.node)
+            if m is None:
+                m = self.rate[ev.node] = RateMeter(halflife=0.15)
+            m.update(ev.ts, ev.size)
+        elif (ev.kind == EventKind.QUEUE_SAMPLE
+              and ev.meta == META_DIR_INGRESS
+              and ev.replica >= 0 and ev.node >= 0):
+            self.events_seen += 1
+            self.node_replica[ev.node] = ev.replica
+            self.depth[ev.node] = ev.depth
+
+    def update_batch(self, batch: EventBatch) -> None:
+        is_ing = batch.kind == EventKind.INGRESS_PKT
+        ing = is_ing & (batch.node >= 0) & (batch.flow >= 0)
+        if ing.any():
+            self.events_seen += int(ing.sum())
+            buckets: dict[int, tuple[list, list]] = {}
+            for n, ts, sz in zip(batch.node[ing].tolist(),
+                                 batch.ts[ing].tolist(),
+                                 batch.size[ing].tolist()):
+                b = buckets.get(n)
+                if b is None:
+                    buckets[n] = ([ts], [sz])
+                else:
+                    b[0].append(ts)
+                    b[1].append(sz)
+            rate = self.rate
+            for n, (tss, sizes) in buckets.items():
+                m = rate.get(n)
+                if m is None:
+                    m = rate[n] = RateMeter(halflife=0.15)
+                m.update_many(tss, sizes)
+        qs = (~is_ing & (batch.meta == META_DIR_INGRESS)
+              & (batch.replica >= 0) & (batch.node >= 0))
+        if qs.any():
+            self.events_seen += int(qs.sum())
+            nr, dep = self.node_replica, self.depth
+            for n, r, d in zip(batch.node[qs].tolist(),
+                               batch.replica[qs].tolist(),
+                               batch.depth[qs].tolist()):
+                nr[n] = r
+                dep[n] = d
+
+    def poll(self, now: float) -> list[Finding]:
+        if self.events_seen < self.cfg.min_events:
+            return []
+        groups: dict[int, list[int]] = {}
+        for n, r in self.node_replica.items():
+            groups.setdefault(r, []).append(n)
+        # the row is *hierarchical* by definition: it needs >= 2 multi-node
+        # replicas so "replica tier balanced, node tier skewed" is even
+        # expressible — a lone replica's node skew belongs to the 3b rows
+        multi = {r: nodes for r, nodes in groups.items() if len(nodes) >= 2}
+        if len(multi) < 2:
+            self.streak = 0
+            return []
+        rates = {r: {n: (self.rate[n].rate_at(now) if n in self.rate
+                         else 0.0) for n in nodes}
+                 for r, nodes in multi.items()}
+        totals = {r: sum(v.values()) for r, v in rates.items()}
+        grand = sum(totals.values())
+        if grand < self.MIN_RATE:
+            self.streak = 0
+            return []
+        # replica tier must look *balanced* — a concentrated replica tier
+        # is 3d.1's territory, not this row's
+        if max(totals.values()) / grand >= self.MIN_SHARE:
+            self.streak = 0
+            return []
+        worst = None
+        for r, nodes in multi.items():
+            total = totals[r]
+            if total < self.MIN_RATE / len(multi):
+                continue
+            hot = max(nodes, key=lambda n: (rates[r][n],
+                                            self.depth.get(n, 0)))
+            share = rates[r][hot] / total
+            depths = [self.depth.get(n, 0) for n in nodes]
+            gap = self.depth.get(hot, 0) - sum(depths) / len(depths)
+            if share >= self.MIN_SHARE and gap >= self.MIN_QUEUE_GAP:
+                cand = (share, gap, r, hot,
+                        {n: round(v, 1) for n, v in rates[r].items()},
+                        {n: self.depth.get(n, 0) for n in nodes})
+                if worst is None or cand[:2] > worst[:2]:
+                    worst = cand
+        self.streak = self.streak + 1 if worst is not None else 0
+        if self.streak < self.PERSIST:
+            return []
+        share, gap, replica, hot, hot_rates, depths = worst
+        sev = ("critical" if share >= self.CRIT_SHARE
+               or gap > 3 * self.MIN_QUEUE_GAP else "warn")
+        return [self._mk(
+            now, score=share * 10 + gap / self.MIN_QUEUE_GAP,
+            node=hot, severity=sev, replica=replica,
+            ingress_share=round(share, 3), queue_gap=gap,
+            node_rates=hot_rates, node_depths=depths)]
+
+
 # ======================================================================
 # DPU self-diagnosis — the telemetry plane watching itself
 # ======================================================================
@@ -1805,7 +1951,7 @@ ALL_DETECTORS: tuple[type[Detector], ...] = (
     HeadOfLineBlocking, EWRetransmitStorm, CreditStarvation,
     KVCacheTransferBottleneck, EarlyStopSkewAcrossNodes,
     # 3(d)
-    CrossReplicaSkew,
+    CrossReplicaSkew, HierarchicalRoutingSkew,
     # DPU self-diagnosis
     DPUSaturation,
 )

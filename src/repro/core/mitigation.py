@@ -71,6 +71,8 @@ ACTIONS: dict[str, str] = {
     "compress_kv": "enable KV-cache compression for transfers",
     "rebalance_replicas": "redistribute queued requests across DP replicas; "
                           "refresh the router view / break hot affinity",
+    "rebalance_nodes": "level queued requests across the nodes inside each "
+                       "replica; restore the intra-replica spread",
     "throttle_telemetry": "raise the telemetry tap's sampling stride / shed "
                           "low-priority event classes so the DPU ingest "
                           "budget recovers",

@@ -321,6 +321,21 @@ RUNBOOK_3D: tuple[RunbookEntry, ...] = (
         "routing; refresh or bound router view staleness",
         D.CrossReplicaSkew, action="rebalance_replicas",
         scenario="hot_replica"),
+    RunbookEntry(
+        "hierarchical_routing_skew", "3d",
+        "Hierarchical routing skew (intra-replica node placement)",
+        "One node inside a replica receives most of the replica's ingress "
+        "request volume and its queue outgrows its siblings, while "
+        "replica-level totals stay balanced",
+        "Ingress routing -> intra-replica node placement (decode)",
+        "The replica's other nodes idle while one saturates; TP-group "
+        "throughput halves with no replica-tier signal",
+        "Replica-local placement affinity (sticky session hashing, broken "
+        "TP-group spread), node-granularity-blind router view",
+        "Rebalance queued requests across the replica's nodes; restore the "
+        "intra-replica spread; route at node granularity",
+        D.HierarchicalRoutingSkew, action="rebalance_nodes",
+        scenario="hierarchical_routing_skew"),
 )
 
 RUNBOOK_DPU: tuple[RunbookEntry, ...] = (

@@ -57,7 +57,7 @@ for _group, _members in (
     ("admission", ("smooth_admission", "admission_control",
                    "widen_batch_window")),
     ("routing", ("rebalance_frontend", "rebalance_replicas",
-                 "reroute_traffic", "qos_partition")),
+                 "rebalance_nodes", "reroute_traffic", "qos_partition")),
     ("placement", ("rebalance_shards", "repartition_stages",
                    "rebalance_microbatches", "inflight_remap")),
     ("transport", ("tune_transport", "widen_rdma_window",

@@ -4,6 +4,8 @@ from repro.serving.engine import EngineConfig, InferenceEngine
 from repro.serving.kvcache import PagedKVPool
 from repro.serving.router import (
     POLICIES,
+    HierarchicalView,
+    NodeSnapshot,
     ReplicaSet,
     ReplicaSnapshot,
     RequestInfo,
@@ -14,7 +16,8 @@ from repro.serving.router import (
     make_policy,
 )
 from repro.serving.scheduler import Scheduler, SchedulerConfig, ServeRequest
-__all__ = ["EngineConfig", "InferenceEngine", "PagedKVPool", "POLICIES",
+__all__ = ["EngineConfig", "HierarchicalView", "InferenceEngine",
+           "NodeSnapshot", "PagedKVPool", "POLICIES",
            "ReplicaSet", "ReplicaSnapshot", "RequestInfo", "Router",
            "RouterPolicy", "RouterView", "RoutingDecision", "Scheduler",
            "SchedulerConfig", "ServeRequest", "make_policy"]

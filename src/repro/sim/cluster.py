@@ -55,7 +55,13 @@ from repro.core.events import CollectiveOp, EventBatchBuilder, EventKind
 from repro.core.runbooks import DEFAULT_TABLES
 from repro.core.telemetry import TelemetryPlane
 from repro.dpu.sidecar import DPUParams, DPUSidecar
-from repro.serving.router import ReplicaSnapshot, RequestInfo, Router
+from repro.dpu.transport import LinkParams, ModeledLink
+from repro.serving.router import (
+    NodeSnapshot,
+    ReplicaSnapshot,
+    RequestInfo,
+    Router,
+)
 from repro.sim.workload import Request, WorkloadSpec, generate
 
 
@@ -103,6 +109,21 @@ class SimParams:
     # "dpu"     -> DPUSidecar: modeled transport + budget + policy + bus
     control: str = "auto"
     dpu: DPUParams | None = None     # sidecar knobs when control == "dpu"
+    # --- router-view transport (hierarchical router) ---
+    # The router's view of the replicas rides a modeled link instead of a
+    # direct in-process snapshot: None = a zero-latency lossless link
+    # (bit-identical to direct attach, and it draws no randomness), real
+    # LinkParams make the view lag/jitter/drop like the DPU uplink does.
+    view_link: LinkParams | None = None
+    # --- prefix-cache model (affinity-aware routing experiments) ---
+    # When enabled, each node keeps a bounded LRU of session prefix keys;
+    # a hit skips the cached share of prefill (shorter TTFT, smaller H2D),
+    # a miss pays the full prefill penalty and evicts.  Off by default so
+    # the canonical scenarios are untouched.
+    prefix_cache: bool = False
+    prefix_cache_sessions: int = 8   # per-node LRU capacity (sessions)
+    prefill_tok_s: float = 5e-5      # prefill cost per prompt token (s)
+    prefix_frac: float = 0.8         # prompt share a prefix hit skips
 
 
 @dataclass
@@ -148,9 +169,18 @@ class FaultSpec:
     # --- data-parallel routing (Table 3d) ---
     hot_replica: int = -1              # replica that affinity pins flows onto
     hot_replica_frac: float = 0.6      # fraction of flows pinned when active
-    router_stale: float = 0.0          # router view staleness injected (s)
+    router_stale: float = 0.0          # view-link delay injected (s): while
+    #                                    active the router's view transport
+    #                                    runs at this latency (plus jitter
+    #                                    and loss), instead of the healthy
+    #                                    configured link
     replica_slow: int = -1             # replica whose nodes decode slowly
     replica_slow_mult: float = 4.0     # slow replica runs every k-th round
+    # intra-replica placement skew: each replica's requests are pinned onto
+    # its first node with this probability (a replica-local scheduler
+    # affinity bug) — replica totals stay balanced while nodes inside
+    # every replica skew, the hierarchical_routing_skew signature
+    intra_replica_pin_frac: float = 0.0
     # --- workload shaping ---
     early_stop_skew: bool = False      # extreme decode-length divergence
     # --- telemetry-plane load (DPU self-diagnosis) ---
@@ -184,6 +214,8 @@ class SimMetrics:
     first_action_ts: float = -1.0      # host round of the first actuation
     mitigated_ts: float = -1.0         # host round the fault was neutralized
     actions_applied: list = field(default_factory=list)
+    prefix_hits: int = 0               # prefill prefix-cache hits (model on)
+    prefix_misses: int = 0
 
     def p(self, q: float) -> float:
         # NaN-safe: tiny smoke configs may complete nothing; benchmark rows
@@ -334,6 +366,22 @@ class ClusterSim:
                              staleness=params.router_staleness,
                              seed=params.seed)
         self._replica_rr = [0] * params.n_replicas
+        # the router's view rides a modeled link (telemetry-borne view):
+        # the default zero-latency lossless link is bit-identical to direct
+        # attach and draws no randomness; the link has its OWN seeded
+        # stream so a jittery/lossy view never perturbs the synthesis RNG
+        # (scalar/columnar parity is per-draw)
+        self._view_base = params.view_link or LinkParams(delay=0.0)
+        self._view_link = ModeledLink(
+            self._view_base, np.random.default_rng(params.seed ^ 0x51EF))
+        # per-node prefix caches (session key -> LRU marker) and the
+        # serialized prefill unit each node runs admissions through: a
+        # miss occupies it for the full prompt's prefill time, a hit only
+        # for the uncached share — cache thrash costs admission capacity,
+        # which is why affinity routing moves the TTFT tail
+        self._pfx: list[dict[int, bool]] | None = (
+            [{} for _ in range(n_nodes)] if params.prefix_cache else None)
+        self._pfx_busy = [0.0] * n_nodes
         # --- asynchronous control plane (repro.dpu) ---
         # a plane with an ``advance`` hook is a DPU sidecar: the host loop
         # pumps its cycle once per round (uplink delivery, budget drain,
@@ -368,6 +416,9 @@ class ClusterSim:
         if action == "rebalance_replicas":
             self._rebalance_replicas()
             return True
+        if action == "rebalance_nodes":
+            self._rebalance_nodes()
+            return True
         return matched
 
     def _rebalance_replicas(self) -> None:
@@ -385,6 +436,25 @@ class ClusterSim:
             r.node = node
             self.queues[node].append(r)
             self._queued_work[node] += max(r.decode_len, 1)
+
+    def _rebalance_nodes(self) -> None:
+        """Level queued requests across the nodes *inside* each replica —
+        the intra-replica actuation for hierarchical routing skew (the
+        replica tier is untouched: no request changes replica)."""
+        npr = self.nodes_per_replica
+        for rep in range(self.p.n_replicas):
+            lo = rep * npr
+            backlog: list[Request] = []
+            for n in range(lo, lo + npr):
+                backlog.extend(self.queues[n])
+                self.queues[n].clear()
+                self._queued_work[n] = 0
+            backlog.sort(key=lambda r: r.arrival)
+            for i, r in enumerate(backlog):
+                node = lo + i % npr
+                r.node = node
+                self.queues[node].append(r)
+                self._queued_work[node] += max(r.decode_len, 1)
 
     # ------------------------------------------------------------------
     # main loop
@@ -603,21 +673,33 @@ class ClusterSim:
         return node // self.nodes_per_replica
 
     def _node_for(self, r: Request, t: float) -> int:
-        """Route a request: replica choice via the router, then a
-        round-robin spread over that replica's nodes (its TP group)."""
+        """Route a request: replica choice via the router, then a node
+        slot.  Hierarchical policies place the node themselves (two-stage
+        choose); flat policies fall back to a round-robin spread over the
+        replica's nodes (its TP group), the flat-router behavior."""
         p, f = self.p, self.fault
+        node = -1
         if (f.active(t) and f.hot_replica >= 0
                 and self.rng.random() < f.hot_replica_frac):
             # session-affinity pinning overrides the policy (the fault)
             replica = f.hot_replica % p.n_replicas
             self.router.routed_per_replica[replica] += 1
         else:
-            replica = self.router.route(RequestInfo(
+            decision = self.router.route_ex(RequestInfo(
                 flow=r.flow, prompt_len=r.prompt_len,
-                predicted_decode=float(r.decode_len)), now=t)
-        self._replica_rr[replica] += 1
-        local = self._replica_rr[replica] % self.nodes_per_replica
-        return replica * self.nodes_per_replica + local
+                predicted_decode=float(r.decode_len),
+                session=r.session), now=t)
+            replica, node = decision.replica, decision.node
+        if node < 0:
+            self._replica_rr[replica] += 1
+            local = self._replica_rr[replica] % self.nodes_per_replica
+            node = replica * self.nodes_per_replica + local
+        if (f.intra_replica_pin_frac > 0 and f.active(t)
+                and self.rng.random() < f.intra_replica_pin_frac):
+            # replica-local affinity bug: the request sticks to the
+            # replica's first node regardless of the router's spread
+            node = self._replica_of(node) * self.nodes_per_replica
+        return node
 
     def _admit(self, t: float) -> None:
         f = self.fault
@@ -763,16 +845,22 @@ class ClusterSim:
         self._refresh_router(t)
 
     def _refresh_router(self, t: float) -> None:
-        """Feed the router's view + emit the router-visible KV telemetry.
+        """Publish the router's view over the modeled link + emit the
+        router-visible KV telemetry.
 
-        The stale-router-view fault widens the router's staleness while
-        active; mitigation (or fault expiry) snaps it back to the healthy
-        configured value.
+        The view is telemetry-borne: per-replica snapshot trees (with the
+        per-node tier) are *sent* here and only reach the router when the
+        link delivers them, so staleness is a measured property of the
+        transport.  The stale-router-view fault degrades the link (delay +
+        jitter + loss) while active; mitigation (or fault expiry) restores
+        the healthy configured link.
         """
         p, f = self.p, self.fault
-        self.router.staleness = (f.router_stale if f.active(t)
-                                 and f.router_stale > 0
-                                 else p.router_staleness)
+        if f.router_stale > 0:
+            self._view_link.params = (
+                LinkParams(delay=f.router_stale,
+                           jitter=0.25 * f.router_stale, drop_p=0.05)
+                if f.active(t) else self._view_base)
         # fused decode-work estimate: one clamped subtraction over the
         # cluster-wide remaining-token concat instead of per-node reductions
         if self._rt_key != self._mver:
@@ -790,6 +878,7 @@ class ClusterSim:
             w_all = rem_all
         occ_l: list[int] = []
         cap = self.nodes_per_replica * p.slots_per_node * p.kv_tokens_per_slot
+        node_cap = p.slots_per_node * p.kv_tokens_per_slot
         npr = self.nodes_per_replica
         starts = [0] * (p.n_nodes + 1)
         for i, c in enumerate(counts_l):
@@ -801,21 +890,37 @@ class ClusterSim:
             work = 0
             n_act = 0
             tokens = 0
+            node_snaps = []
             for n in nodes:
-                queued += len(self.queues[n])
+                q_n = len(self.queues[n])
+                queued += q_n
                 work += self._queued_work[n]
                 k = counts_l[n]
+                tok_n = 0
+                w_n = self._queued_work[n]
                 if k:
                     n_act += k
-                    tokens += self._kv_base[n] + self._tok_off[n] * k
+                    tok_n = self._kv_base[n] + self._tok_off[n] * k
+                    tokens += tok_n
+                    w_n += int(w_all[starts[n]:starts[n + 1]].sum())
+                node_snaps.append(NodeSnapshot(
+                    node=n, queue_depth=q_n, active=k,
+                    slots=p.slots_per_node,
+                    kv_occupancy=(min(tok_n / node_cap, 1.0)
+                                  if node_cap else 0.0),
+                    expected_work=float(w_n),
+                    dev_active=tuple(self._dev_count[n])))
             if n_act:
                 work += int(w_all[starts[lo]:starts[lo + npr]].sum())
             occ = min(tokens / cap, 1.0) if cap else 0.0
-            self.router.observe(ReplicaSnapshot(
+            self._view_link.send(t, ReplicaSnapshot(
                 replica=replica, ts=t, queue_depth=queued, active=n_act,
                 slots=self.nodes_per_replica * p.slots_per_node,
-                kv_occupancy=occ, expected_work=float(work)))
+                kv_occupancy=occ, expected_work=float(work),
+                nodes=tuple(node_snaps)))
             occ_l.append(int(occ * 100))
+        for snap in self._view_link.deliver(t):
+            self.router.observe(snap)
         # router-visible KV telemetry, one row per replica
         self._emit_cols((t, p.n_replicas), EventKind.QUEUE_SAMPLE,
                         node=self._replica_lo, depth=np.asarray(occ_l,
@@ -902,7 +1007,10 @@ class ClusterSim:
             # static batching: only admit when the whole batch drained
             return
         added: list[Request] = []
+        pfx = self._pfx is not None
         while len(act) < p.slots_per_node and q:
+            if pfx and self._pfx_busy[node] > t:
+                break   # the node's prefill unit is still chewing
             r = q.popleft()
             self._queued_work[node] -= max(r.decode_len, 1)
             self._prefill(r, t)
@@ -914,9 +1022,16 @@ class ClusterSim:
     def _prefill(self, r: Request, t: float) -> None:
         p = self.p
         r.start_decode = t
-        # first token leaves one decode step after admission
+        h2d_bytes = r.prompt_len * p.h2d_tok_bytes
+        prefill_pen = 0.0
+        if self._pfx is not None:
+            prefill_pen, h2d_bytes = self._prefix_lookup(r, h2d_bytes)
+            busy = self._pfx_busy[r.node]
+            self._pfx_busy[r.node] = (busy if busy > t else t) + prefill_pen
+        # first token leaves one decode step after admission (plus the
+        # prefill compute the prefix cache did not cover)
         self.metrics.ttfts.append(
-            t - r.arrival + p.egress_frac * p.decode_step)
+            t - r.arrival + p.egress_frac * p.decode_step + prefill_pen)
         # scheduler places the sequence on the least-loaded device slot
         counts = self._dev_count[r.node]
         r.device = counts.index(min(counts))
@@ -925,8 +1040,33 @@ class ClusterSim:
         self._pref_ts.append(t + 1e-4)
         self._pref_nodes.append(r.node)
         self._pref_devs.append(r.device)
-        self._pref_bytes.append(r.prompt_len * p.h2d_tok_bytes)
+        self._pref_bytes.append(h2d_bytes)
         self._pref_flows.append(r.flow)
+
+    def _prefix_lookup(self, r: Request, h2d_bytes: int) -> tuple[float, int]:
+        """Bounded per-node LRU of session prefix keys.
+
+        A hit skips ``prefix_frac`` of the prompt's prefill compute and of
+        its H2D feed (the cached prefix never crosses the bus again); a
+        miss pays the full prefill and evicts the oldest session.  This is
+        what makes affinity routing *matter*: a policy that scatters a
+        session across nodes thrashes every node's cache.
+        """
+        p = self.p
+        key = r.session if r.session >= 0 else r.flow
+        cache = self._pfx[r.node]
+        full_pen = r.prompt_len * p.prefill_tok_s
+        if key in cache:
+            del cache[key]          # refresh LRU recency
+            cache[key] = True
+            self.metrics.prefix_hits += 1
+            return (full_pen * (1.0 - p.prefix_frac),
+                    max(int(h2d_bytes * (1.0 - p.prefix_frac)), 1))
+        self.metrics.prefix_misses += 1
+        cache[key] = True
+        if len(cache) > p.prefix_cache_sessions:
+            del cache[next(iter(cache))]
+        return full_pen, h2d_bytes
 
     def _pair_add(self, node: int, dev: int) -> None:
         pair = (node, dev)

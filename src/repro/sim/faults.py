@@ -12,7 +12,7 @@ from __future__ import annotations
 import dataclasses
 from dataclasses import dataclass, field
 
-from repro.dpu import DPUParams, LinkParams
+from repro.dpu import DPUParams, LinkParams  # noqa: F401 (LinkParams: views)
 from repro.sim.cluster import FaultSpec, SimParams
 from repro.sim.workload import WorkloadSpec
 
@@ -159,11 +159,26 @@ def make_scenarios() -> dict[str, Scenario]:
         params=_pm(duration=3.0, n_replicas=4,
                    router_policy="join_shortest_queue"))
     # low steady load + occasional microbursts: a fresh JSQ router spreads
-    # each burst; a stale view dumps the whole clump on one replica
+    # each burst; a lagging view dumps the whole clump on one replica.
+    # The staleness is no longer a knob: the fault degrades the router's
+    # view *transport* (0.6 s delay + jitter + 5% loss on the modeled
+    # link), so snapshots arrive late and out of order and the router's
+    # measured view lag — not a configuration — disables its optimistic
+    # accounting.  The healthy link (1.5 ms) is realistic but harmless.
     add("stale_router_view", "cross_replica_skew",
         FaultSpec(router_stale=0.6),
         workload=_wl(rate=45.0, duration=2.9, burst_factor=16.0),
         params=_pm(duration=3.0, n_replicas=4,
+                   router_policy="join_shortest_queue",
+                   view_link=LinkParams(delay=1.5e-3)))
+    # intra-replica placement skew: every replica's requests stick to its
+    # first node (a replica-local affinity bug) — replica totals stay
+    # balanced (the 3d.1 detector stays silent) while each replica's node
+    # tier skews hard; only the hierarchical row can see it
+    add("hierarchical_routing_skew", "hierarchical_routing_skew",
+        FaultSpec(intra_replica_pin_frac=0.85),
+        workload=_wl(rate=260.0, duration=2.4),
+        params=_pm(duration=2.5, n_replicas=2,
                    router_policy="join_shortest_queue"))
     add("replica_slow", "cross_replica_skew",
         FaultSpec(replica_slow=1, replica_slow_mult=5.0),

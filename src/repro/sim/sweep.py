@@ -215,8 +215,12 @@ def main(argv: list[str] | None = None) -> int:
     args = ap.parse_args(argv)
 
     if args.smoke:
+        # the CI-sized grid covers one row per family plus the routing
+        # pathologies the hierarchical router owns: the telemetry-borne
+        # stale view and the intra-replica placement skew
         cfg = SweepConfig(
-            scenarios=("healthy", "tp_straggler", "hot_replica"),
+            scenarios=("healthy", "tp_straggler", "hot_replica",
+                       "stale_router_view", "hierarchical_routing_skew"),
             seeds=(0,), workers=args.workers or 2,
             scalar_synth=args.scalar_synth, mitigate=args.mitigate)
     else:

@@ -18,6 +18,7 @@ class Request:
     arrival: float
     prompt_len: int
     decode_len: int
+    session: int = -1             # prefix/session affinity key (-1: none)
     node: int = -1                # assigned serving node
     device: int = -1              # device slot within the node
     start_decode: float = -1.0
@@ -39,6 +40,9 @@ class WorkloadSpec:
     burst_factor: float = 1.0      # >1: clumped arrivals (3a.1 driver)
     burst_start: float = 0.0       # bursts begin after this time (baseline)
     flow_skew: float = 0.0         # 0: uniform flows; >0: zipf-ish volume skew
+    n_sessions: int = 0            # >0: requests share this many sticky
+    #                                prefix/session keys (prefix-heavy
+    #                                workloads); 0 = every request unique
     seed: int = 0
 
 
@@ -75,4 +79,6 @@ def _mk(rng: np.random.Generator, flow: int, t: float,
         # heavy-hitter sessions: much longer prompts+decodes
         prompt = int(prompt * (1 + 10 * spec.flow_skew))
         decode = int(decode * (1 + 4 * spec.flow_skew))
-    return Request(flow=flow, arrival=t, prompt_len=prompt, decode_len=decode)
+    session = flow % spec.n_sessions if spec.n_sessions > 0 else -1
+    return Request(flow=flow, arrival=t, prompt_len=prompt,
+                   decode_len=decode, session=session)

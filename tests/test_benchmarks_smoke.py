@@ -139,12 +139,21 @@ def test_control_loop_dpu_recovers_and_pays_measured_latency():
 
 
 @pytest.mark.slow
-def test_router_table_jsq_beats_round_robin_p99_ttft():
-    """The acceptance headline, asserted on the benchmark output itself."""
+def test_router_table_acceptance_headlines():
+    """Both router acceptance headlines, asserted on the benchmark output:
+    queue-aware beats static rotation on tail TTFT (general lane), and
+    prefix affinity beats flat JSQ on the prefix-heavy lane while its
+    load-ceiling spill holds routed imbalance <= 1.25."""
     stdout = _run_only("router")
-    p99 = {}
+    rows = {}
     for line in stdout.strip().splitlines()[1:]:
         name, _, derived = line.split(",", 2)
-        fields = dict(kv.split("=", 1) for kv in derived.split(";"))
-        p99[name.split("/", 1)[1]] = float(fields["p99_ttft_ms"])
-    assert p99["join_shortest_queue"] < p99["round_robin"]
+        rows[name.split("/", 1)[1]] = dict(
+            kv.split("=", 1) for kv in derived.split(";"))
+    assert (float(rows["join_shortest_queue"]["p99_ttft_ms"])
+            < float(rows["round_robin"]["p99_ttft_ms"]))
+    summ = rows["prefix/summary"]
+    assert summ["affinity_beats_jsq_p99"] == "1"
+    assert summ["imbalance_ok"] == "1"
+    assert (float(rows["prefix/prefix_affinity"]["prefix_hit_rate"])
+            > float(rows["prefix/join_shortest_queue"]["prefix_hit_rate"]))

@@ -1,36 +1,48 @@
-"""Cross-replica router: policy invariants, staleness semantics, the live
-ReplicaSet plumbing, and the 3d closed loop (hot-replica detection +
-rebalance_replicas measurably reducing tail latency)."""
+"""Hierarchical cross-replica router: policy invariants (replica and node
+tier), telemetry-borne view semantics (modeled-link lag, out-of-order
+snapshots), the live ReplicaSet plumbing, and the 3d closed loop
+(hot-replica detection + rebalance_replicas measurably reducing tail
+latency)."""
 
 import dataclasses
 import random
 
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:     # clean checkout: seeded-random fallback
+    from proptest_fallback import given, settings, st
+
+from repro.dpu.transport import LinkParams
 from repro.serving.router import (
     POLICIES,
+    NodeSnapshot,
     ReplicaSet,
     ReplicaSnapshot,
     RequestInfo,
     Router,
+    RouterView,
     make_policy,
 )
-from repro.sim import SCENARIOS, SimParams, WorkloadSpec, run_scenario
+from repro.sim import Request, SCENARIOS, SimParams, WorkloadSpec, run_scenario
 from repro.sim.cluster import ClusterSim, FaultSpec
 
 
-def _feed(router: Router, backlogs, ts=0.0, work=None, kv=None):
+def _feed(router: Router, backlogs, ts=0.0, work=None, kv=None, nodes=None):
     for r, b in enumerate(backlogs):
         router.observe(ReplicaSnapshot(
             replica=r, ts=ts, queue_depth=b, active=0, slots=8,
             kv_occupancy=(kv[r] if kv else 0.0),
-            expected_work=(work[r] if work else float(b))))
+            expected_work=(work[r] if work else float(b)),
+            nodes=(nodes[r] if nodes else ())))
 
 
 class TestPolicies:
     def test_registry_covers_expected_policies(self):
         assert set(POLICIES) == {"round_robin", "join_shortest_queue",
-                                 "least_kv", "prediction_aware"}
+                                 "least_kv", "prediction_aware",
+                                 "prefix_affinity", "hierarchical_jsq"}
         with pytest.raises(ValueError):
             make_policy("no_such_policy")
 
@@ -104,6 +116,190 @@ class TestPolicies:
         # the stale router still sees the t=0 view (<= now - staleness)
         for i in range(20):
             assert router.route(RequestInfo(flow=i), now=2.5) == 0
+
+
+def _nodes_of(replica, depths, npr=2):
+    return tuple(NodeSnapshot(node=replica * npr + i, queue_depth=d,
+                              active=0, slots=8)
+                 for i, d in enumerate(depths))
+
+
+class TestHierarchicalRouting:
+    def test_hierarchical_jsq_sees_through_balanced_replica_totals(self):
+        # replica totals tie at 8; flat JSQ cannot tell them apart, the
+        # hierarchical policy finds replica 0's idle node
+        router = Router(2, policy="hierarchical_jsq", seed=1)
+        _feed(router, [8, 8], nodes=[_nodes_of(0, [8, 0]),
+                                     _nodes_of(1, [4, 4])])
+        d = router.route_ex(RequestInfo(flow=0))
+        assert d.replica == 0
+        assert d.node == 1
+
+    def test_flat_policies_leave_node_placement_to_caller(self):
+        router = Router(2, policy="join_shortest_queue", seed=1)
+        _feed(router, [1, 8], nodes=[_nodes_of(0, [1, 0]),
+                                     _nodes_of(1, [4, 4])])
+        d = router.route_ex(RequestInfo(flow=0))
+        assert d.replica == 0
+        assert d.node == -1
+
+    def test_node_bumps_spread_a_burst_within_the_replica(self):
+        router = Router(1, policy="hierarchical_jsq", seed=2)
+        _feed(router, [0], nodes=[_nodes_of(0, [0, 0])])
+        chosen = [router.route_ex(RequestInfo(flow=i)).node
+                  for i in range(10)]
+        assert abs(chosen.count(0) - chosen.count(1)) <= 1
+
+    def test_device_counts_break_node_ties(self):
+        router = Router(1, policy="hierarchical_jsq", seed=3)
+        nodes = (NodeSnapshot(node=0, queue_depth=2, dev_active=(2, 2)),
+                 NodeSnapshot(node=1, queue_depth=2, dev_active=(4, 0)))
+        _feed(router, [4], nodes=[nodes])
+        assert router.route_ex(RequestInfo(flow=0)).node == 1
+
+    def test_prefix_affinity_sticks_sessions_to_their_home(self):
+        router = Router(4, policy="prefix_affinity", seed=5)
+        homes = {}
+        for s in range(16):
+            # idle cluster before each route, so no session ever spills
+            _feed(router, [0, 0, 0, 0], ts=float(s))
+            homes[s] = router.route(RequestInfo(flow=100 + s, session=s),
+                                    now=float(s))
+        assert len(set(homes.values())) > 1       # ring actually spreads
+        # an idle view must reproduce every placement — affinity is a
+        # property of the key, not of view churn
+        for s, home in homes.items():
+            _feed(router, [0, 0, 0, 0], ts=100.0 + s)
+            assert router.route(RequestInfo(flow=200 + s, session=s),
+                                now=100.0 + s) == home
+
+    def test_prefix_affinity_spills_to_jsq_over_the_load_ceiling(self):
+        router = Router(4, policy="prefix_affinity", seed=6)
+        _feed(router, [0, 0, 0, 0])
+        home = router.route(RequestInfo(flow=0, session=7))
+        backlogs = [0, 0, 0, 0]
+        backlogs[home] = 50                        # home is drowning
+        _feed(router, backlogs, ts=1.0)
+        spilled = router.route(RequestInfo(flow=1, session=7), now=1.0)
+        assert spilled != home
+        assert router.policy.spills >= 1
+
+    def test_prefix_affinity_node_tier_is_sticky_too(self):
+        router = Router(1, policy="prefix_affinity", seed=7)
+        _feed(router, [0], nodes=[_nodes_of(0, [0, 0, 0, 0], npr=4)])
+        first = router.route_ex(RequestInfo(flow=0, session=3)).node
+        _feed(router, [0], ts=1.0,
+              nodes=[_nodes_of(0, [0, 0, 0, 0], npr=4)])
+        again = router.route_ex(
+            RequestInfo(flow=1, session=3), now=1.0).node
+        assert first == again >= 0
+
+
+class TestTelemetryBorneView:
+    def test_out_of_order_snapshots_insert_in_ts_order(self):
+        view = RouterView(1)
+        for ts in (0.5, 0.1, 0.9, 0.3, 0.7):
+            view.update(ReplicaSnapshot(replica=0, ts=ts,
+                                        queue_depth=int(ts * 10)))
+        h = view._hist[0]
+        assert [s.ts for s in h] == sorted(s.ts for s in h)
+        assert view.get(0, 1.0).ts == 0.9          # newest by ts, not arrival
+        # the staleness scan is correct again once history is sorted
+        assert view.get(0, 1.0, staleness=0.4).ts == 0.5
+
+    def test_shuffled_timestamp_regression(self):
+        # the pre-fix append-only history corrupted both the prune cutoff
+        # and the reversed() scan under out-of-order ingest
+        rng = random.Random(3)
+        tss = [i * 0.01 for i in range(200)]
+        rng.shuffle(tss)
+        view = RouterView(1, max_age=5.0)
+        for ts in tss:
+            view.update(ReplicaSnapshot(replica=0, ts=ts))
+        h = view._hist[0]
+        assert [s.ts for s in h] == sorted(s.ts for s in h)
+        assert view.latest_ts(0) == max(tss)
+
+    def test_stale_arrival_does_not_drag_prune_cutoff(self):
+        view = RouterView(1, max_age=1.0)
+        view.update(ReplicaSnapshot(replica=0, ts=5.0))
+        view.update(ReplicaSnapshot(replica=0, ts=0.1))   # ancient strays
+        view.update(ReplicaSnapshot(replica=0, ts=0.2))
+        h = view._hist[0]
+        # pruning keys off the newest snapshot HELD (5.0): one boundary
+        # entry below the cutoff survives, the rest of the strays go
+        assert [s.ts for s in h] == [0.2, 5.0]
+
+    def test_stale_arrival_does_not_clear_optimistic_bumps(self):
+        """A late out-of-order snapshot must not erase the dispatch deltas
+        accumulated against the newest snapshot the view still serves."""
+        router = Router(2, policy="join_shortest_queue", seed=4)
+        _feed(router, [0, 0], ts=1.0)
+        for i in range(3):          # bumps: 3 on whichever replica won ties
+            router.route(RequestInfo(flow=i), now=1.0)
+        before = list(router._bump_backlog)
+        # a delayed ts=0.5 snapshot lands late for replica 0
+        router.observe(ReplicaSnapshot(replica=0, ts=0.5, queue_depth=0))
+        assert router._bump_backlog == before      # deltas survive
+        assert router.view.get(0, 1.01).ts == 1.0  # newest still served
+        # the next burst stays spread instead of dogpiling replica 0
+        chosen = [router.route(RequestInfo(flow=10 + i), now=1.01)
+                  for i in range(6)]
+        assert abs(chosen.count(0) - chosen.count(1)) <= 1
+
+    def test_hierarchical_view_tree_exposes_all_tiers(self):
+        router = Router(2, policy="hierarchical_jsq", seed=1)
+        _feed(router, [3, 2], nodes=[_nodes_of(0, [2, 1]),
+                                     _nodes_of(1, [1, 1])])
+        tree = router.view.tree(now=0.0)
+        assert set(tree) == {0, 1}
+        assert set(tree[0]) == {0, 1} and set(tree[1]) == {2, 3}
+        assert tree[0][0].queue_depth == 2
+        assert tree[1][3].queue_depth == 1
+
+    def test_view_lag_is_measured_and_gates_optimistic_bumps(self):
+        router = Router(2, policy="join_shortest_queue", seed=1)
+        _feed(router, [0, 10], ts=0.0)
+        assert router.view_lag(0.0) == 0.0
+        assert router.view_lag(2.0) == pytest.approx(2.0)
+        # nothing fresh arrived for 2 s: bumps are distrusted, so the
+        # whole burst dogpiles the replica that *looked* shortest
+        for i in range(20):
+            assert router.route(RequestInfo(flow=i), now=2.0) == 0
+        # a fresh delivery re-enables optimistic accounting
+        _feed(router, [0, 0], ts=2.5)
+        chosen = [router.route(RequestInfo(flow=100 + i), now=2.5)
+                  for i in range(8)]
+        assert chosen.count(0) == chosen.count(1) == 4
+
+
+class TestRouterViewProperty:
+    """RouterView.get staleness contract, across random ingest orders,
+    staleness depths, and prune pressure."""
+
+    @given(st.lists(st.floats(0.0, 10.0), min_size=1, max_size=64),
+           st.floats(0.05, 4.0),
+           st.floats(0.5, 12.0))
+    @settings(max_examples=60, deadline=None)
+    def test_get_never_serves_fresher_than_staleness(self, tss, staleness,
+                                                     max_age):
+        view = RouterView(1, max_age=max_age)
+        for ts in tss:
+            view.update(ReplicaSnapshot(replica=0, ts=ts))
+        h = view._hist[0]
+        assert [s.ts for s in h] == sorted(s.ts for s in h)
+        assert view.latest_ts(0) == max(tss)    # newest survives pruning
+        now = max(tss) + 0.01
+        cutoff = now - staleness
+        got = view.get(0, now, staleness)
+        eligible = [s.ts for s in h if s.ts <= cutoff]
+        if eligible:
+            # never a snapshot younger than now - staleness when an
+            # eligible one exists — and always the newest eligible one
+            assert got.ts <= cutoff
+            assert got.ts == eligible[-1]
+        else:
+            assert got.ts == h[0].ts
 
 
 class TestReplicaSet:
@@ -182,6 +378,58 @@ class TestReplicaSet:
         # unknown per-engine knob on a stub engine: politely refused
         assert rs.apply_action("compress_kv", 1, {}) is False
 
+    def test_apply_action_routes_through_node_replica_map(self):
+        """Regression: detector findings carry cluster-NODE ids; indexing
+        ``engines`` with one conflated node and replica coordinates when a
+        replica spans several nodes."""
+        calls = []
+
+        class _Actuating(self._StubEngine):
+            def apply_action(self, action, node, detail):
+                calls.append((id(self), action, node))
+                return True
+
+        engines = [_Actuating(), _Actuating()]
+        rs = ReplicaSet(engines, policy="round_robin", nodes_per_replica=2)
+        assert rs.node_replica(0) == 0
+        assert rs.node_replica(3) == 1
+        assert rs.node_replica(4) is None     # off the cluster
+        assert rs.node_replica(-1) is None    # cluster-wide
+        # node 3 must actuate engine 1, never engines[3] (out of range) or
+        # engines[... wrong replica]
+        assert rs.apply_action("compress_kv", 3, {})
+        assert calls and calls[-1][0] == id(engines[1])
+        # out-of-range node: refused instead of silently mis-targeted
+        assert rs.apply_action("compress_kv", 4, {}) is False
+
+    def test_refresh_is_periodic_not_per_submit(self):
+        """Regression: submit() used to re-snapshot every engine per
+        request (O(n_replicas) per submit), defeating the staleness model;
+        the view now publishes on refresh_period over the modeled link."""
+        engines = [self._StubEngine() for _ in range(3)]
+        rs = ReplicaSet(engines, policy="join_shortest_queue",
+                        refresh_period=0.1)
+        for i in range(20):
+            rs.submit(self._Req(req_id=i), now=0.0)
+        assert rs.view_link.sent == 1          # one publication, not 20
+        rs.submit(self._Req(req_id=20), now=0.2)
+        assert rs.view_link.sent == 2
+        # conservation still holds: bumps carry the load between refreshes
+        assert sum(len(e.submitted) for e in engines) == 21
+
+    def test_view_rides_the_modeled_link(self):
+        """The router only learns a snapshot when the link delivers it —
+        staleness is measured from the transport, not configured."""
+        engines = [self._StubEngine() for _ in range(2)]
+        rs = ReplicaSet(engines, policy="join_shortest_queue",
+                        view_link=LinkParams(delay=0.5),
+                        refresh_period=0.05)
+        rs.refresh(0.0)
+        assert rs.router.view.latest_ts(0) == float("-inf")   # in flight
+        rs.refresh(0.6)       # matured: the t=0 snapshot lands now
+        assert rs.router.view.latest_ts(0) == 0.0
+        assert rs.view_lag(0.6) == pytest.approx(0.6)
+
 
 class TestReplicaSim:
     def test_replica_dimension_validates(self):
@@ -246,3 +494,55 @@ class TestHotReplicaClosedLoop:
         jsq, rr = results["join_shortest_queue"], results["round_robin"]
         assert jsq.p_ttft(0.99) < 0.9 * rr.p_ttft(0.99)
         assert jsq.completed >= 0.95 * rr.completed
+
+
+class TestRebalanceNodesActuator:
+    def test_levels_queues_within_each_replica_only(self):
+        sim = ClusterSim(SimParams(n_nodes=4, n_replicas=2),
+                         WorkloadSpec(rate=1.0, duration=0.1))
+        reqs = [Request(flow=i, arrival=i * 1e-3, prompt_len=8, decode_len=4)
+                for i in range(12)]
+        # pile replica 0's backlog on node 0, replica 1's on node 2
+        for i, r in enumerate(reqs):
+            node = 0 if i < 8 else 2
+            r.node = node
+            sim.queues[node].append(r)
+            sim._queued_work[node] += max(r.decode_len, 1)
+        assert sim.apply_action("rebalance_nodes", 0, {})
+        depths = [len(q) for q in sim.queues]
+        # leveled inside each replica; nothing crossed the replica boundary
+        assert depths[0] + depths[1] == 8 and abs(depths[0] - depths[1]) <= 1
+        assert depths[2] + depths[3] == 4 and abs(depths[2] - depths[3]) <= 1
+        for n, q in enumerate(sim.queues):
+            assert sim._queued_work[n] == sum(max(r.decode_len, 1)
+                                              for r in q)
+            for r in q:
+                assert r.node == n
+
+
+@pytest.mark.slow
+class TestHierarchicalRoutingClosedLoop:
+    def test_intra_replica_pin_fires_only_the_hierarchical_row(self):
+        """Replica totals stay balanced under the symmetric pin, so 3d.1
+        must stay silent while 3d.2 names the hot node."""
+        sc = SCENARIOS["hierarchical_routing_skew"]
+        _, plane, _ = run_scenario(dataclasses.replace(sc.fault),
+                                   sc.params, sc.workload)
+        fired = {f.name for f in plane.findings}
+        assert "hierarchical_routing_skew" in fired
+        assert "cross_replica_skew" not in fired
+        hits = [f for f in plane.findings
+                if f.name == "hierarchical_routing_skew"]
+        # the locus is a replica's FIRST node (where the pin points)
+        assert all(f.node % 2 == 0 for f in hits)
+
+    def test_rebalance_nodes_mitigation_closes_the_loop(self):
+        sc = SCENARIOS["hierarchical_routing_skew"]
+        off, _, _ = run_scenario(dataclasses.replace(sc.fault),
+                                 sc.params, sc.workload, mitigate=False)
+        on, plane, sim = run_scenario(dataclasses.replace(sc.fault),
+                                      sc.params, sc.workload, mitigate=True)
+        assert any(a.action == "rebalance_nodes" for a in plane.actions)
+        assert sim.fault.mitigated
+        assert on.p_ttft(0.99) < off.p_ttft(0.99)
+        assert on.completed >= off.completed

@@ -27,19 +27,20 @@ from repro.sim import SCENARIOS, run_scenario
 
 
 class TestRegistry:
-    def test_30_rows(self):
-        # the paper's 28 rows (3a/3b/3c) + the DP-routing extension (3d)
-        # + the DPU self-diagnosis row (dpu)
-        assert len(ALL_RUNBOOKS) == 30
+    def test_31_rows(self):
+        # the paper's 28 rows (3a/3b/3c) + the DP-routing extensions (3d:
+        # cross-replica + intra-replica hierarchical) + the DPU
+        # self-diagnosis row (dpu)
+        assert len(ALL_RUNBOOKS) == 31
         assert len(BY_TABLE["3a"]) == 9
         assert len(BY_TABLE["3b"]) == 10
         assert len(BY_TABLE["3c"]) == 9
-        assert len(BY_TABLE["3d"]) == 1
+        assert len(BY_TABLE["3d"]) == 2
         assert len(BY_TABLE["dpu"]) == 1
 
     def test_one_detector_per_row(self):
         dets = build_detectors()
-        assert len(dets) == 30
+        assert len(dets) == 31
         for entry in ALL_RUNBOOKS:
             assert entry.row_id in dets
             assert dets[entry.row_id].name == entry.row_id
@@ -55,7 +56,7 @@ class TestRegistry:
             assert entry.action in ACTIONS, entry.row_id
 
     def test_detector_count_matches(self):
-        assert len(ALL_DETECTORS) == 30
+        assert len(ALL_DETECTORS) == 31
 
     def test_every_runbook_action_is_registered(self):
         # the import-time assertion in core.mitigation enforces this too;
