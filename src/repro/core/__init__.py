@@ -4,10 +4,10 @@ attribution, and mitigation plane for distributed LLM inference/training.
 Public surface:
   events       — DPU-observable event schema (the §4.3 boundary, enforced)
   sketch       — O(1) streaming statistics (line-rate processing)
-  detectors    — 30 executable detectors, one per runbook row (the paper's
-                 28 + the 3d data-parallel routing extension + the DPU
-                 self-diagnosis row)
-  runbooks     — Tables 3(a)/(b)/(c) as a declarative registry
+  detectors    — 34 executable detectors, one per runbook row (the paper's
+                 28 + the 3d data-parallel routing extensions + the DPU
+                 self-diagnosis row + the 3e collective/rail/memory tier)
+  runbooks     — Tables 3(a)/(b)/(c)/(d)/(e) as a declarative registry
   attribution  — §4.2 cross-vantage root-cause attribution
   mitigation   — §5 closed-loop controller
   telemetry    — DPUAgent / TelemetryPlane tying it together

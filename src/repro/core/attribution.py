@@ -71,6 +71,10 @@ DIRECT_LOCUS: dict[str, str] = {
     # 3d
     "cross_replica_skew": LOCUS_ROUTER,
     "hierarchical_routing_skew": LOCUS_ROUTER,
+    # 3e
+    "collective_straggler": LOCUS_DEVICE,
+    "rail_congestion": LOCUS_NETWORK,
+    "hbm_bandwidth_cliff": LOCUS_DEVICE,
     # DPU self-diagnosis
     "dpu_saturation": LOCUS_DPU,
 }
@@ -287,6 +291,42 @@ class Attributor:
                     "replica's ingress and its queue outgrows its "
                     "siblings: intra-replica placement skew — the routing "
                     "layer is blind below the replica tier."))
+
+        # Rule 5c: the per-collective tier (3e) carries its locus in the
+        # signal's construction.  An op-level straggler names a rank;
+        # rail congestion names a shared link, never a node; the memory-
+        # bandwidth cliff is the only row whose evidence *includes* the
+        # batch size that explains the sag, so the narrative says so.
+        if f.name == "collective_straggler":
+            return Attribution(
+                f.ts, LOCUS_DEVICE, node=f.node, confidence=0.75, primary=f,
+                supporting=(),
+                narrative=(
+                    f"Node {f.node} is last into "
+                    f"{f.evidence.get('late_frac', '?')} of its per-op "
+                    "collective rounds: rank-local slowdown visible only at "
+                    "per-op granularity."))
+        if f.name == "rail_congestion":
+            return Attribution(
+                f.ts, LOCUS_NETWORK, node=-1, confidence=0.8, primary=f,
+                supporting=(),
+                narrative=(
+                    f"Rail {f.evidence.get('rail', '?')} is the slow rail in "
+                    f"{f.evidence.get('slow_frac', '?')} of cross-domain "
+                    "rounds while intra-domain traffic stays fast: a shared-"
+                    "rail fabric problem, not any single rank."))
+        if f.name == "hbm_bandwidth_cliff":
+            return Attribution(
+                f.ts, LOCUS_DEVICE, node=f.node, confidence=0.8, primary=f,
+                supporting=(),
+                narrative=(
+                    f"Node {f.node}'s egress rate sags to "
+                    f"{f.evidence.get('rate_vs_peak', '?')} of its peak with "
+                    "a flat ingress queue and batch occupancy of "
+                    f"{f.evidence.get('batch_size', '?')} at its observed "
+                    "max: decode batch size is past the device's memory-"
+                    "bandwidth knee — shrink the batch, nothing upstream "
+                    "will help."))
 
         # Rule 6: the observer itself saturating is always self-attributed —
         # and it taints confidence in everything else this window, so it

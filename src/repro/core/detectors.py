@@ -23,10 +23,15 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.events import (
+    COLL_EDGE_FINISH,
+    COLL_GROUP_ALL_GATHER,
+    COLL_GROUP_REDUCE_SCATTER,
     CollectiveOp,
+    DOMAIN_GROUP_BASE,
     Event,
     EventBatch,
     EventKind,
+    RAIL_GROUP_BASE,
 )
 from repro.core.sketch import (
     EWMA,
@@ -54,6 +59,23 @@ META_TAP_DEBUG = 4       # QUEUE_SAMPLE from a verbose debug tap (payload
 META_DPU_RING = 5        # QUEUE_SAMPLE: DPU self-telemetry (ingest-ring
 #                          occupancy % in depth, rows shed since the last
 #                          sample in size; node = -1)
+META_BATCH_OCC = 6       # QUEUE_SAMPLE: scheduler-exported active decode
+#                          batch size per node (depth = active slots) — the
+#                          NIC-side tap of the host scheduler's slot count,
+#                          same vantage as the ingress-queue samples
+
+
+def _ext_group(group: int) -> bool:
+    """True for rows of the per-collective / rail / domain emission tier.
+
+    The aggregate-tier 3c detectors skip these rows: the dedicated 3e rows
+    (collective_straggler, rail_congestion) own those signals, and the much
+    denser per-op cadence would otherwise poison the gap/spread baselines
+    the aggregate detectors learn from the legacy group-0 bursts.
+    """
+    return (group == COLL_GROUP_ALL_GATHER
+            or group == COLL_GROUP_REDUCE_SCATTER
+            or group >= RAIL_GROUP_BASE)
 
 
 @dataclass(frozen=True)
@@ -1253,6 +1275,8 @@ class TPStraggler(Detector):
 
     def update(self, ev: Event) -> None:
         self.events_seen += 1
+        if _ext_group(ev.group):
+            return
         members = self.members.setdefault(ev.group, set())
         members.add(ev.node)
         st = self.spread.get(ev.group)
@@ -1338,6 +1362,8 @@ class CrossNodeLoadSkew(Detector):
 
     def update(self, ev: Event) -> None:
         self.events_seen += 1
+        if _ext_group(ev.group):
+            return
         nodes = self.bytes.setdefault(ev.group, {})
         nodes[ev.node] = nodes.get(ev.node, 0.0) + ev.size
 
@@ -1385,6 +1411,8 @@ class NetworkCongestion(Detector):
             if ev.meta == self.FABRIC_QUEUE:
                 self.fabric_depth.update(float(ev.depth))
                 self.last_depth = ev.depth
+            return
+        if _ext_group(ev.group):
             return
         self.gap.setdefault(
             ev.node, GapTracker(track_p99=False)).update(ev.ts)
@@ -1863,6 +1891,334 @@ class HierarchicalRoutingSkew(Detector):
 
 
 # ======================================================================
+# Table 3(e) — per-collective / topology-tier runbook
+# ======================================================================
+
+
+class CollectiveStragglerLag(Detector):
+    """3e.1 — one node's per-op finish edge lags the group median.
+
+    Consumes only the per-collective finish rows (all-gather /
+    reduce-scatter tier, ``COLL_EDGE_FINISH``): each op round is buffered
+    until its round id rolls over, then the straggler lag is the worst
+    node's finish timestamp against the round median.  The aggregate
+    tp_straggler row (3c.1) sees one merged burst per round and is blind
+    to which *op* a rank is late into; this row is the per-op refinement.
+    """
+
+    name = "collective_straggler"
+    table = "3e"
+    stage = "compute (per-collective ops: all-gather / reduce-scatter)"
+    root_cause = ("one rank consistently late into its collectives "
+                  "(device slowdown, local contention)")
+    directive = "rebalance shards toward the lagging rank; check its feeds"
+    interested = frozenset({EventKind.COLLECTIVE_BURST})
+
+    PERSIST = 2          # consecutive qualifying polls before firing
+    MIN_LAG = 1e-4       # healthy finish jitter is ~2e-5; fault lag ~1.5e-3
+    MIN_ROUNDS = 24      # finalized op rounds before the row may fire
+    MIN_COUNTED = 12     # rounds with a measurable laggard
+    LATE_FRAC = 0.6      # one node must own this share of late rounds
+    CRIT_FRAC = 0.85
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        # per op-group open round: group -> (round id, node -> finish ts)
+        self.open: dict[int, tuple[int, dict[int, float]]] = {}
+        self.rounds = 0
+        self.late: dict[int, int] = {}
+        self.counted = 0
+        self.lag = EWMA(0.1)
+        self.streak = 0
+
+    def _finalize(self, fins: dict[int, float]) -> None:
+        self.rounds += 1
+        if len(fins) < 2:
+            return
+        ts = sorted(fins.values())
+        median = ts[len(ts) // 2]
+        worst = max(fins, key=fins.__getitem__)
+        lag = fins[worst] - median
+        self.lag.update(lag)
+        if lag > self.MIN_LAG:
+            self.late[worst] = self.late.get(worst, 0) + 1
+            self.counted += 1
+
+    def _ingest(self, group: int, rid: int, node: int, ts: float) -> None:
+        cur = self.open.get(group)
+        if cur is None or cur[0] != rid:
+            if cur is not None:
+                self._finalize(cur[1])
+            self.open[group] = (rid, {node: ts})
+        else:
+            cur[1][node] = ts
+
+    def update(self, ev: Event) -> None:
+        self.events_seen += 1
+        g = ev.group
+        if (g != COLL_GROUP_ALL_GATHER and g != COLL_GROUP_REDUCE_SCATTER) \
+                or ev.depth != COLL_EDGE_FINISH:
+            return
+        self._ingest(g, ev.meta, ev.node, ev.ts)   # meta carries the round
+
+    def update_batch(self, batch: EventBatch) -> None:
+        # single-kind safe: only COLLECTIVE_BURST arrives; rows keep wire
+        # order within the kind, so round rollovers finalize exactly like
+        # the scalar path
+        self.events_seen += len(batch)
+        m = (((batch.group == COLL_GROUP_ALL_GATHER)
+              | (batch.group == COLL_GROUP_REDUCE_SCATTER))
+             & (batch.depth == COLL_EDGE_FINISH))
+        if not m.any():
+            return
+        for g, rid, node, ts in zip(batch.group[m].tolist(),
+                                    batch.meta[m].tolist(),
+                                    batch.node[m].tolist(),
+                                    batch.ts[m].tolist()):
+            self._ingest(g, rid, node, ts)
+
+    def poll(self, now: float) -> list[Finding]:
+        if self.events_seen < self.cfg.min_events:
+            return []
+        worst, frac = -1, 0.0
+        if self.rounds >= self.MIN_ROUNDS and self.counted \
+                >= self.MIN_COUNTED:
+            worst = max(self.late, key=self.late.__getitem__)
+            frac = self.late[worst] / self.counted
+        qualifies = (worst >= 0 and frac > self.LATE_FRAC
+                     and self.lag.mean > self.MIN_LAG)
+        self.streak = self.streak + 1 if qualifies else 0
+        if self.streak < self.PERSIST:
+            return []
+        return [self._mk(
+            now, score=frac * 10, node=worst,
+            severity="critical" if frac > self.CRIT_FRAC else "warn",
+            late_frac=round(frac, 3), mean_finish_lag=self.lag.mean,
+            op_rounds=self.rounds)]
+
+
+class RailCongestion(Detector):
+    """3e.2 — cross-domain op slowdown concentrated on one shared rail.
+
+    Cross-domain collective legs ride per-rail groups
+    (``RAIL_GROUP_BASE + r``).  Per round, the mean finish time of each
+    rail's legs is compared against the fastest rail; a congested rail is
+    consistently the slow one by more than the healthy jitter floor.  One
+    slow *node* shifts only its own legs; a slow *rail* shifts every leg
+    that shares it — which is what separates this row from 3e.1/3c.1.
+    """
+
+    name = "rail_congestion"
+    table = "3e"
+    stage = "internode transfers (cross-domain rail tier)"
+    root_cause = ("oversubscribed / degraded rail shared by cross-domain "
+                  "collective legs")
+    directive = "reroute cross-domain legs off the hot rail; respread ranks"
+    interested = frozenset({EventKind.COLLECTIVE_BURST})
+
+    PERSIST = 2
+    MIN_LAG = 5e-5       # healthy inter-rail mean spread is ~1e-5
+    MIN_ROUNDS = 24
+    MIN_COUNTED = 12
+    DOM_FRAC = 0.65      # one rail must own this share of slow rounds
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        self.open_rid: int | None = None
+        self.acc: dict[int, tuple[float, int]] = {}   # rail -> (sum_ts, n)
+        self.rails: set[int] = set()
+        self.rounds = 0
+        self.late: dict[int, int] = {}
+        self.counted = 0
+        self.lag = EWMA(0.1)
+        self.streak = 0
+
+    def _finalize(self) -> None:
+        self.rounds += 1
+        if len(self.acc) >= 2:
+            means = {r: s / n for r, (s, n) in self.acc.items()}
+            fast = min(means.values())
+            slow = max(means, key=means.__getitem__)
+            lag = means[slow] - fast
+            self.lag.update(lag)
+            if lag > self.MIN_LAG:
+                self.late[slow] = self.late.get(slow, 0) + 1
+                self.counted += 1
+        self.acc = {}
+
+    def _ingest(self, rail: int, rid: int, ts: float) -> None:
+        if self.open_rid != rid:
+            if self.open_rid is not None:
+                self._finalize()
+            self.open_rid = rid
+        self.rails.add(rail)
+        cur = self.acc.get(rail)
+        self.acc[rail] = (ts, 1) if cur is None else (cur[0] + ts,
+                                                      cur[1] + 1)
+
+    def update(self, ev: Event) -> None:
+        self.events_seen += 1
+        g = ev.group
+        if g < RAIL_GROUP_BASE or g >= DOMAIN_GROUP_BASE:
+            return
+        self._ingest(g - RAIL_GROUP_BASE, ev.meta, ev.ts)
+
+    def update_batch(self, batch: EventBatch) -> None:
+        # single-kind safe (COLLECTIVE_BURST only); wire order preserved
+        self.events_seen += len(batch)
+        m = (batch.group >= RAIL_GROUP_BASE) & (batch.group
+                                                < DOMAIN_GROUP_BASE)
+        if not m.any():
+            return
+        for g, rid, ts in zip(batch.group[m].tolist(),
+                              batch.meta[m].tolist(),
+                              batch.ts[m].tolist()):
+            self._ingest(g - RAIL_GROUP_BASE, rid, ts)
+
+    def poll(self, now: float) -> list[Finding]:
+        if self.events_seen < self.cfg.min_events:
+            return []
+        hot, frac = -1, 0.0
+        if (len(self.rails) >= 2 and self.rounds >= self.MIN_ROUNDS
+                and self.counted >= self.MIN_COUNTED):
+            hot = max(self.late, key=self.late.__getitem__)
+            frac = self.late[hot] / self.counted
+        qualifies = (hot >= 0 and frac > self.DOM_FRAC
+                     and self.lag.mean > self.MIN_LAG)
+        self.streak = self.streak + 1 if qualifies else 0
+        if self.streak < self.PERSIST:
+            return []
+        return [self._mk(
+            now, score=frac * 10, node=-1,
+            severity="critical" if frac > 0.85 else "warn",
+            rail=hot, slow_frac=round(frac, 3),
+            mean_rail_lag=self.lag.mean, rail_rounds=self.rounds)]
+
+
+class HbmBandwidthCliff(Detector):
+    """3e.3 — decode token-rate sag with flat queues at peak batch size.
+
+    The memory-bandwidth cliff: past a batch-size knee the decode phase
+    turns bandwidth-bound and per-node egress token rate sags, while the
+    NIC-side ingress queues stay shallow — so every queue-keyed row stays
+    silent.  The DPU-visible signature is the *conjunction*: egress rate
+    well below its own learned peak, AND a flat ingress queue, AND the
+    scheduler's exported batch occupancy at its observed maximum.  Batch
+    occupancy at max is what attributes the sag to batch size rather than
+    to upstream starvation (starved nodes run *small* batches).
+    """
+
+    name = "hbm_bandwidth_cliff"
+    table = "3e"
+    stage = "decode (device memory bandwidth)"
+    root_cause = ("decode batch past the memory-bandwidth knee; token rate "
+                  "saturates while queues stay flat")
+    directive = "shrink the decode batch below the knee; re-spread slots"
+    interested = frozenset({EventKind.QUEUE_SAMPLE, EventKind.EGRESS_PKT})
+
+    PERSIST = 2
+    SAG = 0.7            # rate below this fraction of the learned peak
+    CRIT_SAG = 0.5
+    MIN_PEAK = 500.0     # egress events/s floor (quiet nodes never "sag")
+    FLAT_DEPTH = 10      # "flat queue" = ingress depth at/below this
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        self.rate: dict[int, RateMeter] = {}     # node -> egress event rate
+        self.peak: dict[int, float] = {}         # node -> peak rate seen
+        self.qdepth: dict[int, int] = {}         # node -> ingress depth
+        self.batch: dict[int, int] = {}          # node -> active batch size
+        self.bmax: dict[int, int] = {}           # node -> max batch seen
+        self.streak = 0
+
+    def update(self, ev: Event) -> None:
+        self.events_seen += 1
+        if ev.kind == EventKind.EGRESS_PKT:
+            m = self.rate.get(ev.node)
+            if m is None:
+                m = self.rate[ev.node] = RateMeter(halflife=0.1)
+            m.update(ev.ts, ev.size)
+        elif ev.meta == META_BATCH_OCC:
+            self.batch[ev.node] = ev.depth
+            if ev.depth > self.bmax.get(ev.node, 0):
+                self.bmax[ev.node] = ev.depth
+        elif ev.meta == META_DIR_INGRESS:
+            self.qdepth[ev.node] = ev.depth
+
+    def update_batch(self, batch: EventBatch) -> None:
+        # per-kind sub-batches: EGRESS_PKT and QUEUE_SAMPLE state are
+        # disjoint, and decisions only happen at poll(), so kind-partition
+        # delivery is order-safe
+        self.events_seen += len(batch)
+        kinds = batch.kind
+        eg = kinds == EventKind.EGRESS_PKT
+        if eg.any():
+            buckets: dict[int, tuple[list, list]] = {}
+            for n, ts, sz in zip(batch.node[eg].tolist(),
+                                 batch.ts[eg].tolist(),
+                                 batch.size[eg].tolist()):
+                b = buckets.get(n)
+                if b is None:
+                    buckets[n] = ([ts], [sz])
+                else:
+                    b[0].append(ts)
+                    b[1].append(sz)
+            rate = self.rate
+            for n, (tss, sizes) in buckets.items():
+                m = rate.get(n)
+                if m is None:
+                    m = rate[n] = RateMeter(halflife=0.1)
+                m.update_many(tss, sizes)
+        occ = ~eg & (batch.meta == META_BATCH_OCC)
+        if occ.any():
+            bat, bmax = self.batch, self.bmax
+            for n, d in zip(batch.node[occ].tolist(),
+                            batch.depth[occ].tolist()):
+                bat[n] = d
+                if d > bmax.get(n, 0):
+                    bmax[n] = d
+        ing = ~eg & (batch.meta == META_DIR_INGRESS)
+        if ing.any():
+            qd = self.qdepth
+            for n, d in zip(batch.node[ing].tolist(),
+                            batch.depth[ing].tolist()):
+                qd[n] = d
+
+    def poll(self, now: float) -> list[Finding]:
+        if self.events_seen < self.cfg.min_events or not self.batch:
+            # structural gate: no scheduler batch-occupancy tap exported
+            # means the attribution to batch size is inexpressible
+            return []
+        worst = None
+        for node, meter in self.rate.items():
+            r = meter.rate_at(now)
+            peak = self.peak.get(node, 0.0)
+            if r > peak:
+                self.peak[node] = peak = r
+            b = self.batch.get(node)
+            if b is None or peak < self.MIN_PEAK:
+                continue
+            sag = r / peak
+            depth = self.qdepth.get(node, 0)
+            # the cliff conjunction: sagging rate + flat queue + batch
+            # pinned at its observed max (a drained node fails the batch
+            # gate, a backlogged node fails the flat-queue gate)
+            if (sag < self.SAG and depth <= self.FLAT_DEPTH
+                    and b >= self.bmax.get(node, b) - 1):
+                if worst is None or sag < worst[0]:
+                    worst = (sag, node, b, depth)
+        self.streak = self.streak + 1 if worst is not None else 0
+        if self.streak < self.PERSIST:
+            return []
+        sag, node, b, depth = worst
+        return [self._mk(
+            now, score=(1.0 - sag) * 10, node=node,
+            severity="critical" if sag < self.CRIT_SAG else "warn",
+            rate_vs_peak=round(sag, 3), batch_size=b,
+            ingress_depth=depth)]
+
+
+# ======================================================================
 # DPU self-diagnosis — the telemetry plane watching itself
 # ======================================================================
 
@@ -1952,6 +2308,8 @@ ALL_DETECTORS: tuple[type[Detector], ...] = (
     KVCacheTransferBottleneck, EarlyStopSkewAcrossNodes,
     # 3(d)
     CrossReplicaSkew, HierarchicalRoutingSkew,
+    # 3(e)
+    CollectiveStragglerLag, RailCongestion, HbmBandwidthCliff,
     # DPU self-diagnosis
     DPUSaturation,
 )

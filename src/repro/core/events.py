@@ -78,6 +78,28 @@ class CollectiveOp(enum.IntEnum):
     PERMUTE = 4
 
 
+#: Group-id conventions for the per-collective emission tier.  The aggregate
+#: TP all-reduce keeps its legacy id (group 0); the split per-op phases and
+#: the rail/domain topology tier use dedicated ranges so consumers can
+#: separate the tiers without any new event kinds (the enum stays closed):
+#:
+#:   group 0                    — aggregate TP all-reduce (legacy rows)
+#:   COLL_GROUP_ALL_GATHER      — per-op all-gather rows
+#:   COLL_GROUP_REDUCE_SCATTER  — per-op reduce-scatter rows
+#:   RAIL_GROUP_BASE + r        — cross-domain traffic sharing rail ``r``
+#:   DOMAIN_GROUP_BASE + d      — intra-domain fast-tier bursts in domain ``d``
+#:
+#: Per-op rows use ``depth`` as the edge marker (COLL_EDGE_*): the start row
+#: carries the op's wire bytes in ``size``; the finish row is a zero-byte
+#: timing edge — both are wire-visible burst boundaries, not device state.
+COLL_GROUP_ALL_GATHER = 1
+COLL_GROUP_REDUCE_SCATTER = 2
+RAIL_GROUP_BASE = 200
+DOMAIN_GROUP_BASE = 300
+COLL_EDGE_START = 0
+COLL_EDGE_FINISH = 1
+
+
 @dataclass(frozen=True, slots=True)
 class Event:
     """One observation at the DPU vantage point.

@@ -14,6 +14,7 @@ TITLES = {
     "3b": "Table 3(b) — PCIe Observer Runbook",
     "3c": "Table 3(c) — East-West Sensing Runbook",
     "3d": "Table 3(d) — Data-Parallel Replica Runbook (extension)",
+    "3e": "Table 3(e) — Collective/Rail/Memory Runbook (extension)",
     "dpu": "Table (dpu) — DPU Self-Diagnosis Runbook (extension)",
 }
 

@@ -76,6 +76,10 @@ ACTIONS: dict[str, str] = {
     "throttle_telemetry": "raise the telemetry tap's sampling stride / shed "
                           "low-priority event classes so the DPU ingest "
                           "budget recovers",
+    "shrink_batch": "halve the decode batch-slot cap so the active batch "
+                    "drops back below the memory-bandwidth knee",
+    "reroute_rail": "spread cross-domain collective legs over all rails "
+                    "instead of their home rail (hot-rail bypass)",
 }
 
 # keep the two registries in lockstep: every runbook row must actuate

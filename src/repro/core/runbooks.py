@@ -22,7 +22,7 @@ from repro.core.detectors import Detector, DetectorConfig
 @dataclass(frozen=True)
 class RunbookEntry:
     row_id: str                 # stable id == Detector.name
-    table: str                  # "3a" | "3b" | "3c" | "3d"
+    table: str                  # "3a" | "3b" | "3c" | "3d" | "3e"
     title: str                  # paper's "Skew/Imbalance" column
     signal: str                 # paper's "Signal (Red Flag)" column
     stages: str                 # paper's "Lifecycle Stages Affected"
@@ -32,6 +32,11 @@ class RunbookEntry:
     detector_cls: type[Detector]
     action: str                 # mitigation-controller action key
     scenario: str               # sim fault-injection scenario name
+    #: rows that observe the same underlying pathology from another vantage
+    #: (e.g. decode early-stop seen PCIe-side vs egress-side).  A recovery
+    #: attributed to a sibling row counts as this row's recovery in the
+    #: control-loop gates — see ``row_hit``.
+    sibling_rows: tuple[str, ...] = ()
 
 
 RUNBOOK_3A: tuple[RunbookEntry, ...] = (
@@ -218,7 +223,11 @@ RUNBOOK_3B: tuple[RunbookEntry, ...] = (
         "Enable inflight request remapping/packing; speculative decode "
         "policies",
         D.DecodeEarlyStopSkew, action="inflight_remap",
-        scenario="decode_early_stop"),
+        scenario="decode_early_stop",
+        # the same early-stop pathology seen at the N-S vantage; whichever
+        # row confirms first drives the identical inflight_remap actuation,
+        # so recovery credited to the sibling is this row's recovery too
+        sibling_rows=("early_completion_skew",)),
 )
 
 RUNBOOK_3C: tuple[RunbookEntry, ...] = (
@@ -338,6 +347,51 @@ RUNBOOK_3D: tuple[RunbookEntry, ...] = (
         scenario="hierarchical_routing_skew"),
 )
 
+RUNBOOK_3E: tuple[RunbookEntry, ...] = (
+    RunbookEntry(
+        "collective_straggler", "3e",
+        "Per-collective straggler (op-level finish lag)",
+        "One node's per-op finish edge (all-gather / reduce-scatter) "
+        "trails the group median round after round",
+        "Compute (per-collective ops within the token step)",
+        "Every op in the lagging rank's groups stretches to its finish; "
+        "the aggregate round cadence hides which op pays",
+        "Device slowdown or local contention on one rank, visible only at "
+        "per-op granularity (the merged round burst averages it away)",
+        "Rebalance shards toward the lagging rank; verify its local feeds "
+        "and clocks",
+        D.CollectiveStragglerLag, action="rebalance_shards",
+        scenario="collective_straggler"),
+    RunbookEntry(
+        "rail_congestion", "3e",
+        "Rail congestion (cross-domain tier)",
+        "Cross-domain collective legs sharing one rail finish consistently "
+        "later than legs on sibling rails",
+        "Internode transfers (cross-domain rail tier)",
+        "Ops spanning NVLink-class domains serialize on the hot rail; "
+        "intra-domain traffic stays fast, so node-keyed rows stay quiet",
+        "Oversubscribed or degraded rail shared by all cross-domain legs "
+        "(DWDP-style rail-aligned topology)",
+        "Reroute cross-domain legs off the hot rail; respread ranks over "
+        "rails",
+        D.RailCongestion, action="reroute_rail",
+        scenario="rail_congestion"),
+    RunbookEntry(
+        "hbm_bandwidth_cliff", "3e",
+        "Memory-bandwidth cliff (decode batch knee)",
+        "Per-node egress token rate sags well below its own peak while "
+        "ingress queues stay flat and batch occupancy sits at max",
+        "Decode (device memory bandwidth)",
+        "Throughput sags cluster-wide with no queue growth anywhere — "
+        "every queue- and gap-keyed row stays silent",
+        "Decode batch size past the device's memory-bandwidth knee; token "
+        "rate saturates at the bandwidth ceiling",
+        "Shrink the decode batch below the knee; re-spread slots across "
+        "nodes",
+        D.HbmBandwidthCliff, action="shrink_batch",
+        scenario="hbm_bandwidth_cliff"),
+)
+
 RUNBOOK_DPU: tuple[RunbookEntry, ...] = (
     RunbookEntry(
         "dpu_saturation", "dpu", "DPU telemetry-plane saturation",
@@ -355,17 +409,31 @@ RUNBOOK_DPU: tuple[RunbookEntry, ...] = (
 )
 
 #: every table the full DPU agent runs (the paper's three runbooks, the
-#: 3d data-parallel extension, and the plane's self-diagnosis row)
-DEFAULT_TABLES: tuple[str, ...] = ("3a", "3b", "3c", "3d", "dpu")
+#: 3d data-parallel extension, the 3e per-collective/topology tier, and
+#: the plane's self-diagnosis row)
+DEFAULT_TABLES: tuple[str, ...] = ("3a", "3b", "3c", "3d", "3e", "dpu")
 
 ALL_RUNBOOKS: tuple[RunbookEntry, ...] = (
-    RUNBOOK_3A + RUNBOOK_3B + RUNBOOK_3C + RUNBOOK_3D + RUNBOOK_DPU)
+    RUNBOOK_3A + RUNBOOK_3B + RUNBOOK_3C + RUNBOOK_3D + RUNBOOK_3E
+    + RUNBOOK_DPU)
 
 BY_ID: dict[str, RunbookEntry] = {e.row_id: e for e in ALL_RUNBOOKS}
 BY_TABLE: dict[str, tuple[RunbookEntry, ...]] = {
     "3a": RUNBOOK_3A, "3b": RUNBOOK_3B, "3c": RUNBOOK_3C, "3d": RUNBOOK_3D,
-    "dpu": RUNBOOK_DPU,
+    "3e": RUNBOOK_3E, "dpu": RUNBOOK_DPU,
 }
+
+
+def row_hit(row_id: str, fired: set[str]) -> bool:
+    """Did this row's pathology get caught — by the row itself or by one of
+    its declared ``sibling_rows``?  The control-loop gates use this: when
+    two rows watch one pathology from different vantages, whichever
+    confirms first drives the (shared) actuation, and demanding the
+    canonical row's own name would fail a loop that in fact recovered."""
+    if row_id in fired:
+        return True
+    entry = BY_ID.get(row_id)
+    return entry is not None and bool(set(entry.sibling_rows) & fired)
 
 
 def build_detectors(cfg: DetectorConfig | None = None,

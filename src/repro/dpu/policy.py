@@ -55,9 +55,10 @@ from repro.core.runbooks import BY_ID
 CONFLICT_GROUPS: dict[str, str] = {}
 for _group, _members in (
     ("admission", ("smooth_admission", "admission_control",
-                   "widen_batch_window")),
+                   "widen_batch_window", "shrink_batch")),
     ("routing", ("rebalance_frontend", "rebalance_replicas",
-                 "rebalance_nodes", "reroute_traffic", "qos_partition")),
+                 "rebalance_nodes", "reroute_traffic", "qos_partition",
+                 "reroute_rail")),
     ("placement", ("rebalance_shards", "repartition_stages",
                    "rebalance_microbatches", "inflight_remap")),
     ("transport", ("tune_transport", "widen_rdma_window",

@@ -41,6 +41,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.detectors import (
+    META_BATCH_OCC,
     META_DIR_EGRESS,
     META_DIR_EW,
     META_DIR_INGRESS,
@@ -51,7 +52,17 @@ from repro.core.detectors import (
     META_P2P_KV,
     META_TAP_DEBUG,
 )
-from repro.core.events import CollectiveOp, EventBatchBuilder, EventKind
+from repro.core.events import (
+    COLL_EDGE_FINISH,
+    COLL_EDGE_START,
+    COLL_GROUP_ALL_GATHER,
+    COLL_GROUP_REDUCE_SCATTER,
+    DOMAIN_GROUP_BASE,
+    RAIL_GROUP_BASE,
+    CollectiveOp,
+    EventBatchBuilder,
+    EventKind,
+)
 from repro.core.runbooks import DEFAULT_TABLES
 from repro.core.telemetry import TelemetryPlane
 from repro.dpu.sidecar import DPUParams, DPUSidecar
@@ -124,6 +135,26 @@ class SimParams:
     prefix_cache_sessions: int = 8   # per-node LRU capacity (sessions)
     prefill_tok_s: float = 5e-5      # prefill cost per prompt token (s)
     prefix_frac: float = 0.8         # prompt share a prefix hit skips
+    # --- per-collective emission tier (Table 3e) ---
+    # When enabled, the aggregate TP burst (group 0) is joined by explicit
+    # all-gather / reduce-scatter ops, each rendered as per-node start and
+    # finish edges so per-op skew is a first-class observable.  Off by
+    # default so the canonical scenarios are untouched; all randomness for
+    # the tier comes from a dedicated stream (``seed ^ 0xCA11``).
+    per_collective: bool = False
+    coll_ag_bytes: int = 1 << 20     # all-gather wire bytes per node per op
+    coll_rs_bytes: int = 1 << 20     # reduce-scatter wire bytes (every 2nd)
+    # --- rail / NVLink-domain topology tier (DWDP-style) ---
+    # Nodes per fast intra-domain tier; 0 disables the tier entirely.
+    # Cross-domain legs ride a shared rail (``node % rail_count``), which
+    # makes rail congestion a fault axis distinct from any single node.
+    rail_domain_size: int = 0
+    rail_count: int = 2
+    # --- memory-bandwidth saturation knee (decode phase) ---
+    # Active decode batch size past which a node's token rate saturates:
+    # the node completes only a ``knee / batch`` duty cycle of egress
+    # rounds (throughput cliff with flat queues).  0 disables the model.
+    hbm_knee: int = 0
 
 
 @dataclass
@@ -181,6 +212,12 @@ class FaultSpec:
     # affinity bug) — replica totals stay balanced while nodes inside
     # every replica skew, the hierarchical_routing_skew signature
     intra_replica_pin_frac: float = 0.0
+    # --- per-collective / rail / memory-knee tier (Table 3e) ---
+    collective_lag_node: int = -1      # node whose per-op finishes lag
+    collective_lag: float = 0.0        # added per-op finish delay (s)
+    rail_cut: int = -1                 # rail whose bandwidth is cut
+    rail_cut_mult: float = 1.0         # cross-domain leg slowdown on it
+    hbm_knee_shift: int = 0            # knee shrinks to this while active
     # --- workload shaping ---
     early_stop_skew: bool = False      # extreme decode-length divergence
     # --- telemetry-plane load (DPU self-diagnosis) ---
@@ -390,6 +427,14 @@ class ClusterSim:
         self._t = 0.0                  # current round's host-clock time
         self._flood = self.fault.telemetry_flood > 0
         self._flood_tmpl: tuple | None = None
+        # --- per-collective / rail / memory-knee tier (Table 3e) ---
+        # dedicated stream: enabling the tier must never perturb the legacy
+        # synthesis draws (the canonical golden fixtures are bit-identical
+        # whether or not these knobs exist)
+        self.rng_coll = np.random.default_rng(params.seed ^ 0xCA11)
+        self._slot_cap = params.slots_per_node   # shrink_batch actuation
+        self._rail_reroute = False               # reroute_rail actuation
+        self._hbm_credit = [0.0] * n_nodes       # duty-cycle accumulator
 
     # ------------------------------------------------------------------
     # EngineControls
@@ -418,6 +463,16 @@ class ClusterSim:
             return True
         if action == "rebalance_nodes":
             self._rebalance_nodes()
+            return True
+        if action == "shrink_batch":
+            # halve the decode batch-slot cap: the active batch drains back
+            # below the memory-bandwidth knee as sequences complete
+            self._slot_cap = max(1, self._slot_cap // 2)
+            return True
+        if action == "reroute_rail":
+            # hot-rail bypass: cross-domain legs round-robin over all rails
+            # instead of riding their home rail
+            self._rail_reroute = True
             return True
         return matched
 
@@ -842,6 +897,15 @@ class ClusterSim:
         self._emit_cols((t, n * rows), EventKind.QUEUE_SAMPLE,
                         node=node_c, depth=depth_c.ravel(),
                         meta=meta_c, replica=rep_c)
+        if p.hbm_knee > 0:
+            # scheduler-exported active batch occupancy per node — the
+            # NIC-side tap the memory-knee detector correlates with the
+            # token-rate sag (same vantage as the queue samples above)
+            self._emit_cols((t, n), EventKind.QUEUE_SAMPLE,
+                            node=self._all_nodes,
+                            depth=np.asarray(
+                                [len(a) for a in self.active], np.int64),
+                            meta=META_BATCH_OCC)
         self._refresh_router(t)
 
     def _refresh_router(self, t: float) -> None:
@@ -987,6 +1051,14 @@ class ClusterSim:
                 coll_disp.append(disp[nd])
         self._collective_phase(t, coll_nodes, coll_disp)
 
+        # ---- per-collective tier: explicit AG / RS ops (Table 3e) ----
+        if p.per_collective:
+            self._per_collective_phase(t, coll_nodes, coll_disp)
+
+        # ---- rail / NVLink-domain tier (cross-domain legs share rails) ----
+        if p.rail_domain_size > 0:
+            self._rail_phase(t, coll_nodes)
+
         # ---- PP stage handoff (nodes pair up across stages) ----
         self._pp_phase(t, normal)
 
@@ -994,7 +1066,9 @@ class ClusterSim:
         self._p2p_intra_phase(t, normal)
 
         # ---- D2H returns + egress ----
-        self._d2h_egress_phase(t, normal, stop_on)
+        eg_nodes = self._hbm_gate(t, normal) if p.hbm_knee > 0 else normal
+        if eg_nodes:
+            self._d2h_egress_phase(t, eg_nodes, stop_on)
 
         # ---- KV transfers ----
         self._kv_phase(t, normal)
@@ -1008,7 +1082,8 @@ class ClusterSim:
             return
         added: list[Request] = []
         pfx = self._pfx is not None
-        while len(act) < p.slots_per_node and q:
+        cap = min(p.slots_per_node, self._slot_cap)
+        while len(act) < cap and q:
             if pfx and self._pfx_busy[node] > t:
                 break   # the node's prefill unit is still chewing
             r = q.popleft()
@@ -1315,6 +1390,122 @@ class ClusterSim:
         self._emit_cols(arrive, EventKind.COLLECTIVE_BURST, node=node_a,
                         size=nbytes, op=int(CollectiveOp.ALL_REDUCE),
                         group=0, meta=self.round)
+
+    def _per_collective_phase(self, t: float, nodes: list[int],
+                              disp_ts: list[float]) -> None:
+        """Per-collective emission tier (Table 3e).
+
+        The aggregate TP burst (group 0) stays untouched; on top of it the
+        round runs explicit all-gather (every round) and reduce-scatter
+        (every 2nd round) ops, each rendered as a per-node *start* edge
+        carrying the op's wire bytes plus a zero-byte *finish* edge whose
+        timestamp is the node's actual completion.  Per-op start/finish
+        skew is thereby a first-class DPU observable: one node's finishes
+        drifting late against the group median is the
+        ``collective_straggler`` signature.  All jitter draws come from
+        the tier's dedicated stream (``rng_coll``) so the legacy RNG
+        sequence — and the canonical golden fixtures — never move.
+        """
+        p, f = self.p, self.fault
+        k = len(nodes)
+        if k == 0:
+            return
+        node_a = np.asarray(nodes, np.int64)
+        rid = self.round
+        lag_on = (f.active(t) and f.collective_lag_node >= 0
+                  and f.collective_lag > 0)
+        ops = [(COLL_GROUP_ALL_GATHER, int(CollectiveOp.ALL_GATHER),
+                p.coll_ag_bytes, 0.50)]
+        if rid % 2 == 0:
+            ops.append((COLL_GROUP_REDUCE_SCATTER,
+                        int(CollectiveOp.REDUCE_SCATTER),
+                        p.coll_rs_bytes, 0.62))
+        disp_a = np.asarray(disp_ts, np.float64)
+        for group, op, nbytes, frac in ops:
+            start = (disp_a + frac * p.decode_step
+                     + self.rng_coll.random(k) * 2e-5)
+            fin = start + 1.2e-4 + self.rng_coll.random(k) * 4e-5
+            if lag_on:
+                fin = fin + np.where(node_a == f.collective_lag_node,
+                                     f.collective_lag, 0.0)
+            self._emit_cols(start, EventKind.COLLECTIVE_BURST, node=node_a,
+                            size=nbytes, depth=COLL_EDGE_START, op=op,
+                            group=group, meta=rid)
+            self._emit_cols(fin, EventKind.COLLECTIVE_BURST, node=node_a,
+                            size=0, depth=COLL_EDGE_FINISH, op=op,
+                            group=group, meta=rid)
+
+    def _rail_phase(self, t: float, nodes: list[int]) -> None:
+        """Rail / NVLink-domain topology tier (DWDP-style, Table 3e).
+
+        Nodes inside one domain (``node // rail_domain_size``) exchange
+        over a fast intra-domain tier; each node's cross-domain leg rides
+        its home rail (``node % rail_count``).  A rail is a *shared*
+        resource: cutting its bandwidth slows every cross-domain leg on
+        it, so the DPU sees one rail's finish timestamps drifting late
+        versus its peers — congestion with no per-node signature, the
+        ``rail_congestion`` fault axis.  The ``reroute_rail`` actuation
+        round-robins legs over all rails (hot-rail bypass).
+        """
+        p, f = self.p, self.fault
+        k = len(nodes)
+        if k == 0:
+            return
+        node_a = np.asarray(nodes, np.int64)
+        rid = self.round
+        base = t + 0.55 * p.decode_step
+        # intra-domain tier: near-instant, one finish row per node
+        dom_a = node_a // p.rail_domain_size
+        ts_dom = base + 2e-5 + self.rng_coll.random(k) * 1e-5
+        self._emit_cols(ts_dom, EventKind.COLLECTIVE_BURST, node=node_a,
+                        size=p.p2p_intra_bytes, depth=COLL_EDGE_FINISH,
+                        op=int(CollectiveOp.ALL_REDUCE),
+                        group=DOMAIN_GROUP_BASE + dom_a, meta=rid)
+        # cross-domain legs over the (shared) rails
+        nrail = max(p.rail_count, 1)
+        if self._rail_reroute:
+            rail_a = (node_a + rid) % nrail
+        else:
+            rail_a = node_a % nrail
+        leg = 2e-4 + self.rng_coll.random(k) * 2e-5
+        if f.active(t) and f.rail_cut >= 0 and f.rail_cut_mult > 1.0:
+            leg = np.where(rail_a == f.rail_cut,
+                           leg * f.rail_cut_mult, leg)
+        self._emit_cols(base + leg, EventKind.COLLECTIVE_BURST,
+                        node=node_a, size=p.collective_bytes // 4,
+                        depth=COLL_EDGE_FINISH,
+                        op=int(CollectiveOp.ALL_TO_ALL),
+                        group=RAIL_GROUP_BASE + rail_a, meta=rid)
+
+    def _hbm_gate(self, t: float, normal: list[int]) -> list[int]:
+        """Memory-bandwidth saturation knee (Table 3e).
+
+        Past the batch-size knee the per-token weight/KV streaming no
+        longer hides behind compute, so a node's decode rounds stop
+        fitting in the step: it completes (and egresses) only a
+        ``knee / batch`` duty cycle of rounds, via a deterministic credit
+        accumulator.  Token rate saturates at ``knee / decode_step``
+        while the request queues stay flat — the latency cliff with no
+        queueing signature that ``hbm_bandwidth_cliff`` keys on.
+        """
+        p, f = self.p, self.fault
+        knee = p.hbm_knee
+        if f.active(t) and f.hbm_knee_shift > 0:
+            knee = f.hbm_knee_shift
+        out = []
+        credit = self._hbm_credit
+        for nd in normal:
+            b = len(self.active[nd])
+            if b <= knee:
+                out.append(nd)
+                continue
+            c = credit[nd] + knee / b
+            if c >= 1.0:
+                credit[nd] = c - 1.0
+                out.append(nd)
+            else:
+                credit[nd] = c
+        return out
 
     def _pp_phase(self, t: float, normal: list[int]) -> None:
         p, f = self.p, self.fault

@@ -186,6 +186,27 @@ def make_scenarios() -> dict[str, Scenario]:
         params=_pm(duration=3.0, n_replicas=4,
                    router_policy="round_robin"))
 
+    # ------- Table 3(e): collectives / rails / memory knee --------------
+    # one node's per-op (AG/RS) finish edges lag the group median on every
+    # op round — invisible in the aggregate TP burst, which stays on time
+    add("collective_straggler", "collective_straggler",
+        FaultSpec(collective_lag_node=1, collective_lag=1.5e-3),
+        params=_pm(per_collective=True))
+    # one rail's bandwidth is cut: every cross-domain leg riding it slows
+    # 6x, whichever node it came from — congestion with no per-node locus
+    add("rail_congestion", "rail_congestion",
+        FaultSpec(rail_cut=1, rail_cut_mult=6.0),
+        params=_pm(rail_domain_size=2))
+    # the effective memory-bandwidth knee collapses under the steady batch:
+    # token rate saturates (deep sag vs the pre-fault peak) while request
+    # queues stay flat — the latency cliff with no queueing signature.
+    # Long decodes keep the queue drift under the detector's flat-queue
+    # ceiling across the fault window.
+    add("hbm_bandwidth_cliff", "hbm_bandwidth_cliff",
+        FaultSpec(hbm_knee_shift=2),
+        workload=_wl(rate=32.0, decode_mean=384),
+        params=_pm(hbm_knee=12))
+
     # ---------------- DPU control plane ----------------
     # The sidecar's own pathologies: these run with ``control="dpu"`` so the
     # registry test and the golden fixtures exercise the asynchronous loop.

@@ -36,9 +36,11 @@ CHEAP_TABLES = ["table2_signals", "telemetry_perf", "table3d", "router",
 
 # control_loop smoke grid: one scenario only the DPU path can recover
 # (d2h_bottleneck: per-node hysteresis can never confirm its one-shot
-# findings), one both paths recover (early_completion), one healthy
-# baseline for the zero-false-positive-actions property
-CONTROL_LOOP_SMOKE = "early_completion,d2h_bottleneck,healthy"
+# findings), one both paths recover (early_completion), one whose fault
+# is claimed first by a declared sibling row (decode_early_stop ->
+# early_completion_skew; exercises the row_hit sibling gate), one
+# healthy baseline for the zero-false-positive-actions property
+CONTROL_LOOP_SMOKE = "early_completion,d2h_bottleneck,decode_early_stop,healthy"
 
 
 def _run_only(only: str) -> str:
@@ -133,6 +135,11 @@ def test_control_loop_dpu_recovers_and_pays_measured_latency():
     # per-cell spot checks behind the summary flags
     assert rows["d2h_bottleneck/instant"]["recovered"] == "0"
     assert rows["d2h_bottleneck/dpu"]["recovered"] == "1"
+    # sibling-gate regression: the early_completion_skew sibling claims
+    # this fault first, yet the cell still counts as hit + recovered
+    # (before row_hit this was the registry's one standing gate failure)
+    assert rows["decode_early_stop/dpu"]["hit"] == "1"
+    assert rows["decode_early_stop/dpu"]["recovered"] == "1"
     assert (float(rows["early_completion/dpu"]["t_recover_s"])
             > float(rows["early_completion/instant"]["t_recover_s"]) > 0)
     assert rows["healthy/dpu"]["actions"] == "0"

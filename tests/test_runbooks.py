@@ -27,20 +27,22 @@ from repro.sim import SCENARIOS, run_scenario
 
 
 class TestRegistry:
-    def test_31_rows(self):
+    def test_34_rows(self):
         # the paper's 28 rows (3a/3b/3c) + the DP-routing extensions (3d:
         # cross-replica + intra-replica hierarchical) + the DPU
-        # self-diagnosis row (dpu)
-        assert len(ALL_RUNBOOKS) == 31
+        # self-diagnosis row (dpu) + the collective/rail/memory tier (3e:
+        # per-collective straggler, rail congestion, HBM-bandwidth cliff)
+        assert len(ALL_RUNBOOKS) == 34
         assert len(BY_TABLE["3a"]) == 9
         assert len(BY_TABLE["3b"]) == 10
         assert len(BY_TABLE["3c"]) == 9
         assert len(BY_TABLE["3d"]) == 2
+        assert len(BY_TABLE["3e"]) == 3
         assert len(BY_TABLE["dpu"]) == 1
 
     def test_one_detector_per_row(self):
         dets = build_detectors()
-        assert len(dets) == 31
+        assert len(dets) == 34
         for entry in ALL_RUNBOOKS:
             assert entry.row_id in dets
             assert dets[entry.row_id].name == entry.row_id
@@ -56,7 +58,28 @@ class TestRegistry:
             assert entry.action in ACTIONS, entry.row_id
 
     def test_detector_count_matches(self):
-        assert len(ALL_DETECTORS) == 31
+        assert len(ALL_DETECTORS) == 34
+
+    def test_sibling_rows_are_real_rows(self):
+        from repro.core.runbooks import BY_ID
+        for entry in ALL_RUNBOOKS:
+            for sib in entry.sibling_rows:
+                assert sib in BY_ID, f"{entry.row_id} -> {sib}"
+                assert sib != entry.row_id
+
+    def test_row_hit_accepts_declared_siblings_only(self):
+        from repro.core.runbooks import row_hit
+        # direct hit
+        assert row_hit("tp_straggler", {"tp_straggler"})
+        assert not row_hit("tp_straggler", {"early_completion_skew"})
+        # the early-completion pair: the 3(a) skew row may legitimately
+        # claim the decode_early_stop fault first (same physical signature)
+        assert row_hit("decode_early_stop_skew", {"early_completion_skew"})
+        # but not the reverse unless declared
+        from repro.core.runbooks import BY_ID
+        if not BY_ID["early_completion_skew"].sibling_rows:
+            assert not row_hit("early_completion_skew",
+                               {"decode_early_stop_skew"})
 
     def test_every_runbook_action_is_registered(self):
         # the import-time assertion in core.mitigation enforces this too;
@@ -107,6 +130,42 @@ class TestPerRowDetection:
         sc = SCENARIOS[name]
         metrics, plane, sim = run_scenario(sc.fault, sc.params, sc.workload)
         assert {f.name for f in plane.findings} == set()
+
+
+class TestNeverFalseFire:
+    """The 3(e) harness: every new row can fire (TestPerRowDetection covers
+    that side) and never false-fires — silent on every healthy baseline,
+    silent when the new emission tiers are switched on without a fault, and
+    each new scenario trips only its own row among the new three."""
+
+    NEW_ROWS = ("collective_straggler", "rail_congestion",
+                "hbm_bandwidth_cliff")
+
+    @pytest.mark.parametrize("name", ["healthy", "healthy_replicated"])
+    def test_silent_on_baselines(self, name):
+        sc = SCENARIOS[name]
+        _, plane, _ = run_scenario(sc.fault, sc.params, sc.workload)
+        assert not {f.name for f in plane.findings} & set(self.NEW_ROWS)
+
+    def test_silent_with_emission_tiers_on(self):
+        # healthy cluster, but every new telemetry tier enabled: the
+        # per-collective rounds, the rail/NVLink-domain legs, and the HBM
+        # knee (set above the healthy operating point)
+        import dataclasses
+        sc = SCENARIOS["healthy"]
+        params = dataclasses.replace(sc.params, per_collective=True,
+                                     rail_domain_size=2, hbm_knee=12)
+        _, plane, _ = run_scenario(sc.fault, params, sc.workload)
+        assert {f.name for f in plane.findings} == set()
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("name", NEW_ROWS)
+    def test_new_scenarios_fire_only_their_row(self, name):
+        sc = SCENARIOS[name]
+        _, plane, _ = run_scenario(sc.fault, sc.params, sc.workload)
+        fired = {f.name for f in plane.findings}
+        assert sc.row_id in fired
+        assert fired & set(self.NEW_ROWS) == {sc.row_id}
 
 
 class TestAttribution:

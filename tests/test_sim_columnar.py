@@ -80,6 +80,23 @@ class TestSynthesisParity:
         bs, _ = _run("flow_skew", scalar=True, scale=4)
         _assert_traces_equal(bv, bs, "flow_skew@x4")
 
+    @pytest.mark.parametrize("name", ["collective_straggler",
+                                      "rail_congestion",
+                                      "hbm_bandwidth_cliff"])
+    def test_traces_bit_identical_for_3e_tiers(self, name):
+        # the per-collective, rail-leg, and HBM-gated egress phases all
+        # stage through the same deferred-columns path — parity must hold
+        # with the new emission tiers switched on
+        bv, _ = _run(name, scalar=False)
+        bs, _ = _run(name, scalar=True)
+        _assert_traces_equal(bv, bs, name)
+
+    @pytest.mark.parametrize("flush", [257, 65536])
+    def test_3e_parity_is_cadence_independent(self, flush):
+        bv, _ = _run("collective_straggler", scalar=False, flush=flush)
+        bs, _ = _run("collective_straggler", scalar=True, flush=flush)
+        _assert_traces_equal(bv, bs, f"collective_straggler@{flush}")
+
     @given(st.integers(0, 10_000), st.integers(2, 4))
     @settings(max_examples=5, deadline=None)
     def test_parity_on_random_small_workloads(self, seed, n_nodes):
@@ -94,6 +111,27 @@ class TestSynthesisParity:
                        wl, None, plane=rec).run()
             traces.append(rec.batches)
         _assert_traces_equal(*traces, ctx=f"seed={seed},n={n_nodes}")
+
+    @given(st.integers(0, 10_000), st.integers(2, 4),
+           st.sampled_from([1, 257, 4096]))
+    @settings(max_examples=5, deadline=None)
+    def test_parity_with_3e_tiers_on_random_workloads(self, seed, n_nodes,
+                                                      flush):
+        # property form for the new tiers: arbitrary (seed, topology,
+        # flush cadence) with per-collective rounds, rail legs, and the
+        # HBM knee all enabled keeps the two paths bit-identical
+        params = SimParams(n_nodes=n_nodes, duration=0.3, seed=seed,
+                           flush_events=flush, per_collective=True,
+                           rail_domain_size=2, hbm_knee=6)
+        wl = WorkloadSpec(rate=150.0, duration=0.29, seed=seed)
+        traces = []
+        for scalar in (False, True):
+            rec = EventTraceRecorder()
+            ClusterSim(dataclasses.replace(params, scalar_synth=scalar),
+                       wl, None, plane=rec).run()
+            traces.append(rec.batches)
+        _assert_traces_equal(
+            *traces, ctx=f"3e:seed={seed},n={n_nodes},flush={flush}")
 
 
 @pytest.mark.slow
