@@ -650,6 +650,117 @@ def collective(seed: int = 0) -> list[tuple]:
     return rows
 
 
+def chaos(seed: int = 0) -> list[tuple]:
+    """Monitoring-plane chaos lane: the watcher itself under fire.
+
+    Part A (false-actuation gate): five chaos schedules — uplink
+    blackout, DPU crash/restart, uplink corruption, frame duplication,
+    command-downlink partition — run against the HEALTHY workload under
+    the full supervision stack (sidecar with liveness pings and batch
+    checksums, host-side watchdog over the OOB port).  The plane may heal
+    itself (``mon``-table actions: ``resync_telemetry`` /
+    ``failover_controller``) but must never invent a cluster pathology:
+    zero non-mon findings, zero non-mon actions, and no failover except
+    under the schedules that actually kill the DPU or its command
+    channel.
+
+    Part B (bounded-recovery gate): every registry fault scenario re-runs
+    in dpu mode with the watchdog attached and a DPU crash injected in
+    its detection window (crash at ``fault.start + 0.2``, warm restart
+    0.4 s later), with 2 s of duration headroom over the canonical run
+    (quorum rows re-seed their escalation dwell at the failback handover,
+    so recovery can land a full dwell after the canonical time).
+    The gate: every scenario still detects its row and still recovers —
+    losing the monitoring plane mid-incident delays mitigation but never
+    loses it.
+    """
+    from repro.core.runbooks import BY_TABLE, row_hit
+    from repro.dpu import DPUParams, WatchdogParams
+    from repro.sim import SCENARIOS, run_scenario
+
+    mon_rows = {e.row_id for e in BY_TABLE["mon"]}
+    mon_actions = {e.action for e in BY_TABLE["mon"]}
+    rows = []
+    bad = []
+
+    # -- part A: chaos on a healthy cluster must never actuate -------------
+    schedules = {
+        "blackout": dict(uplink_blackout_start=1.0, uplink_blackout_s=0.3),
+        "crash_restart": dict(dpu_crash_at=1.0, dpu_restart_after=0.5),
+        "corruption": dict(uplink_corrupt_p=0.05),
+        "duplication": dict(uplink_duplicate_p=0.05),
+        "partition": dict(downlink_partition_start=1.0,
+                          downlink_partition_s=0.7),
+    }
+    # only schedules that kill the DPU or its command channel may trip the
+    # watchdog; an uplink-side blackout/corruption must not
+    may_failover = {"crash_restart", "partition"}
+    base = SCENARIOS["healthy"].variant(seed=seed)
+    for name, knobs in schedules.items():
+        fault = dataclasses.replace(base.fault, **knobs)
+        params = dataclasses.replace(
+            base.params, duration=3.0, control="dpu",
+            dpu=DPUParams(ping_every=0.02), watchdog=WatchdogParams())
+        t0 = time.perf_counter()
+        m, plane, _sim = run_scenario(fault, params, base.workload,
+                                      mitigate=True)
+        wall = (time.perf_counter() - t0) * 1e6
+        false_findings = sorted({f.name for f in plane.findings} - mon_rows)
+        false_acts = [r for r in plane.actions if r.action not in mon_actions]
+        mon_acts = [r for r in plane.actions if r.action in mon_actions]
+        spurious = name not in may_failover and plane.failovers > 0
+        guard = plane.sidecar.guard
+        rows.append((
+            f"chaos/{name}/healthy", wall,
+            f"false_findings={len(false_findings)};"
+            f"false_actions={len(false_acts)};"
+            f"mon_actions={len(mon_acts)};"
+            f"failovers={plane.failovers};"
+            f"failbacks={plane.failbacks};"
+            f"gaps={guard.gaps};replays={guard.replays};"
+            f"corrupt={guard.corrupt};"
+            f"tokens_out={m.tokens_out}"))
+        if false_findings or false_acts or spurious:
+            bad.append(f"A:{name}:{false_findings or [r.action for r in false_acts] or 'failover'}")
+
+    # -- part B: every fault scenario survives a mid-incident DPU crash ----
+    faulted = [n for n, sc in SCENARIOS.items() if sc.row_id]
+    for name in faulted:
+        sc = SCENARIOS[name].variant(seed=seed)
+        fault = dataclasses.replace(sc.fault,
+                                    dpu_crash_at=sc.fault.start + 0.2,
+                                    dpu_restart_after=0.4)
+        params = dataclasses.replace(
+            sc.params, duration=sc.params.duration + 2.0, control="dpu",
+            watchdog=WatchdogParams())
+        t0 = time.perf_counter()
+        m, plane, sim = run_scenario(fault, params, sc.workload,
+                                     mitigate=True)
+        wall = (time.perf_counter() - t0) * 1e6
+        fired = {f.name for f in plane.findings}
+        hit = row_hit(sc.row_id, fired)
+        start = sc.fault.start
+        ttm = (m.mitigated_ts - start if m.mitigated_ts >= 0
+               else float("nan"))
+        rows.append((
+            f"chaos/midcrash/{name}", wall,
+            f"hit={int(hit)};"
+            f"t_recover_s={ttm:.3f};"
+            f"recovered={int(sim.fault.mitigated)};"
+            f"restarts={plane.sidecar.restarts};"
+            f"failovers={plane.failovers};"
+            f"actions={len(plane.actions)}"))
+        if not (hit and sim.fault.mitigated):
+            bad.append(f"B:{name}")
+    rows.append(("chaos/summary", 0.0,
+                 f"schedules={len(schedules)};"
+                 f"midcrash_scenarios={len(faulted)};"
+                 f"gate_ok={int(not bad)}"))
+    if bad:
+        raise AssertionError(f"chaos lane acceptance failed: {bad}")
+    return rows
+
+
 def serving_engine() -> list[tuple]:
     """Live-engine throughput: continuous vs static batching (the paper's
     early-completion pathology on the real JAX engine)."""
@@ -745,6 +856,6 @@ def roofline_readout() -> list[tuple]:
 ALL_TABLES = [
     table1_archzoo, table2_signals, telemetry_perf, sim_perf, table3a,
     table3b, table3c, table3d, table3e, router_policies, mitigation_loop,
-    control_loop, collective, serving_engine, kernels_bench,
+    control_loop, collective, chaos, serving_engine, kernels_bench,
     roofline_readout,
 ]

@@ -77,6 +77,10 @@ DIRECT_LOCUS: dict[str, str] = {
     "hbm_bandwidth_cliff": LOCUS_DEVICE,
     # DPU self-diagnosis
     "dpu_saturation": LOCUS_DPU,
+    # monitoring-plane robustness (mon)
+    "dpu_outage": LOCUS_DPU,
+    "telemetry_blackout": LOCUS_DPU,
+    "command_partition": LOCUS_DPU,
 }
 
 
@@ -341,6 +345,45 @@ class Attributor:
                     f"{f.evidence.get('shed_rows', 0)} rows shed): the "
                     "telemetry plane is degraded; concurrent findings may "
                     "be late or missing — shed load at the tap."))
+
+        # Rule 7: monitoring-plane failures self-attribute like Rule 6 —
+        # the signal sources (watchdog probes, ingest-guard latch, bus
+        # exhaustion counters) exist only on the monitoring path, so no
+        # cross-vantage correlation can sharpen or overturn them.  They
+        # also taint everything else this window: findings spanning the
+        # blind interval ride stale baselines.
+        if f.name == "dpu_outage":
+            return Attribution(
+                f.ts, LOCUS_DPU, node=-1, confidence=0.9, primary=f,
+                supporting=(),
+                narrative=(
+                    "DPU heartbeats silent for "
+                    f"{f.evidence.get('silence_ms', '?')} ms across "
+                    f"{f.evidence.get('silent_probes', '?')} probes: the "
+                    "monitoring plane itself is down — fail over to the "
+                    "degraded host-side controller."))
+        if f.name == "telemetry_blackout":
+            return Attribution(
+                f.ts, LOCUS_DPU, node=-1, confidence=0.85, primary=f,
+                supporting=(),
+                narrative=(
+                    "Telemetry stream tore: "
+                    f"{f.evidence.get('lost_batches', '?')} batches "
+                    "missing or corrupt since the last resync "
+                    f"({f.evidence.get('replays_dropped', 0)} replays "
+                    "dropped).  Detector baselines span a hole — resync "
+                    "the tap; actuation stays quarantined meanwhile."))
+        if f.name == "command_partition":
+            return Attribution(
+                f.ts, LOCUS_DPU, node=-1, confidence=0.9, primary=f,
+                supporting=(),
+                narrative=(
+                    "Command channel partitioned: "
+                    f"{f.evidence.get('exhausted_commands', '?')} commands "
+                    "burned every retry unacked "
+                    f"({f.evidence.get('retries', '?')} resends total). "
+                    "Detection is intact but mitigation is dark — fail "
+                    "actuation over host-side."))
 
         # Fallback: direct single-vantage mapping.
         locus = DIRECT_LOCUS.get(f.name, LOCUS_UNKNOWN)

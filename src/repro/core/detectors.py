@@ -63,6 +63,19 @@ META_BATCH_OCC = 6       # QUEUE_SAMPLE: scheduler-exported active decode
 #                          batch size per node (depth = active slots) — the
 #                          NIC-side tap of the host scheduler's slot count,
 #                          same vantage as the ingress-queue samples
+META_MON_HEARTBEAT = 7   # QUEUE_SAMPLE: host-side watchdog heartbeat probe
+#                          (size = 1 while the DPU is silent past the
+#                          timeout, 0 while healthy; depth = silence ms;
+#                          node = -1) — emitted into the STANDBY plane by
+#                          the watchdog, never by the DPU itself
+META_MON_INGEST = 8      # QUEUE_SAMPLE: DPU ingest-guard health (size =
+#                          missing + corrupt rows latched since the last
+#                          resync, depth = replays dropped; node = -1);
+#                          emitted only while the guard is dirty
+META_MON_BUS = 9         # QUEUE_SAMPLE: command-bus health (size =
+#                          cumulative retry exhaustions, depth = cumulative
+#                          retries; node = -1); emitted only between an
+#                          exhaustion and the next successful ack
 
 
 def _ext_group(group: int) -> bool:
@@ -2292,6 +2305,151 @@ class DPUSaturation(Detector):
         return []
 
 
+# ======================================================================
+# Monitoring-plane robustness ("mon" table) — watching the watcher.
+# Signal sources are self-telemetry rows (sidecar ingest guard, command
+# bus) and the host watchdog's heartbeat probes; none of these rows exist
+# on a healthy monitoring plane, so the detectors are structurally silent
+# on every data-path scenario.
+# ======================================================================
+
+
+class DPUOutage(Detector):
+    """mon.1 — the DPU itself went dark.
+
+    Signal source is the host-side watchdog's heartbeat probe stream
+    (``META_MON_HEARTBEAT``), emitted into the *standby* plane over the
+    BlueField's out-of-band management port: ``size`` is 1 while the DPU
+    has been silent past the watchdog timeout, ``depth`` carries the
+    silence in milliseconds.  Two consecutive silent probes make the
+    outage critical — one probe can race a slow scheduling round.
+    """
+
+    name = "dpu_outage"
+    table = "mon"
+    stage = "monitoring plane (all detection + actuation dark)"
+    root_cause = "DPU crash/hang/power-cycle, or management-path loss " \
+                 "of the telemetry sidecar"
+    directive = "fail over to the degraded host-side controller; " \
+                "fail back with hysteresis when heartbeats resume"
+    interested = frozenset({EventKind.QUEUE_SAMPLE})
+
+    MIN_SILENT = 2           # consecutive silent probes before firing
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        self._silent_run = 0     # consecutive silent probes
+        self._silence_ms = 0
+
+    def update(self, ev: Event) -> None:
+        if ev.kind != EventKind.QUEUE_SAMPLE or ev.meta != META_MON_HEARTBEAT:
+            return
+        self.events_seen += 1
+        if int(ev.size) > 0:
+            self._silent_run += 1
+            self._silence_ms = int(ev.depth)
+        else:
+            self._silent_run = 0
+            self._silence_ms = 0
+
+    def poll(self, now: float) -> list[Finding]:
+        if self._silent_run < self.MIN_SILENT:
+            return []
+        return [self._mk(now, score=10.0 + self._silence_ms / 100.0,
+                         severity="critical",
+                         silent_probes=self._silent_run,
+                         silence_ms=self._silence_ms)]
+
+
+class TelemetryBlackout(Detector):
+    """mon.2 — the telemetry stream to the DPU tore.
+
+    Signal source is the sidecar ingest guard's latched dirty rows
+    (``META_MON_INGEST``): ``size`` counts sequence numbers missing plus
+    batches dropped for checksum corruption since the last resync,
+    ``depth`` counts replayed duplicates dropped.  The latch means the
+    row keeps firing until a host-side ``resync_telemetry`` actuation
+    lands — detection survives its own actuation quarantine.
+    """
+
+    name = "telemetry_blackout"
+    table = "mon"
+    stage = "telemetry ingest (detection blind for the gap window)"
+    root_cause = "uplink partition/blackout, tap corruption, or replayed " \
+                 "frames on the telemetry path"
+    directive = "re-register the telemetry tap and resync the sequence " \
+                "stream; quarantine actuation until detectors re-warm"
+    interested = frozenset({EventKind.QUEUE_SAMPLE})
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        self._lost = 0           # latest latched missing+corrupt count
+        self._replays = 0
+        self._seen_this_poll = 0
+
+    def update(self, ev: Event) -> None:
+        if ev.kind != EventKind.QUEUE_SAMPLE or ev.meta != META_MON_INGEST:
+            return
+        self.events_seen += 1
+        self._seen_this_poll += 1
+        self._lost = int(ev.size)
+        self._replays = int(ev.depth)
+
+    def poll(self, now: float) -> list[Finding]:
+        seen, self._seen_this_poll = self._seen_this_poll, 0
+        if seen == 0 or self._lost <= 0:
+            return []
+        return [self._mk(now, score=8.0 + self._lost / 1000.0,
+                         severity="critical", lost_batches=self._lost,
+                         replays_dropped=self._replays)]
+
+
+class CommandPartition(Detector):
+    """mon.3 — the command/actuation channel is partitioned.
+
+    Signal source is the bus-health self-telemetry (``META_MON_BUS``):
+    ``size`` is the cumulative count of commands (including liveness
+    pings) that burned every retry unacked.  A merely lossy channel lands
+    most retries; repeated *exhaustion* with no intervening ack means
+    nothing is getting through, which is a different failure class than
+    ``lossy_command_channel`` and needs failover, not patience.
+    """
+
+    name = "command_partition"
+    table = "mon"
+    stage = "actuation path (detection intact, mitigation dark)"
+    root_cause = "downlink/ack-channel partition between DPU and host " \
+                 "actuator"
+    directive = "fail actuation over to the host-side controller until " \
+                "the command channel round-trips again"
+    interested = frozenset({EventKind.QUEUE_SAMPLE})
+
+    MIN_EXHAUSTED = 3        # a lossy-but-alive channel stays below this
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        self._exhausted = 0
+        self._retries = 0
+        self._seen_this_poll = 0
+
+    def update(self, ev: Event) -> None:
+        if ev.kind != EventKind.QUEUE_SAMPLE or ev.meta != META_MON_BUS:
+            return
+        self.events_seen += 1
+        self._seen_this_poll += 1
+        self._exhausted = int(ev.size)
+        self._retries = int(ev.depth)
+
+    def poll(self, now: float) -> list[Finding]:
+        seen, self._seen_this_poll = self._seen_this_poll, 0
+        if seen == 0 or self._exhausted < self.MIN_EXHAUSTED:
+            return []
+        return [self._mk(now, score=9.0 + self._exhausted / 10.0,
+                         severity="critical",
+                         exhausted_commands=self._exhausted,
+                         retries=self._retries)]
+
+
 ALL_DETECTORS: tuple[type[Detector], ...] = (
     # 3(a)
     BurstAdmissionBacklog, IngressStarvation, FlowSkewAcrossSessions,
@@ -2312,4 +2470,6 @@ ALL_DETECTORS: tuple[type[Detector], ...] = (
     CollectiveStragglerLag, RailCongestion, HbmBandwidthCliff,
     # DPU self-diagnosis
     DPUSaturation,
+    # monitoring-plane robustness
+    DPUOutage, TelemetryBlackout, CommandPartition,
 )

@@ -157,7 +157,7 @@ class EventBatch:
     pay the (expensive) materialization once.
     """
 
-    __slots__ = BATCH_COLUMNS + ("_events",)
+    __slots__ = BATCH_COLUMNS + ("_events", "batch_seq", "checksum")
 
     def __init__(self, ts: np.ndarray, kind: np.ndarray, node: np.ndarray,
                  device: np.ndarray, flow: np.ndarray, size: np.ndarray,
@@ -175,6 +175,34 @@ class EventBatch:
         self.meta = meta
         self.replica = replica
         self._events: list[Event] | None = None
+        # wire metadata, stamped by the sender (tap) side; -1/None = unset.
+        # Derived batches (slice/compress) intentionally do NOT inherit
+        # either field: they are new in-memory objects, not wire frames.
+        self.batch_seq: int = -1
+        self.checksum: int | None = None
+
+    # -- wire integrity ---------------------------------------------------
+
+    def content_checksum(self) -> int:
+        """Cheap order-sensitive content digest for the modeled wire.
+
+        Not cryptographic — it only needs to catch the simulated bit-rot a
+        ``ModeledLink`` corruptor injects.  Computed lazily (only when a
+        link's corruption knob is on), so the zero-knob hot path never pays
+        for it.
+        """
+        acc = int(np.int64(len(self)))
+        for i, col in enumerate(self.columns(), start=1):
+            if col.dtype == np.float64:
+                view = col.view(np.int64)
+            else:
+                view = col
+            # wrap-around int64 sum, position-salted so column swaps and
+            # row reorders change the digest
+            s = int(np.bitwise_xor.reduce(
+                view * np.int64(0x9E3779B1 * i))) if len(view) else 0
+            acc ^= (s + i) & 0xFFFFFFFFFFFFFFFF
+        return acc & 0xFFFFFFFFFFFFFFFF
 
     # -- construction ----------------------------------------------------
 

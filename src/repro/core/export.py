@@ -16,6 +16,7 @@ TITLES = {
     "3d": "Table 3(d) — Data-Parallel Replica Runbook (extension)",
     "3e": "Table 3(e) — Collective/Rail/Memory Runbook (extension)",
     "dpu": "Table (dpu) — DPU Self-Diagnosis Runbook (extension)",
+    "mon": "Table (mon) — Monitoring-Plane Outage Runbook (extension)",
 }
 
 

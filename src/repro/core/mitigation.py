@@ -80,6 +80,13 @@ ACTIONS: dict[str, str] = {
                     "drops back below the memory-bandwidth knee",
     "reroute_rail": "spread cross-domain collective legs over all rails "
                     "instead of their home rail (hot-rail bypass)",
+    "failover_controller": "fail mitigation over to the degraded host-side "
+                           "fallback controller (high-confidence rows only, "
+                           "longer confirmations, no cluster-scoped quorum) "
+                           "until the DPU path round-trips again",
+    "resync_telemetry": "re-register the telemetry tap and resync the "
+                        "batch sequence stream after an ingest gap; clears "
+                        "the blackout latch once the stream is whole",
 }
 
 # keep the two registries in lockstep: every runbook row must actuate

@@ -408,19 +408,65 @@ RUNBOOK_DPU: tuple[RunbookEntry, ...] = (
         scenario="dpu_saturation"),
 )
 
+RUNBOOK_MON: tuple[RunbookEntry, ...] = (
+    RunbookEntry(
+        "dpu_outage", "mon", "DPU outage (monitoring plane dark)",
+        "Watchdog heartbeat probes to the DPU go silent past the timeout "
+        "(no self-telemetry cadence, no command-bus acks) over the "
+        "out-of-band management port",
+        "Monitoring plane (all detection and actuation dark)",
+        "Every runbook row is blind for the outage; faults progress "
+        "unmitigated until the plane returns or a fallback takes over",
+        "DPU crash, hang, or power-cycle; firmware fault; management-path "
+        "loss of the telemetry sidecar",
+        "Fail over to the degraded host-side controller (high-confidence "
+        "rows only); fail back with hysteresis when heartbeats resume; "
+        "quarantine the restarted DPU until its detectors re-warm",
+        D.DPUOutage, action="failover_controller",
+        scenario="dpu_outage"),
+    RunbookEntry(
+        "telemetry_blackout", "mon", "Telemetry blackout (ingest gap)",
+        "The DPU's ingest guard sees a jump in the tap's batch sequence "
+        "numbers (or checksum-corrupt/replayed frames) after an uplink "
+        "partition window",
+        "Telemetry ingest (detection blind for the gap window)",
+        "Detector state spans a hole in the stream; rate/gap baselines "
+        "are stale and any actuation off them risks a false command",
+        "Uplink partition or blackout between the host tap and the DPU; "
+        "frame corruption or replay on the telemetry path",
+        "Re-register the tap and resync the sequence stream; quarantine "
+        "actuation until detectors re-warm over fresh events",
+        D.TelemetryBlackout, action="resync_telemetry",
+        scenario="telemetry_blackout"),
+    RunbookEntry(
+        "command_partition", "mon", "Command-channel partition",
+        "Commands and liveness pings burn every retry unacked while "
+        "telemetry ingest stays healthy — the loop can see but not act",
+        "Actuation path (detection intact, mitigation dark)",
+        "Confirmed pathologies accumulate without mitigation; retry "
+        "exhaustion climbs with zero intervening acks",
+        "Downlink/ack-channel partition between the DPU and the host "
+        "actuator (control fabric shares the data fabric's failure domain)",
+        "Fail actuation over to the host-side controller until the "
+        "command channel round-trips again",
+        D.CommandPartition, action="failover_controller",
+        scenario="command_partition"),
+)
+
 #: every table the full DPU agent runs (the paper's three runbooks, the
-#: 3d data-parallel extension, the 3e per-collective/topology tier, and
-#: the plane's self-diagnosis row)
-DEFAULT_TABLES: tuple[str, ...] = ("3a", "3b", "3c", "3d", "3e", "dpu")
+#: 3d data-parallel extension, the 3e per-collective/topology tier, the
+#: plane's self-diagnosis row, and the monitoring-plane robustness rows)
+DEFAULT_TABLES: tuple[str, ...] = ("3a", "3b", "3c", "3d", "3e", "dpu",
+                                   "mon")
 
 ALL_RUNBOOKS: tuple[RunbookEntry, ...] = (
     RUNBOOK_3A + RUNBOOK_3B + RUNBOOK_3C + RUNBOOK_3D + RUNBOOK_3E
-    + RUNBOOK_DPU)
+    + RUNBOOK_DPU + RUNBOOK_MON)
 
 BY_ID: dict[str, RunbookEntry] = {e.row_id: e for e in ALL_RUNBOOKS}
 BY_TABLE: dict[str, tuple[RunbookEntry, ...]] = {
     "3a": RUNBOOK_3A, "3b": RUNBOOK_3B, "3c": RUNBOOK_3C, "3d": RUNBOOK_3D,
-    "3e": RUNBOOK_3E, "dpu": RUNBOOK_DPU,
+    "3e": RUNBOOK_3E, "dpu": RUNBOOK_DPU, "mon": RUNBOOK_MON,
 }
 
 

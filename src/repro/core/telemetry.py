@@ -85,10 +85,16 @@ class DPUAgent:
                  full_trace: bool = False,
                  sample_every: int = 32) -> None:
         self.node = node
+        self._cfg = cfg
+        self._tables = tables
         self.detectors: dict[str, Detector] = build_detectors(cfg, tables)
         self.stream = EventStream(full_trace=full_trace)
         self.sample_every = max(sample_every, 1)
         self._batches = 0
+        self._index_detectors()
+        self.stats = TelemetryStats()
+
+    def _index_detectors(self) -> None:
         # pre-index detectors by event kind for O(interested) dispatch
         self._by_kind: dict[EventKind, list[Detector]] = {}
         for det in self.detectors.values():
@@ -109,7 +115,14 @@ class DPUAgent:
                 for kind in det.interested:
                     self._fallback_by_kind.setdefault(kind, []).append(det)
         self._fallback_kinds = frozenset(self._fallback_by_kind)
-        self.stats = TelemetryStats()
+
+    def reset_detectors(self) -> None:
+        """Rebuild every detector from scratch — the DPU-crash model:
+        detector state is DPU DRAM and does not survive a power cycle.
+        Cumulative stats and the event stream are the *experiment's*
+        record, not DPU state, so they survive."""
+        self.detectors = build_detectors(self._cfg, self._tables)
+        self._index_detectors()
 
     def observe(self, ev: Event) -> None:
         stats = self.stats
@@ -203,6 +216,7 @@ class TelemetryPlane:
         # same steady-state condition every poll
         self._last_seen: dict[tuple[str, int], float] = {}
         self.dedup_window = 1.0
+        self._warming = False
 
     # -- ingestion -------------------------------------------------------
 
@@ -250,10 +264,60 @@ class TelemetryPlane:
         for ev in events:
             self.observe(ev)
 
+    # -- chaos -----------------------------------------------------------
+
+    def reset_detector_state(self) -> None:
+        """DPU crash: all warm detector/attribution/dedup state is lost.
+        The findings/attributions/actions logs survive — they are what the
+        experiment already observed, not state on the failed device.
+
+        The poll anchor resets with the detectors: a replay of retained
+        history (watchdog failover) must tick at the *historical* poll
+        boundaries, not accumulate silently until the pre-reset
+        ``_next_poll`` — one giant catch-up window blurs exactly the rate
+        sags and skews the replay was meant to preserve."""
+        self.agent.reset_detectors()
+        self.attributor._recent.clear()
+        self._last_seen.clear()
+        self._next_poll = 0.0
+
+    def warm_start(self, batches) -> None:
+        """Rebuild detector state by replaying retained history WITHOUT
+        re-logging it — the host-side state transfer a supervisor performs
+        when it hands control back to a restarted monitor.
+
+        A power-cycled DPU that re-warms only on fault-era traffic
+        calibrates its baselines to the fault: the pathology reads as
+        normal and rate/peak-latch rows never fire again.  Replaying the
+        supervisor's retained tap window (which spans pre-incident
+        traffic) restores honest baselines.  Findings produced during the
+        replay are discarded — the experiment record already holds what
+        was observed live, and a replay must not duplicate it — and the
+        dedup map is left unpopulated so the first *live* detection after
+        the warm-start logs fresh.  Call ``reset_detector_state`` first;
+        poll ticks then land on the historical boundaries and the anchor
+        ends at the replay edge, so live ingest continues seamlessly."""
+        s = self.agent.stats
+        snap = (s.events, s.findings, s.update_seconds, s.timed_events,
+                s.poll_seconds)
+        self._warming = True
+        try:
+            for b in batches:
+                self.observe_batch(b)
+        finally:
+            self._warming = False
+            (s.events, s.findings, s.update_seconds, s.timed_events,
+             s.poll_seconds) = snap
+
     # -- control path ----------------------------------------------------
 
     def tick(self, now: float) -> list[Finding]:
         raw = self.agent.poll(now)
+        if self._warming:
+            # warm-start replay: detectors drained at the historical poll
+            # boundary, but nothing downstream — no log, no dedup mark,
+            # no attribution, no actuation
+            return []
         fresh: list[Finding] = []
         for f in raw:
             key = (f.name, f.node)

@@ -8,9 +8,13 @@ modeled transport and a bounded compute budget here:
   budget     — events/sec ceiling + bounded ingest ring (load shedding)
   policy     — arbitration of concurrent attributions (priority, cooldown,
                flap damping, conflict resolution)
-  command    — command bus with RTT, acks, retries, stale invalidation
+  command    — command bus with RTT, acks, retries, backoff, stale
+               invalidation, and liveness pings
   sidecar    — DPUSidecar tying tap -> budget -> detectors -> policy ->
-               command bus -> host actuator
+               command bus -> host actuator (plus crash/restart chaos and
+               an ingest guard over the batch sequence stream)
+  watchdog   — host-side liveness supervision and degraded-mode failover
+               when the sidecar itself goes dark
 
 ``sim.cluster.run_scenario(control="dpu")`` runs the full asynchronous
 loop; ``control="instant"`` preserves the legacy zero-latency topology for
@@ -18,12 +22,14 @@ golden parity.
 """
 
 from repro.dpu.budget import DPUBudget
-from repro.dpu.command import BusStats, CommandBus
+from repro.dpu.command import PING_ACTION, BusStats, CommandBus
 from repro.dpu.policy import CONFLICT_GROUPS, Command, PolicyEngine
-from repro.dpu.sidecar import DPUParams, DPUSidecar
+from repro.dpu.sidecar import DPUParams, DPUSidecar, IngestGuard
 from repro.dpu.transport import LinkParams, ModeledLink
+from repro.dpu.watchdog import Watchdog, WatchdogParams
 
 __all__ = [
     "BusStats", "CONFLICT_GROUPS", "Command", "CommandBus", "DPUBudget",
-    "DPUParams", "DPUSidecar", "LinkParams", "ModeledLink", "PolicyEngine",
+    "DPUParams", "DPUSidecar", "IngestGuard", "LinkParams", "ModeledLink",
+    "PING_ACTION", "PolicyEngine", "Watchdog", "WatchdogParams",
 ]

@@ -112,3 +112,20 @@ class DPUBudget:
     def occupancy(self) -> float:
         """Ring fill fraction in [0, 1]."""
         return self.backlog / self.ring_events
+
+    # -- chaos ----------------------------------------------------------
+
+    def crash(self) -> int:
+        """Power-loss model: the ring is DPU DRAM — everything queued is
+        gone.  Cumulative shed/offer counters survive (they are *our*
+        experiment accounting, not DPU state); the drain clock and credit
+        reset so a restarted DPU accrues no phantom capacity for the time
+        it spent dead.  Returns rows lost."""
+        lost = self.backlog
+        self._ring.clear()
+        self._head_off = 0
+        self.backlog = 0
+        self.events_shed += lost
+        self._last_drain = None
+        self._credit = 0.0
+        return lost

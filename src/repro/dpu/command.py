@@ -5,9 +5,21 @@ the host actuator, the actuation result crosses another link back as an
 ack, and the bus supervises the exchange the way a real DPU control agent
 must:
 
-  retries             — an unacked command is re-sent after ``ack_timeout``
-                        up to ``max_retries`` attempts (each resend re-risks
-                        the wire);
+  retries             — an unacked command is re-sent on an exponential
+                        backoff schedule (``ack_timeout`` doubled per
+                        attempt by ``ack_backoff``, capped at
+                        ``ack_timeout_cap``) up to ``max_retries`` attempts
+                        (each resend re-risks the wire);
+  exhaustion          — a command that burns every retry unacked counts in
+                        ``BusStats.exhausted`` and fires ``on_expired``;
+                        the sidecar surfaces the exhaustion rate as
+                        self-telemetry so a partitioned command channel is
+                        itself a detectable pathology (``command_partition``
+                        row);
+  liveness pings      — zero-cost ``PING_ACTION`` commands are acked by the
+                        host without touching the actuator, giving the bus
+                        an ack stream to measure even when the policy engine
+                        is quiet;
   idempotent delivery — a retry that races a slow ack is applied at most
                         once (the host tracks applied cmd ids and re-acks);
   stale invalidation  — a command older than ``stale_after`` at delivery
@@ -29,6 +41,9 @@ from repro.core.mitigation import ActionRecord, EngineControls
 from repro.dpu.policy import Command
 from repro.dpu.transport import LinkParams, ModeledLink
 
+#: Liveness probe pseudo-action: acked by the host, never actuated.
+PING_ACTION = "__ping__"
+
 
 @dataclass
 class _Outstanding:
@@ -47,7 +62,8 @@ class BusStats:
     stale_dropped: int = 0
     superseded: int = 0
     duplicates: int = 0          # retry arrived after the original applied
-    expired: int = 0             # gave up after max_retries
+    expired: int = 0             # gave up (retry exhaustion OR staleness)
+    exhausted: int = 0           # subset of expired: burned every retry
     extra: dict = field(default_factory=dict)
 
 
@@ -60,14 +76,20 @@ class CommandBus:
                  ack_timeout: float = 20e-3,
                  max_retries: int = 3,
                  stale_after: float = 0.5,
-                 on_ack=None) -> None:
+                 ack_backoff: float = 2.0,
+                 ack_timeout_cap: float = 0.25,
+                 on_ack=None,
+                 on_expired=None) -> None:
         self.engine = engine
         self.down = ModeledLink(down or LinkParams(), rng)
         self.ack = ModeledLink(ack or down or LinkParams(), rng)
         self.ack_timeout = ack_timeout
         self.max_retries = max_retries
         self.stale_after = stale_after
+        self.ack_backoff = ack_backoff
+        self.ack_timeout_cap = ack_timeout_cap
         self.on_ack = on_ack
+        self.on_expired = on_expired
         self._outstanding: dict[int, _Outstanding] = {}
         self._applied_ids: set[int] = set()
         # newest applied command id per (action, node): supersession check
@@ -81,6 +103,14 @@ class CommandBus:
         self.stats.sent += 1
         self._outstanding[cmd.cmd_id] = _Outstanding(cmd, 1, now)
         self.down.send(now, cmd)
+
+    def drop_outstanding(self) -> int:
+        """DPU crash: the retry supervisor's state is DPU DRAM.  In-flight
+        commands are simply forgotten — no expiry accounting, no callbacks
+        (the policy engine that issued them is being reset too)."""
+        n = len(self._outstanding)
+        self._outstanding.clear()
+        return n
 
     # -- pump (called once per host round, both clocks agree on ``now``) --
 
@@ -102,6 +132,12 @@ class CommandBus:
         return applied_now
 
     def _deliver(self, cmd: Command, now: float) -> list[ActionRecord]:
+        if cmd.action == PING_ACTION:
+            # liveness probe: ack immediately, never touch the actuator,
+            # never log an ActionRecord — its only job is to measure the
+            # round trip (or fail to, under partition)
+            self.ack.send(now, (cmd, True))
+            return []
         if cmd.cmd_id in self._applied_ids:
             # retry raced the ack: apply-at-most-once, re-ack
             self.stats.duplicates += 1
@@ -133,15 +169,26 @@ class CommandBus:
         self.ack.send(now, (cmd, ok))
         return [rec]
 
+    def backoff_delay(self, attempt: int) -> float:
+        """Wait before resend number ``attempt + 1`` — exponential in the
+        attempts already made, capped so a long partition cannot push the
+        next probe past any useful horizon."""
+        return min(self.ack_timeout * self.ack_backoff ** (attempt - 1),
+                   self.ack_timeout_cap)
+
     def _retry(self, now: float) -> None:
         for cid in list(self._outstanding):
             st = self._outstanding[cid]
-            if now - st.last_sent < self.ack_timeout:
+            if now - st.last_sent < self.backoff_delay(st.attempt):
                 continue
             if (st.attempt >= self.max_retries
                     or now - st.cmd.ts > self.stale_after):
                 del self._outstanding[cid]
                 self.stats.expired += 1
+                if st.attempt >= self.max_retries:
+                    self.stats.exhausted += 1
+                if self.on_expired is not None:
+                    self.on_expired(st.cmd, st.attempt >= self.max_retries)
                 continue
             st.attempt += 1
             st.last_sent = now

@@ -115,6 +115,42 @@ class PolicyEngine:
         self._next_id = 0
         self.issued: list[Command] = []
         self.suppressed: list[tuple[str, float, str, int, str]] = []
+        # actuation quarantine: while now < quarantine_until every decision
+        # is suppressed (recorded), so detectors re-warming after an ingest
+        # gap / DPU restart can never fire a command off stale state
+        self.quarantine_until = float("-inf")
+        self.quarantined = 0
+
+    # -- chaos / hardening hooks -----------------------------------------
+
+    def quarantine(self, until: float) -> None:
+        """Open (or extend) the actuation quarantine window and drop every
+        half-confirmed decision: post-gap evidence must re-confirm from
+        scratch against the re-warmed detectors."""
+        if until > self.quarantine_until:
+            self.quarantine_until = until
+        self._staged.clear()
+        self._pending.clear()
+        self._first_seen.clear()
+        self._escalations.clear()
+
+    def on_expired(self, cmd: Command, exhausted: bool) -> None:
+        """Bus gave up on a command unacked.  Clear the pair's cooldown
+        mark: the action never landed, so holding it down would leave the
+        fault unactuated for a full cooldown after the channel heals."""
+        self._last_issued.pop((cmd.action, cmd.node), None)
+
+    def crash_reset(self, now: float) -> None:
+        """DPU power-cycle: everything in DRAM is lost, including cooldown
+        and flap history — a command dropped in flight at crash time must
+        not hold its (action, node) pair down after restart.  Re-issuing
+        after the restart quarantine is safe: it only happens if the
+        re-warmed detectors still see the fault, i.e. the action never
+        landed (or did not work).  The ``issued``/``suppressed`` logs are
+        the experiment record and survive."""
+        self.quarantine(now)
+        self._last_issued.clear()
+        self._issue_log.clear()
 
     # -- feeding ---------------------------------------------------------
 
@@ -207,6 +243,16 @@ class PolicyEngine:
     def decide(self, now: float) -> list[Command]:
         """Arbitrate this round's candidates into at most one command per
         (conflict-group, node)."""
+        if now < self.quarantine_until:
+            for a in self._staged:
+                self.suppressed.append(
+                    ("quarantine", now,
+                     BY_ID[a.primary.name].action
+                     if a.primary.name in BY_ID else a.primary.name,
+                     a.node, a.primary.name))
+                self.quarantined += 1
+            self._staged.clear()
+            return []
         cands = self._candidates(now) + self._due_escalations(now)
         if not cands:
             return []

@@ -1,0 +1,327 @@
+"""Host-side watchdog — failover for the monitoring plane itself.
+
+The paper makes the DPU the cluster's nervous system, which makes it a
+single point of failure: a crashed DPU (or a partitioned command channel)
+leaves every runbook row blind or unactuatable.  ``Watchdog`` is the
+host-side answer, modeled after how BlueField deployments actually monitor
+their DPUs: the card exposes a dedicated out-of-band 1GbE management port
+that shares no failure domain with the data-path links, so the host can
+probe DPU liveness (heartbeat cadence, command-bus ack counters) even while
+the telemetry uplink or the command downlink is dark.
+
+State machine::
+
+    NORMAL --(heartbeat silent > silence_timeout,
+              or command retries exhaust with zero intervening acks)-->
+    FALLBACK --(DPU alive + channel acking for >= failback_hold)--> NORMAL
+
+In FALLBACK the watchdog runs a *degraded* host-side loop: a standby
+``TelemetryPlane`` (warmed by replaying the last ``retain_s`` seconds of
+tapped batches, then fed live) drives a conservative controller — higher
+confidence floor, more confirmations, no cluster-scoped quorum escalation
+(the host sees one vantage; cluster-wide actions need the DPU's).  Failback
+is hysteretic: the DPU must look healthy for ``failback_hold`` before the
+watchdog stands down, and the handover drops half-confirmed policy state so
+both controllers never compose a confirmation chain.  The handover back is
+also a *state transfer*, in two parts.  First, the returning DPU's plane is
+warm-started: its retained tap window is replayed with logging suppressed
+(``TelemetryPlane.warm_start``), because a DPU that re-warmed only on
+fault-era traffic would calibrate its baselines to the fault — the
+pathology reads as normal and rate/peak-latch rows never fire again.
+Second, the standby's *evidence* is handed over: attributions observed
+during the dark window that the conservative fallback declined to act on
+are re-staged through the returning DPU's own arbitration (minus the mon
+rows — the DPU's own obituary — and minus anything the fallback already
+applied), delivered only once the restart quarantine has expired so a
+single-copy handover is never swallowed by a racing hold.
+
+The watchdog wraps a :class:`DPUSidecar` and speaks the same plane
+protocol, so ``run_scenario`` can swap it in transparently; its
+``findings`` / ``attributions`` / ``actions`` views merge the sidecar's
+plane with the standby's (the experiment record spans both).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.detectors import META_MON_BUS, META_MON_HEARTBEAT
+from repro.core.events import EventBatch, EventBatchBuilder, EventKind
+from repro.core.mitigation import EngineControls, MitigationController
+from repro.core.runbooks import BY_ID, DEFAULT_TABLES
+from repro.core.telemetry import TelemetryPlane
+from repro.dpu.sidecar import DPUSidecar
+
+
+@dataclass(frozen=True)
+class WatchdogParams:
+    """Host-side liveness supervision + degraded-mode policy knobs."""
+
+    silence_timeout: float = 0.08    # heartbeat silence before failover (s)
+    probe_every: float = 0.02        # OOB liveness-probe cadence (s)
+    failback_hold: float = 0.2       # healthy time required before failback
+    # tapped-batch replay window on failover.  Long enough that the replay
+    # usually spans pre-incident traffic: the standby's detectors need a
+    # healthy baseline to judge the fault era against, and rate-latch rows
+    # (e.g. the HBM cliff) are undetectable from fault-era history alone
+    retain_s: float = 1.2
+    exhaust_min: int = 3             # ack-less retry exhaustions => failover
+    # degraded-mode controller: conservative by construction
+    min_confidence: float = 0.7
+    confirmations: int = 3
+    cooldown: float = 5.0
+
+
+class Watchdog:
+    """Liveness supervisor + degraded host-side fallback around a sidecar."""
+
+    NORMAL = "normal"
+    FALLBACK = "fallback"
+
+    def __init__(self, sidecar: DPUSidecar,
+                 params: WatchdogParams | None = None,
+                 tables: tuple[str, ...] = DEFAULT_TABLES,
+                 mitigate: bool = True) -> None:
+        self.sidecar = sidecar
+        self.params = params or WatchdogParams()
+        # the standby plane detects + attributes only; actuation goes
+        # through the (gated) fallback controller below
+        self.standby = TelemetryPlane(n_nodes=sidecar.plane.n_nodes,
+                                      mitigate=False, tables=tables)
+        self.fallback: MitigationController | None = None
+        if mitigate:
+            p = self.params
+            self.fallback = MitigationController(
+                engine=None, min_confidence=p.min_confidence,
+                confirmations=p.confirmations, cooldown=p.cooldown)
+        self.state = self.NORMAL
+        self.failovers = 0
+        self.failbacks = 0
+        self.failover_ts = -1.0
+        self._retained: list[EventBatch] = []
+        self._next_probe = 0.0
+        self._alive_since = -1.0      # first healthy probe after failover
+        self._att_i = 0               # standby attributions already consumed
+        self._dark_atts = []          # dark-window evidence for the handover
+        self._handover = []           # staged evidence awaiting quarantine end
+        self._exh_seen = 0            # bus exhaustion watermark (OOB read)
+        self._ack_seen = 0
+        self._builder = EventBatchBuilder()
+
+    # -- producer-facing plane protocol -----------------------------------
+
+    def observe_batch(self, batch: EventBatch) -> None:
+        n = len(batch)
+        if n == 0:
+            return
+        # retain a replay window so a failover starts warm, not cold
+        self._retained.append(batch)
+        horizon = float(batch.ts[-1]) - self.params.retain_s
+        while self._retained and float(self._retained[0].ts[-1]) < horizon:
+            self._retained.pop(0)
+        self.sidecar.observe_batch(batch)
+        if self.state == self.FALLBACK:
+            self.standby.observe_batch(batch)
+
+    def observe(self, ev) -> None:
+        b = EventBatchBuilder()
+        b.add(ev.ts, int(ev.kind), ev.node, ev.device, ev.flow, ev.size,
+              ev.depth, ev.op, ev.group, ev.meta, ev.replica)
+        self.observe_batch(b.build(sort=False))
+
+    @property
+    def findings(self):
+        return sorted(self.sidecar.plane.findings + self.standby.findings,
+                      key=lambda f: f.ts)
+
+    @property
+    def attributions(self):
+        return sorted(self.sidecar.plane.attributions
+                      + self.standby.attributions, key=lambda a: a.ts)
+
+    @property
+    def actions(self):
+        merged = list(self.sidecar.plane.actions)
+        if self.fallback is not None:
+            merged.extend(self.fallback.log)
+        return sorted(merged, key=lambda r: r.ts)
+
+    @property
+    def stats(self):
+        return self.sidecar.plane.stats
+
+    @property
+    def controller(self):
+        return self.sidecar.policy or self.fallback
+
+    def bind(self, engine: EngineControls) -> None:
+        self.sidecar.bind(engine)
+        if self.fallback is not None:
+            self.fallback.engine = engine
+
+    # -- actuations routed back from the host ------------------------------
+
+    def force_failover(self, now: float) -> bool:
+        """``failover_controller`` actuation target (idempotent)."""
+        if self.state != self.FALLBACK:
+            self._failover(now)
+        return True
+
+    def resync(self, now: float) -> None:
+        """``resync_telemetry`` passthrough to the sidecar's ingest guard."""
+        self.sidecar.resync(now)
+
+    # -- the supervision loop ----------------------------------------------
+
+    def advance(self, now: float) -> None:
+        self.sidecar.advance(now)
+        self._deliver_handover(now)
+        p = self.params
+        if now < self._next_probe:
+            self._drive_fallback()
+            return
+        self._next_probe = now + p.probe_every
+        silence = now - self.sidecar.heartbeat_ts
+        silent = silence > p.silence_timeout
+        # OOB management-port read of the bus counters: retry exhaustion
+        # with zero intervening acks means the command channel is dark even
+        # though the DPU itself is alive
+        bus = self.sidecar.bus
+        bus_dark = False
+        if bus is not None:
+            s = bus.stats
+            if s.acked > self._ack_seen:
+                self._exh_seen = s.exhausted   # channel round-trips; re-arm
+            elif s.exhausted - self._exh_seen >= p.exhaust_min:
+                bus_dark = True
+            self._ack_seen = s.acked
+        # probe rows feed the standby plane's mon detectors (heartbeat
+        # always; bus health only while it is dark, mirroring the sidecar's
+        # own latched emission)
+        b = self._builder
+        b.add(now, int(EventKind.QUEUE_SAMPLE), -1, -1, -1,
+              1 if silent else 0, int(silence * 1000), -1, -1,
+              META_MON_HEARTBEAT, -1)
+        if bus_dark:
+            b.add(now, int(EventKind.QUEUE_SAMPLE), -1, -1, -1,
+                  bus.stats.exhausted, bus.stats.retries, -1, -1,
+                  META_MON_BUS, -1)
+        self.standby.observe_batch(b.build(sort=False))
+        b.clear()
+        healthy = not silent and not bus_dark
+        if self.state == self.NORMAL and not healthy:
+            self._failover(now)
+        elif self.state == self.FALLBACK:
+            if healthy:
+                if self._alive_since < 0:
+                    self._alive_since = now
+                elif now - self._alive_since >= p.failback_hold:
+                    self._failback(now)
+            else:
+                self._alive_since = -1.0
+        self._drive_fallback()
+
+    def _failover(self, now: float) -> None:
+        self.state = self.FALLBACK
+        self.failovers += 1
+        self.failover_ts = now
+        self._alive_since = -1.0
+        self._dark_atts = []
+        self._handover = []           # stale evidence must not outlive a new outage
+        # until now the standby's only traffic was probe rows — to its
+        # detectors every node has been silent since t=0.  Re-warm from a
+        # clean slate: drop that probe-only history, then replay the
+        # retained tap window so baselines span real recent traffic
+        self.standby.reset_detector_state()
+        for batch in self._retained:
+            self.standby.observe_batch(batch)
+
+    def _failback(self, now: float) -> None:
+        self.state = self.NORMAL
+        self.failbacks += 1
+        self._alive_since = -1.0
+        # the live tee stops here; without a reset the standby's detectors
+        # would read the taper as cluster-wide starvation on the next probe
+        self.standby.reset_detector_state()
+        # drop half-confirmed policy state at the handover so the two
+        # controllers can never compose a confirmation chain across it —
+        # but do NOT extend the actuation hold: the restart path already
+        # opened its own quarantine, and stacking another full window on
+        # top of it would swallow the one shot a latching detector gets
+        # at the first post-reset poll
+        policy = self.sidecar.policy
+        if policy is not None:
+            policy.quarantine(now)
+        # state transfer: the restarted DPU re-warmed on fault-era traffic,
+        # so its baselines think the pathology is normal — rate/peak-latch
+        # rows would never fire again.  Replay the supervisor's retained
+        # tap window (spans pre-incident traffic) into the returning plane
+        # with logging suppressed; the next live poll then detects against
+        # honest baselines
+        self.sidecar.plane.reset_detector_state()
+        self.sidecar.plane.warm_start(self._retained)
+        # evidence handover: attributions the standby observed while the
+        # DPU was dark are re-staged through the primary's own arbitration
+        # — minus the mon rows (the DPU's own obituary; the outage is over
+        # by definition of failback) and minus anything the fallback
+        # already applied.  Delivery is deferred until the restart
+        # quarantine has actually expired: failback and quarantine-end can
+        # land microseconds apart, and evidence staged inside the hold is
+        # dropped — fatal for a single-copy handover
+        acted = set()
+        if self.fallback is not None:
+            acted = {(r.action, r.node) for r in self.fallback.log
+                     if r.applied and r.ts >= self.failover_ts}
+        for a in self._dark_atts:
+            entry = BY_ID.get(a.primary.name)
+            if entry is None or entry.table == "mon":
+                continue
+            if (entry.action, a.node) in acted:
+                continue
+            self._handover.append(a)
+        self._dark_atts = []
+
+    def _deliver_handover(self, now: float) -> None:
+        if not self._handover:
+            return
+        policy = self.sidecar.policy
+        if policy is None or self.state != self.NORMAL:
+            self._handover = []
+            return
+        if now < policy.quarantine_until:
+            return
+        for a in self._handover:
+            policy.observe(a)
+        self._handover = []
+
+    def _drive_fallback(self) -> None:
+        """Feed new standby attributions to the degraded controller.  Only
+        FALLBACK state actuates; attributions arriving while NORMAL are
+        consumed (watermark) but not acted on — the DPU path owns them."""
+        atts = self.standby.attributions
+        if self.fallback is None or not atts[self._att_i:]:
+            self._att_i = len(atts)
+            return
+        fresh = atts[self._att_i:]
+        self._att_i = len(atts)
+        if self.state != self.FALLBACK:
+            return
+        self._dark_atts.extend(fresh)
+        recs = self.fallback.consider_all(fresh)
+        if recs:
+            self.standby.actions.extend(recs)
+            self.standby.agent.stats.actions += len(recs)
+
+    # -- reporting ---------------------------------------------------------
+
+    def report(self) -> dict:
+        out = self.sidecar.report()
+        out["watchdog"] = {
+            "state": self.state,
+            "failovers": self.failovers,
+            "failbacks": self.failbacks,
+            "standby_findings": len(self.standby.findings),
+            "fallback_actions": (len(self.fallback.log)
+                                 if self.fallback else 0),
+        }
+        return out

@@ -666,8 +666,13 @@ class ReplicaSet:
         # stays deterministic; a jittery/lossy link consumes only its own
         # seeded stream
         self._view_rng = np.random.default_rng(seed ^ 0x51EF)
-        self.view_link = ModeledLink(view_link or LinkParams(delay=0.0),
-                                     self._view_rng)
+        # view snapshots are idempotent last-writer-wins datagrams, not a
+        # sequenced stream — out-of-order arrival (view flapping) is part
+        # of the channel, so ordered-stream clamping stays off
+        self.view_link = ModeledLink(
+            dataclasses.replace(view_link or LinkParams(delay=0.0),
+                                ordered=False),
+            self._view_rng)
         self._pending = EventBatchBuilder() if plane is not None else None
 
     # -- view pipeline ---------------------------------------------------

@@ -34,6 +34,7 @@ sizes, and gaps).
 
 from __future__ import annotations
 
+import dataclasses
 from bisect import bisect_left
 from collections import deque
 from dataclasses import dataclass, field
@@ -67,6 +68,7 @@ from repro.core.runbooks import DEFAULT_TABLES
 from repro.core.telemetry import TelemetryPlane
 from repro.dpu.sidecar import DPUParams, DPUSidecar
 from repro.dpu.transport import LinkParams, ModeledLink
+from repro.dpu.watchdog import Watchdog, WatchdogParams
 from repro.serving.router import (
     NodeSnapshot,
     ReplicaSnapshot,
@@ -155,6 +157,12 @@ class SimParams:
     # the node completes only a ``knee / batch`` duty cycle of egress
     # rounds (throughput cliff with flat queues).  0 disables the model.
     hbm_knee: int = 0
+    # --- monitoring-plane failover (repro.dpu.watchdog) ---
+    # When set (and control resolves to "dpu"), the sidecar is wrapped in a
+    # host-side Watchdog: heartbeat/ack supervision over the OOB management
+    # port, degraded fallback controller on failover.  None = no watchdog,
+    # bit-identical to the plain sidecar topology.
+    watchdog: "WatchdogParams | None" = None
 
 
 @dataclass
@@ -222,6 +230,19 @@ class FaultSpec:
     early_stop_skew: bool = False      # extreme decode-length divergence
     # --- telemetry-plane load (DPU self-diagnosis) ---
     telemetry_flood: float = 0.0       # extra debug-tap rows per round
+    # --- monitoring-plane chaos (mon table) ---
+    # These knobs break the *monitoring plane itself* rather than the
+    # cluster: they are merged into DPUParams/LinkParams by run_scenario
+    # (only when set, so canonical scenarios stay bit-identical) and the
+    # partition windows are pure clock comparisons — zero RNG draws.
+    dpu_crash_at: float = -1.0         # sidecar crash time (<0 = never)
+    dpu_restart_after: float = 0.0     # warm-restart delay (0 = stays down)
+    uplink_blackout_start: float = -1.0  # telemetry uplink partition window
+    uplink_blackout_s: float = 0.0
+    downlink_partition_start: float = -1.0  # command-channel partition
+    downlink_partition_s: float = 0.0
+    uplink_corrupt_p: float = 0.0      # per-batch bit-rot probability
+    uplink_duplicate_p: float = 0.0    # per-batch replay probability
     # --- intermittency ---
     # > 0: the fault is only active during alternating windows of this
     # length (fire/clear/fire...) — the oscillation that exercises the
@@ -408,7 +429,11 @@ class ClusterSim:
         # attach and draws no randomness; the link has its OWN seeded
         # stream so a jittery/lossy view never perturbs the synthesis RNG
         # (scalar/columnar parity is per-draw)
-        self._view_base = params.view_link or LinkParams(delay=0.0)
+        # view snapshots are idempotent last-writer-wins datagrams, not a
+        # sequenced stream: out-of-order arrival (view flapping) is part
+        # of the channel being modeled, so ordering stays off
+        self._view_base = dataclasses.replace(
+            params.view_link or LinkParams(delay=0.0), ordered=False)
         self._view_link = ModeledLink(
             self._view_base, np.random.default_rng(params.seed ^ 0x51EF))
         # per-node prefix caches (session key -> LRU marker) and the
@@ -474,6 +499,22 @@ class ClusterSim:
             # instead of riding their home rail
             self._rail_reroute = True
             return True
+        if action == "resync_telemetry":
+            # re-register the tap: the sidecar's ingest guard drops its
+            # blackout latch once the host confirms the stream is whole
+            ctrl = self._ctrl
+            if ctrl is not None and hasattr(ctrl, "resync"):
+                ctrl.resync(self._t)
+                return True
+            return matched
+        if action == "failover_controller":
+            # hand control to the host-side degraded loop (idempotent when
+            # the watchdog already failed over on its own)
+            ctrl = self._ctrl
+            if ctrl is not None and hasattr(ctrl, "force_failover"):
+                ctrl.force_failover(self._t)
+                return True
+            return matched
         return matched
 
     def _rebalance_replicas(self) -> None:
@@ -923,7 +964,8 @@ class ClusterSim:
         if f.router_stale > 0:
             self._view_link.params = (
                 LinkParams(delay=f.router_stale,
-                           jitter=0.25 * f.router_stale, drop_p=0.05)
+                           jitter=0.25 * f.router_stale, drop_p=0.05,
+                           ordered=False)
                 if f.active(t) else self._view_base)
         # fused decode-work estimate: one clamped subtraction over the
         # cluster-wide remaining-token concat instead of per-node reductions
@@ -1812,6 +1854,44 @@ class ClusterSim:
                         meta=META_TAP_DEBUG)
 
 
+def _merge_chaos(dpu: DPUParams | None, fault: FaultSpec) -> DPUParams | None:
+    """Fold the fault's monitoring-plane chaos knobs into the sidecar params.
+
+    Returns ``dpu`` unchanged (possibly None) when no chaos knob is set, so
+    every pre-existing scenario constructs the exact same sidecar as before
+    — the partition windows live in :class:`LinkParams` and are pure clock
+    comparisons, so the merged configs also draw zero extra randomness.
+    """
+    import dataclasses
+    f = fault
+    uplink_chaos = (f.uplink_blackout_start >= 0.0 or f.uplink_corrupt_p > 0.0
+                    or f.uplink_duplicate_p > 0.0)
+    if not (uplink_chaos or f.dpu_crash_at >= 0.0
+            or f.downlink_partition_start >= 0.0):
+        return dpu
+    dp = dpu or DPUParams()
+    if uplink_chaos:
+        up = dp.uplink
+        if f.uplink_blackout_start >= 0.0:
+            up = dataclasses.replace(up,
+                                     partition_start=f.uplink_blackout_start,
+                                     partition_duration=f.uplink_blackout_s)
+        if f.uplink_corrupt_p > 0.0:
+            up = dataclasses.replace(up, corrupt_p=f.uplink_corrupt_p)
+        if f.uplink_duplicate_p > 0.0:
+            up = dataclasses.replace(up, duplicate_p=f.uplink_duplicate_p)
+        dp = dataclasses.replace(dp, uplink=up)
+    if f.downlink_partition_start >= 0.0:
+        down = dataclasses.replace(dp.downlink,
+                                   partition_start=f.downlink_partition_start,
+                                   partition_duration=f.downlink_partition_s)
+        dp = dataclasses.replace(dp, downlink=down)
+    if f.dpu_crash_at >= 0.0:
+        dp = dataclasses.replace(dp, crash_at=f.dpu_crash_at,
+                                 restart_after=f.dpu_restart_after)
+    return dp
+
+
 def run_scenario(fault: FaultSpec,
                  params: SimParams | None = None,
                  workload: WorkloadSpec | None = None,
@@ -1832,7 +1912,9 @@ def run_scenario(fault: FaultSpec,
 
     The returned plane is always the inner :class:`TelemetryPlane`
     (findings / attributions / actions), whichever topology produced it; in
-    dpu mode the sidecar itself is reachable as ``sim.plane``.
+    dpu mode the sidecar itself is reachable as ``sim.plane``.  With
+    ``params.watchdog`` set the returned plane is the :class:`Watchdog`
+    (same findings/attributions/actions surface, merged with the standby's).
     """
     import dataclasses
     params = params or SimParams()
@@ -1846,12 +1928,17 @@ def run_scenario(fault: FaultSpec,
     if mode == "dpu":
         plane = TelemetryPlane(n_nodes=params.n_nodes, mitigate=False,
                                tables=tables)
-        side = DPUSidecar(plane, params.dpu, seed=params.seed,
+        dp = _merge_chaos(params.dpu, fault)
+        side = DPUSidecar(plane, dp, seed=params.seed,
                           mitigate=mitigate)
-        sim = ClusterSim(params, workload, fault, side)
-        side.bind(sim)
+        ctrl = side
+        if params.watchdog is not None:
+            ctrl = Watchdog(side, params.watchdog, tables=tables,
+                            mitigate=mitigate)
+        sim = ClusterSim(params, workload, fault, ctrl)
+        ctrl.bind(sim)
         metrics = sim.run()
-        return metrics, plane, sim
+        return metrics, (ctrl if params.watchdog is not None else plane), sim
     if mode not in ("none", "instant"):
         raise ValueError(f"unknown control mode {mode!r}")
     plane = TelemetryPlane(n_nodes=params.n_nodes,

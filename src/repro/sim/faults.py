@@ -12,7 +12,11 @@ from __future__ import annotations
 import dataclasses
 from dataclasses import dataclass, field
 
-from repro.dpu import DPUParams, LinkParams  # noqa: F401 (LinkParams: views)
+from repro.dpu import (  # noqa: F401 (LinkParams: views)
+    DPUParams,
+    LinkParams,
+    WatchdogParams,
+)
 from repro.sim.cluster import FaultSpec, SimParams
 from repro.sim.workload import WorkloadSpec
 
@@ -245,6 +249,41 @@ def make_scenarios() -> dict[str, Scenario]:
         params=_pm(duration=3.0, control="dpu",
                    dpu=DPUParams(cooldown=0.25, flap_window=1.5,
                                  flap_limit=2)))
+
+    # ---------------- monitoring plane (mon table) ----------------
+    # These break the watcher, not the watched: the cluster workload stays
+    # healthy and the chaos knobs hit the sidecar / its links.  All three
+    # run the asynchronous dpu loop.
+    #
+    # DPU crash at t=1.0, warm restart 0.5 s later: heartbeats stop, the
+    # host watchdog fails over within silence_timeout, the standby plane's
+    # outage detector confirms, and the degraded controller actuates
+    # failover_controller host-side (the dead DPU obviously can't).
+    add("dpu_outage", "dpu_outage",
+        FaultSpec(start=1.0, dpu_crash_at=1.0, dpu_restart_after=0.5),
+        params=_pm(duration=3.0, control="dpu", dpu=DPUParams(),
+                   watchdog=WatchdogParams()))
+    # telemetry uplink goes dark for 0.3 s: the ingest guard sees the batch
+    # sequence gap when the stream resumes, latches the blackout, opens a
+    # quarantine window (detectors re-warm, no actuation on stale state),
+    # and the blackout row drives resync_telemetry over the healthy
+    # downlink once quarantine lifts.
+    add("telemetry_blackout", "telemetry_blackout",
+        FaultSpec(start=1.0, uplink_blackout_start=1.0,
+                  uplink_blackout_s=0.3),
+        params=_pm(duration=3.0, control="dpu", dpu=DPUParams()))
+    # command downlink partitions for 0.7 s: liveness pings (20 ms cadence)
+    # burn their retries with zero acks, the bus latches exhaustion into
+    # self-telemetry, and the watchdog's OOB read of the same counters
+    # fails over so the host-side controller can actuate what the dead
+    # channel cannot deliver.  The partition lifts at 1.7 and the watchdog
+    # fails back after its hysteresis hold.
+    add("command_partition", "command_partition",
+        FaultSpec(start=1.0, downlink_partition_start=1.0,
+                  downlink_partition_s=0.7),
+        params=_pm(duration=3.0, control="dpu",
+                   dpu=DPUParams(ping_every=0.02),
+                   watchdog=WatchdogParams()))
 
     # healthy baseline (false-positive budget measurement)
     s["healthy"] = Scenario(name="healthy", row_id="",

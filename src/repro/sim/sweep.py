@@ -217,13 +217,16 @@ def main(argv: list[str] | None = None) -> int:
     if args.smoke:
         # the CI-sized grid covers one row per family plus the routing
         # pathologies the hierarchical router owns (telemetry-borne stale
-        # view, intra-replica placement skew) and the three 3(e) rows
-        # (per-collective straggler, rail congestion, memory-knee cliff)
+        # view, intra-replica placement skew), the three 3(e) rows
+        # (per-collective straggler, rail congestion, memory-knee cliff),
+        # and the three monitoring-plane chaos rows (DPU outage, telemetry
+        # blackout, command partition)
         cfg = SweepConfig(
             scenarios=("healthy", "tp_straggler", "hot_replica",
                        "stale_router_view", "hierarchical_routing_skew",
                        "collective_straggler", "rail_congestion",
-                       "hbm_bandwidth_cliff"),
+                       "hbm_bandwidth_cliff", "dpu_outage",
+                       "telemetry_blackout", "command_partition"),
             seeds=(0,), workers=args.workers or 2,
             scalar_synth=args.scalar_synth, mitigate=args.mitigate)
     else:

@@ -1,0 +1,384 @@
+"""Monitoring-plane chaos tests (repro.dpu robustness layer).
+
+Covers the chaos-capable transport (partition windows, corruption,
+duplication — and the zero-RNG contract that keeps every pre-existing
+golden bit-identical), the wire framing (batch_seq / content checksums),
+the ingest guard (gaps, replays, corruption, the latched dirty flag), the
+command bus's exponential backoff and retry exhaustion, the policy engine's
+actuation quarantine, DPU crash/restart semantics (ring loss, detector
+reset, post-restart quarantine), post-blackout backlog floods against the
+ingest budget, and the host-side watchdog's failover/failback state
+machine with its degraded-mode controller.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.attribution import Attribution
+from repro.core.detectors import META_TAP_DEBUG, Finding
+from repro.core.events import EventBatchBuilder, EventKind
+from repro.core.telemetry import TelemetryPlane
+from repro.dpu import (
+    PING_ACTION,
+    CommandBus,
+    DPUBudget,
+    DPUParams,
+    DPUSidecar,
+    IngestGuard,
+    LinkParams,
+    ModeledLink,
+    PolicyEngine,
+    Watchdog,
+    WatchdogParams,
+)
+from repro.dpu.policy import Command
+
+
+def _finding(name="tp_straggler", ts=1.0, node=1, severity="warn",
+             score=5.0):
+    return Finding(name=name, table="3c", ts=ts, severity=severity,
+                   node=node, device=-1, stage="s", root_cause="r",
+                   directive="d", score=score)
+
+
+def _att(name="tp_straggler", ts=1.0, node=1, severity="warn",
+         confidence=0.9, score=5.0, locus="device_scheduling"):
+    return Attribution(ts=ts, locus=locus, node=node, confidence=confidence,
+                       primary=_finding(name, ts, node, severity, score),
+                       supporting=(), narrative="n")
+
+
+def _batch(n, ts0=0.0, kind=EventKind.QUEUE_SAMPLE, meta=META_TAP_DEBUG):
+    b = EventBatchBuilder()
+    for i in range(n):
+        b.add(ts0 + i * 1e-5, int(kind), i % 4, meta=meta)
+    return b.build(sort=True)
+
+
+def _cmd(cmd_id=1, ts=0.0, action="tune_transport", node=1):
+    return Command(cmd_id=cmd_id, ts=ts, action=action, node=node,
+                   row_id="r", locus="l")
+
+
+class TestPartitionWindow:
+    def test_drops_exactly_inside_window(self):
+        link = ModeledLink(LinkParams(delay=1e-3, partition_start=1.0,
+                                      partition_duration=0.5),
+                           np.random.default_rng(0))
+        assert link.send(0.5, "before")
+        assert not link.send(1.0, "at-start")       # window is closed-open
+        assert not link.send(1.499, "inside")
+        assert link.send(1.5, "at-end")
+        assert link.partition_dropped == 2
+        assert link.dropped == 2
+        got = link.deliver(2.0)
+        assert got == ["before", "at-end"]
+
+    def test_inactive_window_consumes_no_randomness(self):
+        # satellite 2 regression: a configured-but-inactive partition window
+        # (and the corrupt/duplicate knobs at zero) must draw nothing from
+        # the generator — the golden contract for every pre-existing
+        # scenario is "zero knobs => zero draws", and the partition window
+        # is pure clock comparison even when it fires
+        rng = np.random.default_rng(7)
+        before = rng.bit_generator.state
+        link = ModeledLink(LinkParams(delay=1e-3, partition_start=5.0,
+                                      partition_duration=1.0), rng)
+        for i in range(50):
+            link.send(i * 1e-3, i)                  # all before the window
+        for i in range(10):
+            link.send(5.1 + i * 1e-3, i)            # all inside: dropped
+        link.deliver(10.0)
+        assert rng.bit_generator.state == before
+        assert link.partition_dropped == 10
+
+
+class TestCorruptionAndDuplication:
+    def test_corruptor_applied_per_coin(self):
+        link = ModeledLink(LinkParams(delay=1e-3, corrupt_p=1.0),
+                           np.random.default_rng(0),
+                           corruptor=lambda p: ("rot", p))
+        link.send(0.0, "x")
+        assert link.deliver(1.0) == [("rot", "x")]
+        assert link.corrupted == 1
+
+    def test_duplicate_delivers_replay_later(self):
+        link = ModeledLink(LinkParams(delay=1e-3, duplicate_p=1.0),
+                           np.random.default_rng(0))
+        link.send(0.0, "x")
+        assert link.deliver(1e-3) == ["x"]
+        assert link.deliver(1.0) == ["x"]           # replay: one delay later
+        assert link.duplicated == 1
+
+
+class TestWireFraming:
+    def test_content_checksum_is_stable_and_sensitive(self):
+        b = _batch(20)
+        assert b.content_checksum() == _batch(20).content_checksum()
+        rotted = _batch(20)
+        rotted.size[3] ^= 0x5A5A
+        assert rotted.content_checksum() != b.content_checksum()
+
+    def test_guard_detects_gap_replay_and_corruption(self):
+        g = IngestGuard()
+        b1, b2, b4 = _batch(5), _batch(5), _batch(5)
+        b1.batch_seq, b2.batch_seq, b4.batch_seq = 1, 2, 4
+        assert g.admit(b1) and g.admit(b2)
+        assert not g.dirty
+        assert g.admit(b4)                          # gap: admitted, latched
+        assert g.dirty and g.fresh_gap
+        assert g.gaps == 1 and g.missing == 1
+        assert not g.admit(b2)                      # replay: dropped
+        assert g.replays == 1
+        bad = _batch(5)
+        bad.batch_seq = 5
+        bad.checksum = bad.content_checksum()
+        bad.size[0] ^= 1
+        assert not g.admit(bad)                     # corrupt: dropped
+        assert g.corrupt == 1
+        g.resync()
+        assert not g.dirty and not g.fresh_gap
+        assert g.gaps == 1                          # history survives resync
+
+    def test_unstamped_batches_pass(self):
+        g = IngestGuard()
+        assert g.admit(_batch(5))                   # batch_seq == -1
+        assert g.last_seq == -1 and not g.dirty
+
+
+class TestCommandBusBackoff:
+    def test_backoff_schedule_doubles_and_caps(self):
+        bus = CommandBus(None, np.random.default_rng(0),
+                         ack_timeout=10e-3, ack_backoff=2.0,
+                         ack_timeout_cap=0.25)
+        assert bus.backoff_delay(1) == pytest.approx(10e-3)
+        assert bus.backoff_delay(2) == pytest.approx(20e-3)
+        assert bus.backoff_delay(3) == pytest.approx(40e-3)
+        assert bus.backoff_delay(10) == 0.25        # capped
+
+    def test_exhaustion_counts_and_fires_callback(self):
+        # a fully dark downlink: every attempt is dropped, retries back off
+        # 10 -> 20 ms, then the third attempt exhausts the budget
+        expired = []
+        bus = CommandBus(None, np.random.default_rng(0),
+                         down=LinkParams(delay=1e-3, drop_p=1.0),
+                         ack_timeout=10e-3, max_retries=3, stale_after=5.0,
+                         on_expired=lambda c, ex: expired.append((c, ex)))
+        bus.send(_cmd(ts=0.0), 0.0)
+        t, resend_times = 0.0, []
+        while t < 0.2:
+            before = bus.stats.retries
+            bus.advance(t)
+            if bus.stats.retries > before:
+                resend_times.append(round(t, 3))
+            t += 1e-3
+        assert resend_times == [0.01, 0.03]         # 10 ms then +20 ms
+        assert bus.stats.exhausted == 1
+        assert bus.stats.expired == 1
+        assert len(expired) == 1 and expired[0][1] is True
+        assert not bus._outstanding
+
+    def test_stale_expiry_is_not_exhaustion(self):
+        bus = CommandBus(None, np.random.default_rng(0),
+                         down=LinkParams(delay=1e-3, drop_p=1.0),
+                         ack_timeout=10e-3, max_retries=10, stale_after=0.02)
+        bus.send(_cmd(ts=0.0), 0.0)
+        for t in (0.01, 0.03, 0.05):
+            bus.advance(t)
+        assert bus.stats.expired == 1
+        assert bus.stats.exhausted == 0             # staleness, not retries
+
+    def test_ping_acks_without_actuating(self):
+        bus = CommandBus(None, np.random.default_rng(0),
+                         down=LinkParams(delay=1e-3))
+        bus.send(_cmd(cmd_id=-1, action=PING_ACTION, node=-1), 0.0)
+        for t in (1e-3, 2e-3, 3e-3):
+            bus.advance(t)
+        assert bus.stats.acked == 1
+        assert bus.stats.applied == 0
+        assert bus.log == []
+
+    def test_drop_outstanding_forgets_without_accounting(self):
+        bus = CommandBus(None, np.random.default_rng(0),
+                         down=LinkParams(delay=1e-3, drop_p=1.0))
+        bus.send(_cmd(cmd_id=1), 0.0)
+        bus.send(_cmd(cmd_id=2, node=2), 0.0)
+        assert bus.drop_outstanding() == 2
+        bus.advance(1.0)
+        assert bus.stats.expired == 0 and bus.stats.exhausted == 0
+
+
+class TestPolicyQuarantine:
+    def _engine(self):
+        return PolicyEngine(min_confidence=0.5, confirmations=1,
+                            cooldown=0.1)
+
+    def test_quarantine_suppresses_and_expires(self):
+        pe = self._engine()
+        pe.quarantine(2.0)
+        pe.observe(_att(ts=1.0))
+        assert pe.decide(1.0) == []
+        assert pe.quarantined == 1
+        assert any(s[0] == "quarantine" for s in pe.suppressed)
+        # staged state was cleared: the pre-quarantine sighting is gone and
+        # a fresh post-quarantine attribution re-confirms from zero
+        pe.observe(_att(ts=2.5))
+        cmds = pe.decide(2.5)
+        assert len(cmds) == 1
+
+    def test_quarantine_only_extends(self):
+        pe = self._engine()
+        pe.quarantine(3.0)
+        pe.quarantine(2.0)                          # earlier: ignored
+        assert pe.quarantine_until == 3.0
+
+    def test_no_double_trigger_during_quarantine(self):
+        # satellite 3: a dpu_saturation attribution arriving while the
+        # post-blackout quarantine holds must not actuate — and must not
+        # leave half-confirmed state that actuates the instant the window
+        # closes without fresh evidence
+        pe = self._engine()
+        pe.quarantine(2.0)
+        pe.observe(_att(name="dpu_saturation", ts=1.5, node=-1,
+                        locus="telemetry_plane"))
+        assert pe.decide(1.5) == []
+        assert pe.decide(2.1) == []                 # no stale carryover
+        assert pe.quarantined == 1
+
+    def test_expired_callback_clears_cooldown(self):
+        pe = PolicyEngine(min_confidence=0.5, confirmations=1, cooldown=10.0)
+        pe.observe(_att(ts=1.0))
+        cmds = pe.decide(1.0)
+        assert len(cmds) == 1
+        # without the callback, the cooldown blocks re-issue for 10 s
+        pe.observe(_att(ts=1.2))
+        assert pe.decide(1.2) == []
+        pe.on_expired(cmds[0], True)                # bus gave up on it
+        pe.observe(_att(ts=1.4))
+        assert len(pe.decide(1.4)) == 1
+
+
+class TestBudgetCrashAndFlood:
+    def test_crash_loses_ring_and_resets_drain_clock(self):
+        budget = DPUBudget(events_per_s=1000.0, ring_events=1000)
+        budget.offer(_batch(100))
+        budget.drain(0.0)
+        lost = budget.crash()
+        assert lost == 100
+        assert budget.backlog == 0
+        assert budget.events_shed == 100            # lost rows are shed rows
+        # the drain clock reset: no phantom credit accrues across dead time
+        budget.offer(_batch(100, ts0=1.0))
+        assert budget.drain(5.0) == []              # anchor, not 5 s credit
+        out = budget.drain(5.010)
+        # ~10 ms of credit at 1000 rows/s (float credit may floor to 9)
+        assert sum(len(b) for b in out) in (9, 10)
+
+    def test_post_blackout_flood_sheds_fifo(self):
+        # satellite 3: when a blackout lifts, the uplink delivers the
+        # backlog in one burst; the ring must absorb up to capacity and
+        # shed the overflow tail with exact accounting
+        budget = DPUBudget(events_per_s=1e5, ring_events=200)
+        shed = budget.offer(_batch(500, ts0=1.0))
+        assert shed == 300
+        assert budget.backlog == 200
+        assert budget.events_offered == 500
+        assert budget.events_accepted == 200
+        assert budget.events_shed == 300
+        # FIFO: what survived is the oldest prefix of the flood
+        rows = [t for b in [*budget.drain(2.0), *budget.drain(3.0)]
+                for t in b.ts.tolist()]
+        assert rows == sorted(rows)
+        assert len(rows) == 200
+        assert rows[0] == pytest.approx(1.0)
+
+
+def _drive(side, until, dt=2e-3, rate_per_step=4, start=0.0):
+    """Feed a steady healthy tap and pump the sidecar/watchdog loop."""
+    t = start
+    while t < until:
+        b = EventBatchBuilder()
+        for i in range(rate_per_step):
+            b.add(t + i * 1e-5, int(EventKind.QUEUE_SAMPLE), i % 4,
+                  meta=META_TAP_DEBUG)
+        side.observe_batch(b.build(sort=True))
+        side.advance(t)
+        t += dt
+    return t
+
+
+class TestSidecarCrashRestart:
+    def _mk(self, **dpu_kw):
+        plane = TelemetryPlane(n_nodes=4, mitigate=False)
+        side = DPUSidecar(plane, DPUParams(**dpu_kw), mitigate=False)
+        return plane, side
+
+    def test_crash_freezes_heartbeat_and_drops_frames(self):
+        _, side = self._mk(crash_at=0.5)            # no restart: stays down
+        _drive(side, 1.0)
+        assert side.crashed
+        assert side.heartbeat_ts < 0.5
+        assert side.crash_dropped > 0
+        assert side.budget.backlog == 0             # ring died with it
+
+    def test_restart_rejoins_with_sequence_gap(self):
+        _, side = self._mk(crash_at=0.5, restart_after=0.2)
+        _drive(side, 1.2)
+        assert not side.crashed
+        assert side.restarts == 1
+        assert side.guard.gaps >= 1                 # rejoined mid-stream
+        assert side.guard.dirty                     # latched until resync
+        assert side.heartbeat_ts >= 1.19            # alive again
+        side.resync(1.2)
+        assert not side.guard.dirty
+
+    def test_crash_resets_detector_state_not_logs(self):
+        plane, side = self._mk(crash_at=0.5, restart_after=0.2)
+        plane.findings.append("sentinel")           # the experiment record
+        _drive(side, 0.6)
+        assert plane.findings[0] == "sentinel"
+
+
+class TestWatchdogStateMachine:
+    def _mk(self, wd_kw=None, **dpu_kw):
+        plane = TelemetryPlane(n_nodes=4, mitigate=False)
+        side = DPUSidecar(plane, DPUParams(**dpu_kw), mitigate=False)
+        wd = Watchdog(side, WatchdogParams(**(wd_kw or {})), mitigate=False)
+        return plane, side, wd
+
+    def test_failover_on_silence_then_hysteretic_failback(self):
+        _, side, wd = self._mk(crash_at=0.5, restart_after=0.3)
+        _drive(wd, 0.5)
+        assert wd.state == Watchdog.NORMAL and wd.failovers == 0
+        _drive(wd, 0.7, start=0.5)
+        assert wd.state == Watchdog.FALLBACK        # silence > 80 ms
+        assert wd.failovers == 1
+        # DPU back at 0.8; failback only after 200 ms of continuous health
+        _drive(wd, 0.95, start=0.7)
+        assert wd.state == Watchdog.FALLBACK
+        _drive(wd, 1.2, start=0.95)
+        assert wd.state == Watchdog.NORMAL
+        assert wd.failbacks == 1
+
+    def test_standby_detects_outage_while_dpu_dark(self):
+        _, side, wd = self._mk(crash_at=0.5)        # never restarts
+        _drive(wd, 1.5)
+        assert wd.state == Watchdog.FALLBACK
+        names = {f.name for f in wd.standby.findings}
+        assert "dpu_outage" in names
+        # the merged view surfaces it to whoever holds the plane handle
+        assert "dpu_outage" in {f.name for f in wd.findings}
+
+    def test_force_failover_is_idempotent(self):
+        _, side, wd = self._mk()
+        assert wd.force_failover(0.1)
+        assert wd.state == Watchdog.FALLBACK and wd.failovers == 1
+        assert wd.force_failover(0.2)
+        assert wd.failovers == 1                    # already failed over
+
+    def test_no_failover_on_healthy_loop(self):
+        _, side, wd = self._mk()
+        _drive(wd, 1.0)
+        assert wd.state == Watchdog.NORMAL
+        assert wd.failovers == 0
+        assert {f.name for f in wd.standby.findings} == set()

@@ -39,7 +39,7 @@ class TestPlaneFuzz:
         for f in plane.findings:
             assert f.name in BY_ID               # only registered rows
             assert f.severity in ("warn", "critical")
-            assert f.table in ("3a", "3b", "3c", "3d")
+            assert f.table == BY_ID[f.name].table  # table matches registry
         for a in plane.attributions:
             assert 0.0 <= a.confidence <= 1.0
         rep = plane.report()

@@ -27,22 +27,25 @@ from repro.sim import SCENARIOS, run_scenario
 
 
 class TestRegistry:
-    def test_34_rows(self):
+    def test_37_rows(self):
         # the paper's 28 rows (3a/3b/3c) + the DP-routing extensions (3d:
         # cross-replica + intra-replica hierarchical) + the DPU
         # self-diagnosis row (dpu) + the collective/rail/memory tier (3e:
         # per-collective straggler, rail congestion, HBM-bandwidth cliff)
-        assert len(ALL_RUNBOOKS) == 34
+        # + the monitoring-plane rows (mon: DPU outage, telemetry blackout,
+        # command partition)
+        assert len(ALL_RUNBOOKS) == 37
         assert len(BY_TABLE["3a"]) == 9
         assert len(BY_TABLE["3b"]) == 10
         assert len(BY_TABLE["3c"]) == 9
         assert len(BY_TABLE["3d"]) == 2
         assert len(BY_TABLE["3e"]) == 3
         assert len(BY_TABLE["dpu"]) == 1
+        assert len(BY_TABLE["mon"]) == 3
 
     def test_one_detector_per_row(self):
         dets = build_detectors()
-        assert len(dets) == 34
+        assert len(dets) == 37
         for entry in ALL_RUNBOOKS:
             assert entry.row_id in dets
             assert dets[entry.row_id].name == entry.row_id
@@ -58,7 +61,7 @@ class TestRegistry:
             assert entry.action in ACTIONS, entry.row_id
 
     def test_detector_count_matches(self):
-        assert len(ALL_DETECTORS) == 34
+        assert len(ALL_DETECTORS) == 37
 
     def test_sibling_rows_are_real_rows(self):
         from repro.core.runbooks import BY_ID
@@ -166,6 +169,56 @@ class TestNeverFalseFire:
         fired = {f.name for f in plane.findings}
         assert sc.row_id in fired
         assert fired & set(self.NEW_ROWS) == {sc.row_id}
+
+
+class TestMonNeverFalseFire:
+    """The monitoring-plane rows watch the watcher, so their false-fire
+    budget is the strictest: a spurious dpu_outage fails over the whole
+    control plane.  Silent on every baseline, silent when the supervision
+    machinery (watchdog probes, liveness pings, checksummed batches) is
+    fully enabled on a healthy monitoring plane, and each chaos scenario
+    trips only its own row — plus the one declared cascade (a DPU restart
+    really does leave a telemetry gap behind)."""
+
+    MON_ROWS = ("dpu_outage", "telemetry_blackout", "command_partition")
+
+    @pytest.mark.parametrize("name", ["healthy", "healthy_replicated"])
+    def test_silent_on_baselines(self, name):
+        sc = SCENARIOS[name]
+        _, plane, _ = run_scenario(sc.fault, sc.params, sc.workload)
+        assert not {f.name for f in plane.findings} & set(self.MON_ROWS)
+
+    def test_silent_with_supervision_on(self):
+        # healthy cluster under the full monitoring-plane stack: sidecar
+        # with liveness pings and batch checksums, watchdog probing over
+        # the OOB port.  Nothing may fire and the watchdog must never
+        # fail over.
+        import dataclasses
+        from repro.dpu import DPUParams, LinkParams, WatchdogParams
+        sc = SCENARIOS["healthy"]
+        params = dataclasses.replace(
+            sc.params, control="dpu",
+            dpu=DPUParams(ping_every=0.02,
+                          uplink=LinkParams(delay=1e-3, corrupt_p=1e-9)),
+            watchdog=WatchdogParams())
+        _, plane, _ = run_scenario(sc.fault, params, sc.workload)
+        assert {f.name for f in plane.findings} == set()
+        assert plane.failovers == 0
+        assert plane.sidecar.guard.gaps == 0
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("name", MON_ROWS)
+    def test_mon_scenarios_fire_only_their_row(self, name):
+        sc = SCENARIOS[name]
+        _, plane, _ = run_scenario(sc.fault, sc.params, sc.workload)
+        fired = {f.name for f in plane.findings}
+        assert sc.row_id in fired
+        # the restart path legitimately cascades: a crashed-then-restarted
+        # DPU resumes mid-stream, and that sequence gap IS a blackout
+        allowed = {sc.row_id}
+        if name == "dpu_outage":
+            allowed.add("telemetry_blackout")
+        assert fired & set(self.MON_ROWS) <= allowed
 
 
 class TestAttribution:
