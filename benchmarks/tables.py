@@ -673,6 +673,27 @@ def chaos(seed: int = 0) -> list[tuple]:
     The gate: every scenario still detects its row and still recovers —
     losing the monitoring plane mid-incident delays mitigation but never
     loses it.
+
+    Part B also runs every non-structural scenario a second time with a
+    hot standby sidecar attached (``chaos/hot/*`` rows): the standby
+    shadows the same tap and takes over under an OOB lease when the
+    primary dies.  Gate: the hot path recovers every scenario with at
+    least one promotion and zero stale-term applies, is never materially
+    slower than the degraded host failover (``ttm_hot <= ttm_deg +
+    TTM_EPS`` — the epsilon covers the modeled command-bus round trip
+    and one detector poll of phase, which the in-process host controller
+    does not pay), and is strictly faster in aggregate.  Scenarios whose
+    fault targets the standby pair itself (``standby_lag``,
+    ``split_brain_fenced``) are structural — they run hot-only.
+
+    Part C (election-safety gate): three schedules against the HEALTHY
+    workload with the full hot pair attached.  ``split_brain`` (OOB
+    partition + a downlink blip) must promote exactly once, fence every
+    stale-term command from the deposed-but-alive primary, never apply
+    one, and never degrade to host mode.  ``dual_dark`` (both sidecars
+    killed) must land in degraded host mode and fail back.
+    ``hot_healthy`` (no chaos) must stay completely quiet: term 1, zero
+    promotions, zero fences, zero findings.
     """
     from repro.core.runbooks import BY_TABLE, row_hit
     from repro.dpu import DPUParams, WatchdogParams
@@ -724,37 +745,140 @@ def chaos(seed: int = 0) -> list[tuple]:
             bad.append(f"A:{name}:{false_findings or [r.action for r in false_acts] or 'failover'}")
 
     # -- part B: every fault scenario survives a mid-incident DPU crash ----
+    # hot-vs-degraded epsilon: the standby actuates over the modeled
+    # command bus (one RTT) and keeps its detector poll phase instead of
+    # re-seeding it at failover; both together bound at one probe period
+    # plus one poll — anything beyond that is a real regression
+    TTM_EPS = 0.06
     faulted = [n for n, sc in SCENARIOS.items() if sc.row_id]
+    ttm_deg_all, ttm_hot_all = [], []
     for name in faulted:
         sc = SCENARIOS[name].variant(seed=seed)
-        fault = dataclasses.replace(sc.fault,
-                                    dpu_crash_at=sc.fault.start + 0.2,
-                                    dpu_restart_after=0.4)
+        # scenarios whose fault targets the standby pair itself carry a
+        # structural standby in their params — no degraded twin exists
+        structural = sc.params.standby is not None
+        start = sc.fault.start
+        per_mode = {}
+        for mode in (("hot",) if structural else ("deg", "hot")):
+            fault = dataclasses.replace(sc.fault,
+                                        dpu_crash_at=start + 0.2,
+                                        dpu_restart_after=0.4)
+            params = dataclasses.replace(
+                sc.params, duration=sc.params.duration + 2.0,
+                control="dpu",
+                standby=(sc.params.standby if structural
+                         else DPUParams() if mode == "hot" else None),
+                watchdog=WatchdogParams())
+            t0 = time.perf_counter()
+            m, plane, sim = run_scenario(fault, params, sc.workload,
+                                         mitigate=True)
+            wall = (time.perf_counter() - t0) * 1e6
+            fired = {f.name for f in plane.findings}
+            hit = row_hit(sc.row_id, fired)
+            ttm = (m.mitigated_ts - start if m.mitigated_ts >= 0
+                   else float("nan"))
+            per_mode[mode] = (ttm, hit, sim.fault.mitigated, plane, wall)
+        if "deg" in per_mode:
+            ttm, hit, rec, plane, wall = per_mode["deg"]
+            rows.append((
+                f"chaos/midcrash/{name}", wall,
+                f"hit={int(hit)};"
+                f"t_recover_s={ttm:.3f};"
+                f"recovered={int(rec)};"
+                f"restarts={plane.sidecar.restarts};"
+                f"failovers={plane.failovers};"
+                f"actions={len(plane.actions)}"))
+            if not (hit and rec):
+                bad.append(f"B:{name}")
+        ttm_h, hit, rec, plane, wall = per_mode["hot"]
+        el = plane.arbiter.report()
+        ttm_d = per_mode["deg"][0] if "deg" in per_mode else float("nan")
+        rows.append((
+            f"chaos/hot/{name}", wall,
+            f"hit={int(hit)};"
+            f"ttm_hot={ttm_h:.3f};"
+            f"ttm_degraded={ttm_d:.3f};"
+            f"recovered={int(rec)};"
+            f"promotions={plane.promotions};"
+            f"fenced={el['fenced']};"
+            f"stale_applied={el['stale_applied']}"))
+        if not (hit and rec and plane.promotions >= 1
+                and el["stale_applied"] == 0):
+            bad.append(f"B:hot:{name}")
+        if "deg" in per_mode:
+            if not (ttm_h == ttm_h and ttm_h <= ttm_d + TTM_EPS):
+                bad.append(f"B:ttm:{name}:{ttm_h:.3f}>{ttm_d:.3f}+eps")
+            ttm_deg_all.append(ttm_d)
+            ttm_hot_all.append(ttm_h)
+    mean_d = sum(ttm_deg_all) / max(len(ttm_deg_all), 1)
+    mean_h = sum(ttm_hot_all) / max(len(ttm_hot_all), 1)
+    # the hot pair must strictly beat degraded failover in aggregate:
+    # its whole price of admission is the shadowed-warm detector state
+    if not mean_h < mean_d:
+        bad.append(f"B:ttm_mean:{mean_h:.3f}>={mean_d:.3f}")
+
+    # -- part C: election safety on a healthy cluster ----------------------
+    c_schedules = {
+        # OOB partition hides the primary from the arbiter while a
+        # downlink blip trips bus-dark: the standby may only promote
+        # after the primary's delivered lease horizon expires, and every
+        # command the deposed-but-alive primary keeps sending is fenced
+        "split_brain": dict(oob_partition_start=1.0, oob_partition_s=0.6,
+                            downlink_partition_start=1.0,
+                            downlink_partition_s=0.18),
+        # both sidecars die: no standby to promote — degraded host mode
+        # (PR-7 path) with the host taking the term
+        "dual_dark": dict(dpu_crash_at=1.0, dpu_restart_after=0.6,
+                          standby_crash_at=1.0, standby_restart_after=0.6),
+        # control: an idle hot pair must be invisible
+        "hot_healthy": {},
+    }
+    for name, knobs in c_schedules.items():
+        fault = dataclasses.replace(base.fault, **knobs)
         params = dataclasses.replace(
-            sc.params, duration=sc.params.duration + 2.0, control="dpu",
+            base.params, duration=3.0, control="dpu",
+            dpu=DPUParams(ping_every=0.02), standby=DPUParams(),
             watchdog=WatchdogParams())
         t0 = time.perf_counter()
-        m, plane, sim = run_scenario(fault, params, sc.workload,
-                                     mitigate=True)
+        m, plane, _sim = run_scenario(fault, params, base.workload,
+                                      mitigate=True)
         wall = (time.perf_counter() - t0) * 1e6
-        fired = {f.name for f in plane.findings}
-        hit = row_hit(sc.row_id, fired)
-        start = sc.fault.start
-        ttm = (m.mitigated_ts - start if m.mitigated_ts >= 0
-               else float("nan"))
+        el = plane.arbiter.report()
+        false_findings = sorted({f.name for f in plane.findings} - mon_rows)
+        false_acts = [r.action for r in (plane.fallback.log
+                                         if plane.fallback else [])
+                      if r.action not in mon_actions]
         rows.append((
-            f"chaos/midcrash/{name}", wall,
-            f"hit={int(hit)};"
-            f"t_recover_s={ttm:.3f};"
-            f"recovered={int(sim.fault.mitigated)};"
-            f"restarts={plane.sidecar.restarts};"
+            f"chaos/election/{name}", wall,
+            f"false_findings={len(false_findings)};"
+            f"false_actions={len(false_acts)};"
+            f"promotions={plane.promotions};"
             f"failovers={plane.failovers};"
-            f"actions={len(plane.actions)}"))
-        if not (hit and sim.fault.mitigated):
-            bad.append(f"B:{name}")
+            f"failbacks={plane.failbacks};"
+            f"term={el['term']};"
+            f"fenced={el['fenced']};"
+            f"stale_applied={el['stale_applied']};"
+            f"state={plane.state}"))
+        ok = (not false_findings and not false_acts
+              and el["stale_applied"] == 0 and plane.state == "normal")
+        if name == "split_brain":
+            ok = ok and (plane.promotions == 1 and el["fenced"] >= 1
+                         and plane.failovers == 0)
+        elif name == "dual_dark":
+            ok = ok and (plane.failovers >= 1 and plane.promotions == 0
+                         and plane.failbacks >= 1)
+        else:  # hot_healthy
+            ok = ok and (plane.promotions == 0 and el["fenced"] == 0
+                         and plane.failovers == 0 and el["term"] == 1
+                         and not plane.findings)
+        if not ok:
+            bad.append(f"C:{name}")
     rows.append(("chaos/summary", 0.0,
                  f"schedules={len(schedules)};"
                  f"midcrash_scenarios={len(faulted)};"
+                 f"election_schedules={len(c_schedules)};"
+                 f"ttm_hot_mean={mean_h:.3f};"
+                 f"ttm_degraded_mean={mean_d:.3f};"
                  f"gate_ok={int(not bad)}"))
     if bad:
         raise AssertionError(f"chaos lane acceptance failed: {bad}")

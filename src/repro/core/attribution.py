@@ -81,6 +81,8 @@ DIRECT_LOCUS: dict[str, str] = {
     "dpu_outage": LOCUS_DPU,
     "telemetry_blackout": LOCUS_DPU,
     "command_partition": LOCUS_DPU,
+    "standby_lag": LOCUS_DPU,
+    "split_brain_fenced": LOCUS_DPU,
 }
 
 
@@ -384,6 +386,27 @@ class Attributor:
                     f"({f.evidence.get('retries', '?')} resends total). "
                     "Detection is intact but mitigation is dark — fail "
                     "actuation over host-side."))
+        if f.name == "standby_lag":
+            return Attribution(
+                f.ts, LOCUS_DPU, node=-1, confidence=0.85, primary=f,
+                supporting=(),
+                narrative=(
+                    "Hot standby lagging the primary by "
+                    f"{f.evidence.get('lag_ms', '?')} ms of tap time: the "
+                    "mirrored fan-out leg is degraded and a failover now "
+                    "would promote stale detector state — re-mirror the "
+                    "standby from retained tap history."))
+        if f.name == "split_brain_fenced":
+            return Attribution(
+                f.ts, LOCUS_DPU, node=-1, confidence=0.9, primary=f,
+                supporting=(),
+                narrative=(
+                    f"{f.evidence.get('fenced_commands', '?')} stale-term "
+                    "command(s) fenced at the host actuator under term "
+                    f"{f.evidence.get('granted_term', '?')}: a deposed "
+                    "sidecar is alive and still actuating — quiesce it "
+                    "with the current term and purge its outstanding "
+                    "commands."))
 
         # Fallback: direct single-vantage mapping.
         locus = DIRECT_LOCUS.get(f.name, LOCUS_UNKNOWN)

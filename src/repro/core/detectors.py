@@ -76,6 +76,16 @@ META_MON_BUS = 9         # QUEUE_SAMPLE: command-bus health (size =
 #                          cumulative retry exhaustions, depth = cumulative
 #                          retries; node = -1); emitted only between an
 #                          exhaustion and the next successful ack
+META_MON_STANDBY = 10    # QUEUE_SAMPLE: standby-shadow health probe (size =
+#                          standby tap-clock lag behind the primary in ms,
+#                          clamped at 0 — a dead *primary* is the outage
+#                          row's business; depth = 1 while the standby is
+#                          up, 0 while crashed; node = -1) — emitted by the
+#                          watchdog every probe while a standby exists
+META_MON_FENCE = 11      # QUEUE_SAMPLE: stale-term commands fenced by the
+#                          host actuator since the last probe (size =
+#                          fenced delta, depth = current granted term;
+#                          node = -1); emitted only when the delta is > 0
 
 
 def _ext_group(group: int) -> bool:
@@ -2450,6 +2460,99 @@ class CommandPartition(Detector):
                          retries=self._retries)]
 
 
+class StandbyLag(Detector):
+    """mon.4 — the hot standby's detector state fell measurably behind.
+
+    Signal source is the watchdog's standby-shadow probe
+    (``META_MON_STANDBY``): ``size`` carries how far the standby
+    sidecar's tap clock lags the primary's, in milliseconds.  A healthy
+    mirrored tap keeps the two within one link delay of each other; a
+    sustained lag means the standby leg of the fan-out is dropping or
+    partitioned, and a failover right now would promote a sidecar whose
+    detectors are warm on *stale* state.  Critical because the lag
+    silently voids the hot-failover guarantee — the deployment is one
+    primary fault away from a cold promotion.
+    """
+
+    name = "standby_lag"
+    table = "mon"
+    stage = "monitoring plane (redundancy silently degraded)"
+    root_cause = "standby tap leg dropping/partitioned, or standby " \
+                 "sidecar wedged while the primary stays healthy"
+    directive = "re-mirror the standby from the watchdog's retained tap " \
+                "history and resync its sequence stream"
+    interested = frozenset({EventKind.QUEUE_SAMPLE})
+
+    LAG_MS = 250             # one detector poll interval, with margin
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        self._lag_ms = 0
+        self._standby_up = 1
+        self._seen_this_poll = 0
+
+    def update(self, ev: Event) -> None:
+        if ev.kind != EventKind.QUEUE_SAMPLE or ev.meta != META_MON_STANDBY:
+            return
+        self.events_seen += 1
+        self._seen_this_poll += 1
+        self._lag_ms = int(ev.size)
+        self._standby_up = int(ev.depth)
+
+    def poll(self, now: float) -> list[Finding]:
+        seen, self._seen_this_poll = self._seen_this_poll, 0
+        if seen == 0 or self._lag_ms < self.LAG_MS:
+            return []
+        return [self._mk(now, score=8.5 + self._lag_ms / 1000.0,
+                         severity="critical", lag_ms=self._lag_ms,
+                         standby_up=self._standby_up)]
+
+
+class SplitBrainFenced(Detector):
+    """mon.5 — a stale-term command reached the host actuator.
+
+    Signal source is the watchdog's fencing probe (``META_MON_FENCE``):
+    ``size`` counts commands the actuator rejected since the last probe
+    because they carried a term older than the granted lease, ``depth``
+    is the term currently in force.  One fenced command is already an
+    incident: a deposed sidecar is alive, partitioned from the lease
+    arbiter, and still trying to drive mitigation — only the fence stood
+    between the cluster and double actuation.  Critical and immediate.
+    """
+
+    name = "split_brain_fenced"
+    table = "mon"
+    stage = "actuation path (double-actuation attempt blocked)"
+    root_cause = "deposed sidecar still actuating: OOB partition hid its " \
+                 "demotion while its command path stayed alive"
+    directive = "deliver the current term to the stale sidecar " \
+                "(quiesce it) and purge its outstanding commands"
+    interested = frozenset({EventKind.QUEUE_SAMPLE})
+
+    def __init__(self, cfg: DetectorConfig) -> None:
+        super().__init__(cfg)
+        self._fenced = 0
+        self._term = 0
+        self._seen_this_poll = 0
+
+    def update(self, ev: Event) -> None:
+        if ev.kind != EventKind.QUEUE_SAMPLE or ev.meta != META_MON_FENCE:
+            return
+        self.events_seen += 1
+        self._seen_this_poll += 1
+        self._fenced += int(ev.size)
+        self._term = int(ev.depth)
+
+    def poll(self, now: float) -> list[Finding]:
+        seen, self._seen_this_poll = self._seen_this_poll, 0
+        fenced, self._fenced = self._fenced, 0
+        if seen == 0 or fenced <= 0:
+            return []
+        return [self._mk(now, score=9.5 + fenced / 10.0,
+                         severity="critical", fenced_commands=fenced,
+                         granted_term=self._term)]
+
+
 ALL_DETECTORS: tuple[type[Detector], ...] = (
     # 3(a)
     BurstAdmissionBacklog, IngressStarvation, FlowSkewAcrossSessions,
@@ -2471,5 +2574,6 @@ ALL_DETECTORS: tuple[type[Detector], ...] = (
     # DPU self-diagnosis
     DPUSaturation,
     # monitoring-plane robustness
-    DPUOutage, TelemetryBlackout, CommandPartition,
+    DPUOutage, TelemetryBlackout, CommandPartition, StandbyLag,
+    SplitBrainFenced,
 )

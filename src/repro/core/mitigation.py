@@ -87,6 +87,15 @@ ACTIONS: dict[str, str] = {
     "resync_telemetry": "re-register the telemetry tap and resync the "
                         "batch sequence stream after an ingest gap; clears "
                         "the blackout latch once the stream is whole",
+    "remirror_standby": "replay the watchdog's retained tap history into "
+                        "the lagging standby sidecar and resync its "
+                        "sequence stream so its detector state catches "
+                        "back up to the primary's",
+    "fence_stale_controller": "deliver the currently granted lease term "
+                              "to any deposed-but-alive sidecar (quiesce "
+                              "it) and purge its outstanding commands; "
+                              "the fence itself already blocked the stale "
+                              "actuations",
 }
 
 # keep the two registries in lockstep: every runbook row must actuate

@@ -451,6 +451,36 @@ RUNBOOK_MON: tuple[RunbookEntry, ...] = (
         "command channel round-trips again",
         D.CommandPartition, action="failover_controller",
         scenario="command_partition"),
+    RunbookEntry(
+        "standby_lag", "mon", "Standby shadow lag (redundancy degraded)",
+        "The standby sidecar's tap clock falls a sustained quarter-second "
+        "or more behind the primary's while the primary stays healthy — "
+        "the mirrored tap leg is dropping or partitioned",
+        "Monitoring plane (hot-failover guarantee silently void)",
+        "Detection continues on the primary, but a failover right now "
+        "would promote detectors warm on stale state; the deployment is "
+        "one primary fault away from a cold promotion",
+        "Standby uplink partition/blackout on the fan-out leg, or a "
+        "wedged standby sidecar with a live primary",
+        "Re-mirror the standby from the watchdog's retained tap history "
+        "and resync its sequence stream; alert if lag recurs",
+        D.StandbyLag, action="remirror_standby",
+        scenario="standby_lag"),
+    RunbookEntry(
+        "split_brain_fenced", "mon", "Split-brain fenced (stale-term "
+        "command rejected)",
+        "The host actuator rejects commands stamped with a lease term "
+        "older than the granted one — a deposed sidecar is alive and "
+        "still trying to actuate",
+        "Actuation path (double-actuation attempt blocked at the fence)",
+        "Two controllers believe they lead; only the term fence prevents "
+        "conflicting mitigations racing each other on the same nodes",
+        "OOB management-port partition hid the demotion from the old "
+        "leader while its command downlink stayed alive",
+        "Deliver the current term to the stale sidecar (quiesce it) and "
+        "purge its outstanding commands; audit the fencing log",
+        D.SplitBrainFenced, action="fence_stale_controller",
+        scenario="split_brain_fenced"),
 )
 
 #: every table the full DPU agent runs (the paper's three runbooks, the

@@ -14,7 +14,12 @@ modeled transport and a bounded compute budget here:
                command bus -> host actuator (plus crash/restart chaos and
                an ingest guard over the batch sequence stream)
   watchdog   — host-side liveness supervision and degraded-mode failover
-               when the sidecar itself goes dark
+               when the sidecar itself goes dark; with a hot standby
+               attached, promoted to lease arbiter (election) over a
+               shadowed tap fan-out (transport.TapFanout)
+  election   — leader leases with term numbers over the modeled OOB port,
+               plus the fencing registry that rejects stale-term commands
+               at the host actuator (split-brain guard)
 
 ``sim.cluster.run_scenario(control="dpu")`` runs the full asynchronous
 loop; ``control="instant"`` preserves the legacy zero-latency topology for
@@ -23,13 +28,22 @@ golden parity.
 
 from repro.dpu.budget import DPUBudget
 from repro.dpu.command import PING_ACTION, BusStats, CommandBus
+from repro.dpu.election import (
+    ElectionArbiter,
+    FencedCommand,
+    FencingRegistry,
+    LeaderLease,
+    LeaseParams,
+)
 from repro.dpu.policy import CONFLICT_GROUPS, Command, PolicyEngine
 from repro.dpu.sidecar import DPUParams, DPUSidecar, IngestGuard
-from repro.dpu.transport import LinkParams, ModeledLink
+from repro.dpu.transport import LinkParams, ModeledLink, TapFanout
 from repro.dpu.watchdog import Watchdog, WatchdogParams
 
 __all__ = [
     "BusStats", "CONFLICT_GROUPS", "Command", "CommandBus", "DPUBudget",
-    "DPUParams", "DPUSidecar", "IngestGuard", "LinkParams", "ModeledLink",
-    "PING_ACTION", "PolicyEngine", "Watchdog", "WatchdogParams",
+    "DPUParams", "DPUSidecar", "ElectionArbiter", "FencedCommand",
+    "FencingRegistry", "IngestGuard", "LeaderLease", "LeaseParams",
+    "LinkParams", "ModeledLink", "PING_ACTION", "PolicyEngine", "TapFanout",
+    "Watchdog", "WatchdogParams",
 ]

@@ -35,7 +35,7 @@ regardless of whether the instant controller or the DPU path produced it.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 from repro.core.mitigation import ActionRecord, EngineControls
 from repro.dpu.policy import Command
@@ -64,6 +64,12 @@ class BusStats:
     duplicates: int = 0          # retry arrived after the original applied
     expired: int = 0             # gave up (retry exhaustion OR staleness)
     exhausted: int = 0           # subset of expired: burned every retry
+    fenced: int = 0              # stale-term command rejected by the actuator
+    # acks for *current* exchanges only: pings, applies, duplicate re-acks.
+    # A negative ack for a stale/superseded/fenced command closes out its
+    # retry state but is NOT channel liveness — a late straggler's nack
+    # must not clear an exhaustion latch (see sidecar self-telemetry).
+    live_acked: int = 0
     extra: dict = field(default_factory=dict)
 
 
@@ -90,6 +96,12 @@ class CommandBus:
         self.ack_timeout_cap = ack_timeout_cap
         self.on_ack = on_ack
         self.on_expired = on_expired
+        # hot-standby wiring (set by the watchdog when a standby exists):
+        # ``lease`` stamps outgoing commands with the sender's term;
+        # ``fencing`` is the shared host-actuator authority that rejects
+        # stale-term deliveries.  Both None on a legacy single-DPU bus.
+        self.lease = None
+        self.fencing = None
         self._outstanding: dict[int, _Outstanding] = {}
         self._applied_ids: set[int] = set()
         # newest applied command id per (action, node): supersession check
@@ -100,6 +112,12 @@ class CommandBus:
     # -- DPU side --------------------------------------------------------
 
     def send(self, cmd: Command, now: float) -> None:
+        if self.lease is not None and cmd.term == 0:
+            # the term is stamped at send time with whatever the sender
+            # currently believes — a deposed-but-alive sidecar keeps
+            # stamping its stale term, which is exactly what the host's
+            # fencing registry needs to see to reject it
+            cmd = replace(cmd, term=self.lease.term)
         self.stats.sent += 1
         self._outstanding[cmd.cmd_id] = _Outstanding(cmd, 1, now)
         self.down.send(now, cmd)
@@ -122,39 +140,56 @@ class CommandBus:
         applied_now: list[ActionRecord] = []
         for cmd in self.down.deliver(now):
             applied_now.extend(self._deliver(cmd, now))
-        for cmd, ok in self.ack.deliver(now):
+        for cmd, ok, live in self.ack.deliver(now):
             if cmd.cmd_id in self._outstanding:
                 del self._outstanding[cmd.cmd_id]
                 self.stats.acked += 1
+                if live:
+                    self.stats.live_acked += 1
                 if self.on_ack is not None:
                     self.on_ack(cmd, ok)
         self._retry(now)
         return applied_now
 
     def _deliver(self, cmd: Command, now: float) -> list[ActionRecord]:
+        if self.fencing is not None and not self.fencing.admit(cmd, now):
+            # stale-term sender: every command — pings included — is
+            # rejected at the door, the way a Raft follower nacks any RPC
+            # carrying an old term.  The nack is how a deposed leader
+            # learns; the FencedCommand record is the split-brain audit
+            # trail (split_brain_fenced row).
+            self.stats.fenced += 1
+            self.ack.send(now, (cmd, False, False))
+            return []
         if cmd.action == PING_ACTION:
             # liveness probe: ack immediately, never touch the actuator,
             # never log an ActionRecord — its only job is to measure the
             # round trip (or fail to, under partition)
-            self.ack.send(now, (cmd, True))
+            self.ack.send(now, (cmd, True, True))
             return []
         if cmd.cmd_id in self._applied_ids:
             # retry raced the ack: apply-at-most-once, re-ack
             self.stats.duplicates += 1
-            self.ack.send(now, (cmd, True))
+            self.ack.send(now, (cmd, True, True))
             return []
         if now - cmd.ts > self.stale_after:
             self.stats.stale_dropped += 1
-            self.ack.send(now, (cmd, False))
+            self.ack.send(now, (cmd, False, False))
             return []
         newest = self._newest_applied.get((cmd.action, cmd.node))
         if newest is not None and newest > cmd.cmd_id:
             self.stats.superseded += 1
-            self.ack.send(now, (cmd, False))
+            self.ack.send(now, (cmd, False, False))
             return []
         # actuators that need wall time (e.g. ReplicaSet view refresh) read
         # it from the detail; the command's own ts is its decision time
         detail = {**cmd.detail, "now": now}
+        if (self.fencing is not None and cmd.term > 0
+                and cmd.term < self.fencing.term):
+            # belt-and-braces: admit() already fenced stale terms, so this
+            # counter staying zero is the at-most-one-actuator proof the
+            # chaos lane asserts
+            self.fencing.stale_applied += 1
         ok = (self.engine.apply_action(cmd.action, cmd.node, detail)
               if self.engine is not None else False)
         self._applied_ids.add(cmd.cmd_id)
@@ -166,7 +201,7 @@ class CommandBus:
                            row_id=cmd.row_id, locus=cmd.locus, applied=ok,
                            detail=cmd.detail)
         self.log.append(rec)
-        self.ack.send(now, (cmd, ok))
+        self.ack.send(now, (cmd, ok, True))
         return [rec]
 
     def backoff_delay(self, attempt: int) -> float:

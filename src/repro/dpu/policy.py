@@ -80,6 +80,10 @@ class Command:
     node: int
     row_id: str
     locus: str
+    # leader-lease term stamped by the CommandBus at send time.  0 marks
+    # a legacy/unleased bus; the host actuator fences anything below the
+    # currently granted term (see repro.dpu.election.FencingRegistry).
+    term: int = 0
     detail: dict = field(default_factory=dict, compare=False)
 
 
@@ -133,6 +137,27 @@ class PolicyEngine:
         self._pending.clear()
         self._first_seen.clear()
         self._escalations.clear()
+
+    def drain_escalations(self) -> dict:
+        """Hand off every armed-but-unfired quorum escalation.  Called by
+        the watchdog at demotion: a pending cluster-scoped action is part
+        of the *lease* state (like a leadership transfer carrying the
+        log), not the controller's confirmation chain — dropping it with
+        the deposed controller would lose one-shot quorum evidence the
+        incoming leader can never re-observe."""
+        out = self._escalations
+        self._escalations = {}
+        return out
+
+    def adopt_escalations(self, esc: dict, now: float) -> None:
+        """Install escalations drained from a deposed controller.  The
+        original dwell deadline is preserved (never shortened — the
+        holdoff that keeps the escalated path slower than a working
+        per-node one must survive the handover), and an escalation this
+        engine armed on its own evidence wins over the adopted copy."""
+        for ekey, (due, a) in esc.items():
+            if ekey not in self._escalations:
+                self._escalations[ekey] = (max(due, now), a)
 
     def on_expired(self, cmd: Command, exhausted: bool) -> None:
         """Bus gave up on a command unacked.  Clear the pair's cooldown

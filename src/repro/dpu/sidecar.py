@@ -221,6 +221,15 @@ class DPUSidecar:
         self._exhausted_seen = 0
         self._bus_dirty = False       # latched: exhaustion with no ack since
         self.heartbeat_ts = 0.0       # advances only while alive (OOB port)
+        # hot-standby leadership (None on a legacy single-DPU deployment:
+        # the sidecar then always arbitrates, exactly the pre-lease paths).
+        # While a lease is attached but lapsed, detectors stay warm and
+        # fresh attributions accumulate in a bounded recall buffer that is
+        # replayed into the policy engine on promotion — that replay is
+        # what makes hot failover confirm faster than a replay re-warm.
+        self.lease = None
+        self.recall_s = 1.3
+        self._recent_atts: list = []
 
     # -- producer-facing plane protocol -----------------------------------
 
@@ -295,6 +304,27 @@ class DPUSidecar:
         with it the blackout self-telemetry)."""
         self.guard.resync()
 
+    # -- leadership (hot-standby pair) -------------------------------------
+
+    def on_lease_granted(self, now: float) -> None:
+        """Delivered lease grant: this sidecar now arbitrates.  The recall
+        buffer — attributions observed while shadowing — is replayed as
+        policy evidence so confirmation counts pick up where the deposed
+        leader's would have been, instead of restarting from zero."""
+        if self.policy is None:
+            return
+        for a in self._recent_atts:
+            self.policy.observe(a)
+        self._recent_atts.clear()
+
+    def drain_recall(self) -> list:
+        """Hand the recall buffer to the caller (the watchdog's demotion
+        handover): what this sidecar observed while shadowing, for the new
+        leader to re-arbitrate."""
+        out = self._recent_atts
+        self._recent_atts = []
+        return out
+
     # -- chaos: crash / restart -------------------------------------------
 
     def _crash(self, now: float) -> None:
@@ -309,6 +339,7 @@ class DPUSidecar:
             self.policy.crash_reset(now)
         if self.bus is not None:
             self.bus.drop_outstanding()
+        self._recent_atts.clear()     # recall buffer is DPU DRAM too
 
     def _restart(self, now: float) -> None:
         self.crashed = False
@@ -365,11 +396,22 @@ class DPUSidecar:
         self._self_telemetry()
         if self.policy is not None:
             atts = self.plane.attributions
-            for a in atts[self._att_i:]:
-                self.policy.observe(a)
+            fresh = atts[self._att_i:]
             self._att_i = len(atts)
-            for cmd in self.policy.decide(now):
-                self.bus.send(cmd, now)
+            if self.lease is None or self.lease.holds(now):
+                for a in fresh:
+                    self.policy.observe(a)
+                for cmd in self.policy.decide(now):
+                    self.bus.send(cmd, now)
+            else:
+                # shadow mode: a sidecar without a valid lease must not
+                # arbitrate, but it remembers what it saw so promotion
+                # can replay the recent evidence window
+                self._recent_atts.extend(fresh)
+                horizon = now - self.recall_s
+                if self._recent_atts and self._recent_atts[0].ts < horizon:
+                    self._recent_atts = [a for a in self._recent_atts
+                                         if a.ts >= horizon]
         if self.bus is not None:
             recs = self.bus.advance(now)
             if recs:
@@ -401,9 +443,12 @@ class DPUSidecar:
                   self.guard.replays, -1, -1, META_MON_INGEST, -1)
         if self.bus is not None:
             s = self.bus.stats
-            if s.acked > self._acked_seen:
+            # only live acks (pings, applies) clear the latch: a late
+            # straggler's stale/superseded/fenced nack closes its retry
+            # state but proves nothing about current channel health
+            if s.live_acked > self._acked_seen:
                 self._bus_dirty = False     # channel demonstrably round-trips
-            self._acked_seen = s.acked
+            self._acked_seen = s.live_acked
             if s.exhausted > self._exhausted_seen:
                 self._bus_dirty = True
             self._exhausted_seen = s.exhausted

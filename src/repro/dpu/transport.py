@@ -135,3 +135,43 @@ class ModeledLink:
             out.append(heapq.heappop(q)[2])
         self.delivered += len(out)
         return out
+
+
+class TapFanout:
+    """One producer flush delivered to N independent tap consumers.
+
+    Models the redundant management path of a hot-standby DPU pair: the
+    host telemetry tap is mirrored, and each sidecar's uplink is its own
+    ``ModeledLink`` with an independent delay/jitter/drop/partition
+    schedule.  Fan-out happens *before* frame stamping — every consumer
+    after the first receives a fresh frame wrapper (``fork``) around the
+    same immutable column arrays, so each leg stamps its own monotone
+    ``batch_seq`` and checksum (per-link ingest guards) and one leg's
+    in-place frame mutation can never corrupt another leg's view.
+    """
+
+    def __init__(self, *consumers) -> None:
+        if not consumers:
+            raise ValueError("TapFanout needs at least one consumer")
+        self.consumers = list(consumers)
+        self.forked = 0
+
+    @staticmethod
+    def fork(batch):
+        """New frame wrapper sharing ``batch``'s column arrays.
+
+        The copy starts unstamped (``batch_seq=-1``, no checksum): frame
+        identity is a per-link property, payload columns are shared.
+        """
+        from ..core.events import EventBatch
+        return EventBatch(batch.ts, batch.kind, batch.node, batch.device,
+                          batch.flow, batch.size, batch.depth, batch.op,
+                          batch.group, batch.meta, batch.replica)
+
+    def observe_batch(self, batch) -> None:
+        # secondaries get forks first: the primary's observe_batch stamps
+        # seq/checksum on the original frame in place
+        for consumer in self.consumers[1:]:
+            self.forked += 1
+            consumer.observe_batch(self.fork(batch))
+        self.consumers[0].observe_batch(batch)

@@ -163,6 +163,13 @@ class SimParams:
     # port, degraded fallback controller on failover.  None = no watchdog,
     # bit-identical to the plain sidecar topology.
     watchdog: "WatchdogParams | None" = None
+    # --- hot standby sidecar (repro.dpu.election) ---
+    # When set (requires watchdog), a second DPUSidecar shadows the same
+    # tap through a TapFanout over its own modeled uplink, and the watchdog
+    # is promoted to lease arbiter: primary dark -> hot promotion of the
+    # warm standby; both dark -> degraded host mode.  None = no standby,
+    # bit-identical to the single-sidecar topology.
+    standby: DPUParams | None = None
 
 
 @dataclass
@@ -243,6 +250,17 @@ class FaultSpec:
     downlink_partition_s: float = 0.0
     uplink_corrupt_p: float = 0.0      # per-batch bit-rot probability
     uplink_duplicate_p: float = 0.0    # per-batch replay probability
+    # --- hot-standby chaos (election / split-brain axes) ---
+    # These target the *redundant* half of the monitoring plane: the
+    # standby's own uplink copy of the tap, the standby card itself, and
+    # the OOB management port the lease renewals ride.  All are pure
+    # clock-window comparisons merged only when set — zero RNG draws.
+    standby_blackout_start: float = -1.0  # standby uplink partition window
+    standby_blackout_s: float = 0.0
+    standby_crash_at: float = -1.0     # standby card crash (<0 = never)
+    standby_restart_after: float = 0.0
+    oob_partition_start: float = -1.0  # OOB port partition (heartbeat +
+    oob_partition_s: float = 0.0       # lease renewals both dark inside)
     # --- intermittency ---
     # > 0: the fault is only active during alternating windows of this
     # length (fire/clear/fire...) — the oscillation that exercises the
@@ -514,6 +532,20 @@ class ClusterSim:
             if ctrl is not None and hasattr(ctrl, "force_failover"):
                 ctrl.force_failover(self._t)
                 return True
+            return matched
+        if action == "remirror_standby":
+            # replay the watchdog's retained tap window into the lagging
+            # standby and resync its sequence stream
+            ctrl = self._ctrl
+            if ctrl is not None and hasattr(ctrl, "remirror"):
+                return ctrl.remirror(self._t) or matched
+            return matched
+        if action == "fence_stale_controller":
+            # deliver the granted term to any deposed-but-alive sidecar so
+            # its stale command stream quiesces at the source
+            ctrl = self._ctrl
+            if ctrl is not None and hasattr(ctrl, "fence_stale"):
+                return ctrl.fence_stale(self._t) or matched
             return matched
         return matched
 
@@ -1892,6 +1924,37 @@ def _merge_chaos(dpu: DPUParams | None, fault: FaultSpec) -> DPUParams | None:
     return dp
 
 
+def _merge_standby_chaos(standby: DPUParams, fault: FaultSpec) -> DPUParams:
+    """Fold the standby-specific chaos knobs into the standby's params.
+
+    Same contract as :func:`_merge_chaos`: unchanged object when no knob is
+    set, pure clock windows when they are.
+    """
+    import dataclasses
+    f = fault
+    sp = standby
+    if f.standby_blackout_start >= 0.0:
+        up = dataclasses.replace(sp.uplink,
+                                 partition_start=f.standby_blackout_start,
+                                 partition_duration=f.standby_blackout_s)
+        sp = dataclasses.replace(sp, uplink=up)
+    if f.standby_crash_at >= 0.0:
+        sp = dataclasses.replace(sp, crash_at=f.standby_crash_at,
+                                 restart_after=f.standby_restart_after)
+    return sp
+
+
+def _merge_watchdog_chaos(wd: "WatchdogParams", fault: FaultSpec
+                          ) -> "WatchdogParams":
+    """Fold the OOB-port partition window into the watchdog params."""
+    import dataclasses
+    if fault.oob_partition_start < 0.0:
+        return wd
+    return dataclasses.replace(wd,
+                               oob_partition_start=fault.oob_partition_start,
+                               oob_partition_s=fault.oob_partition_s)
+
+
 def run_scenario(fault: FaultSpec,
                  params: SimParams | None = None,
                  workload: WorkloadSpec | None = None,
@@ -1933,8 +1996,21 @@ def run_scenario(fault: FaultSpec,
                           mitigate=mitigate)
         ctrl = side
         if params.watchdog is not None:
-            ctrl = Watchdog(side, params.watchdog, tables=tables,
-                            mitigate=mitigate)
+            standby = None
+            if params.standby is not None:
+                # the hot standby shadows the same tap over its own
+                # modeled uplink; a distinct derived seed keeps its link
+                # schedule independent of the primary's without touching
+                # the primary's draw sequence
+                sb_plane = TelemetryPlane(n_nodes=params.n_nodes,
+                                          mitigate=False, tables=tables)
+                sbp = _merge_standby_chaos(params.standby, fault)
+                standby = DPUSidecar(sb_plane, sbp,
+                                     seed=params.seed ^ 0x5B17,
+                                     mitigate=mitigate)
+            wd = _merge_watchdog_chaos(params.watchdog, fault)
+            ctrl = Watchdog(side, wd, tables=tables,
+                            mitigate=mitigate, standby=standby)
         sim = ClusterSim(params, workload, fault, ctrl)
         ctrl.bind(sim)
         metrics = sim.run()

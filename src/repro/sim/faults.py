@@ -284,6 +284,34 @@ def make_scenarios() -> dict[str, Scenario]:
         params=_pm(duration=3.0, control="dpu",
                    dpu=DPUParams(ping_every=0.02),
                    watchdog=WatchdogParams()))
+    # hot-standby pair, standby's own uplink dark for 0.9 s: the primary
+    # keeps leading (nothing cluster-facing is wrong) but the shadow's
+    # detector state falls behind the tap — redundancy is silently
+    # degraded, exactly the window where a primary failure would promote a
+    # stale standby.  The watchdog's probe rows carry the lag; the
+    # standby_lag row fires once it passes the threshold and
+    # remirror_standby replays the retained window to close the gap.
+    add("standby_lag", "standby_lag",
+        FaultSpec(start=1.0, standby_blackout_start=1.0,
+                  standby_blackout_s=0.9),
+        params=_pm(duration=3.0, control="dpu", dpu=DPUParams(),
+                   standby=DPUParams(), watchdog=WatchdogParams()))
+    # the split-brain opener: the OOB management port partitions (heartbeat
+    # reads freeze, lease renewals undeliverable) while the primary's
+    # command downlink is *also* dark, so the host-side corroborating probe
+    # sees no actuation either.  The primary's delivered lease horizon
+    # expires, the warm standby is promoted under a new term — and then the
+    # downlink heals first: the deposed primary (alive all along, lease
+    # lapsed, term stale) resumes its ping stream straight into the fencing
+    # registry.  Every stale-term command is rejected and recorded, zero
+    # double-actuations; the OOB port heals at 1.6 and the hysteretic
+    # failback re-grants the primary a fresh term.
+    add("split_brain_fenced", "split_brain_fenced",
+        FaultSpec(start=1.0, oob_partition_start=1.0, oob_partition_s=0.6,
+                  downlink_partition_start=1.0, downlink_partition_s=0.18),
+        params=_pm(duration=3.0, control="dpu",
+                   dpu=DPUParams(ping_every=0.02),
+                   standby=DPUParams(), watchdog=WatchdogParams()))
 
     # healthy baseline (false-positive budget measurement)
     s["healthy"] = Scenario(name="healthy", row_id="",

@@ -209,7 +209,8 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--mitigate", action="store_true",
                     help="attach the closed-loop mitigation controller")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI-sized grid: 3 scenarios x 1 seed, 2 workers")
+                    help="CI-sized grid: one row per family, 1 seed, "
+                         "2 workers")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the summary (and per-cell rows) to PATH")
     args = ap.parse_args(argv)
@@ -219,14 +220,16 @@ def main(argv: list[str] | None = None) -> int:
         # pathologies the hierarchical router owns (telemetry-borne stale
         # view, intra-replica placement skew), the three 3(e) rows
         # (per-collective straggler, rail congestion, memory-knee cliff),
-        # and the three monitoring-plane chaos rows (DPU outage, telemetry
-        # blackout, command partition)
+        # and the five monitoring-plane chaos rows (DPU outage, telemetry
+        # blackout, command partition, standby shadow lag, split-brain
+        # fencing)
         cfg = SweepConfig(
             scenarios=("healthy", "tp_straggler", "hot_replica",
                        "stale_router_view", "hierarchical_routing_skew",
                        "collective_straggler", "rail_congestion",
                        "hbm_bandwidth_cliff", "dpu_outage",
-                       "telemetry_blackout", "command_partition"),
+                       "telemetry_blackout", "command_partition",
+                       "standby_lag", "split_brain_fenced"),
             seeds=(0,), workers=args.workers or 2,
             scalar_synth=args.scalar_synth, mitigate=args.mitigate)
     else:

@@ -39,8 +39,12 @@ CHEAP_TABLES = ["table2_signals", "telemetry_perf", "table3d", "router",
 # findings), one both paths recover (early_completion), one whose fault
 # is claimed first by a declared sibling row (decode_early_stop ->
 # early_completion_skew; exercises the row_hit sibling gate), one
-# healthy baseline for the zero-false-positive-actions property
-CONTROL_LOOP_SMOKE = "early_completion,d2h_bottleneck,decode_early_stop,healthy"
+# healthy baseline for the zero-false-positive-actions property, and
+# the two hot-standby mon rows (structural standby pair in their
+# params; only the dpu cell can see their faults, which exercises the
+# instant-unrecovered accounting)
+CONTROL_LOOP_SMOKE = ("early_completion,d2h_bottleneck,decode_early_stop,"
+                      "standby_lag,split_brain_fenced,healthy")
 
 
 def _run_only(only: str) -> str:

@@ -382,3 +382,267 @@ class TestWatchdogStateMachine:
         assert wd.state == Watchdog.NORMAL
         assert wd.failovers == 0
         assert {f.name for f in wd.standby.findings} == set()
+
+
+# ---------------------------------------------------------------------------
+# hot-standby pair: tap fan-out, leader leases, fencing, promotion
+# ---------------------------------------------------------------------------
+
+from repro.dpu import (       # noqa: E402  (grouped with the suite they test)
+    ElectionArbiter,
+    FencingRegistry,
+    LeaseParams,
+    TapFanout,
+)
+
+
+class TestTapFanout:
+    def test_fanout_delivers_to_all_consumers(self):
+        p1 = TelemetryPlane(n_nodes=4, mitigate=False)
+        p2 = TelemetryPlane(n_nodes=4, mitigate=False)
+        a = DPUSidecar(p1, DPUParams(), mitigate=False)
+        b = DPUSidecar(p2, DPUParams(), mitigate=False, seed=1)
+        fan = TapFanout(a, b)
+        fan.observe_batch(_batch(8, ts0=0.0))
+        a.advance(0.01)
+        b.advance(0.01)
+        assert fan.forked == 1
+        # each consumer's guard saw the same (independently stamped) frame
+        assert a.guard.last_seq == b.guard.last_seq > -1
+        assert a.guard.gaps == 0 and b.guard.gaps == 0
+
+    def test_forks_are_independent_frames(self):
+        # the per-link sequence stamp is written into the frame in place:
+        # without a fork the second consumer would see the first link's
+        # batch_seq and its ingest guard would desynchronize immediately
+        p1 = TelemetryPlane(n_nodes=4, mitigate=False)
+        p2 = TelemetryPlane(n_nodes=4, mitigate=False)
+        a = DPUSidecar(p1, DPUParams(), mitigate=False)
+        # standby uplink partitioned mid-stream: its sequence stream must
+        # gap independently of the primary's
+        b = DPUSidecar(p2, DPUParams(
+            uplink=LinkParams(delay=1e-3, partition_start=0.04,
+                              partition_duration=0.04)),
+            mitigate=False, seed=1)
+        fan = TapFanout(a, b)
+        t = 0.0
+        for i in range(60):
+            fan.observe_batch(_batch(2, ts0=t))
+            a.advance(t)
+            b.advance(t)
+            t += 2e-3
+        assert a.guard.gaps == 0                    # primary stream whole
+        assert b.guard.gaps >= 1                    # standby gapped alone
+
+    def test_fork_copies_payload_not_reference(self):
+        batch = _batch(4)
+        fork = TapFanout.fork(batch)
+        assert fork.batch_seq == -1                 # unstamped copy
+        assert np.array_equal(fork.ts, batch.ts)
+        assert fork is not batch
+
+    def test_empty_fanout_rejected(self):
+        with pytest.raises(ValueError):
+            TapFanout()
+
+
+class TestElectionArbiter:
+    def _arb(self, lease_s=0.1):
+        arb = ElectionArbiter(LeaseParams(lease_s=lease_s))
+        arb.register("primary")
+        arb.register("standby")
+        return arb
+
+    def test_grant_renew_and_expiry(self):
+        arb = self._arb()
+        assert arb.grant("primary", 0.0) == 1
+        assert arb.holder_valid("primary", 0.05)
+        arb.renew(0.05)
+        assert arb.holder_valid("primary", 0.14)    # renewed past t=0.1
+        assert not arb.holder_valid("primary", 0.30)
+
+    def test_no_promotion_before_horizon_expires(self):
+        arb = self._arb()
+        arb.grant("primary", 0.0)
+        arb.renew(0.08)                             # horizon now 0.18
+        assert not arb.can_promote("standby", 0.10)
+        assert arb.grant("standby", 0.10) == 0      # refused, term unchanged
+        assert arb.registry.term == 1
+        assert arb.can_promote("standby", 0.18)
+        assert arb.grant("standby", 0.18) == 2
+        assert arb.registry.holder == "standby"
+
+    def test_undelivered_renewal_does_not_extend(self):
+        arb = self._arb()
+        arb.grant("primary", 0.0)
+        arb.renew(0.08, delivered=False)            # OOB partition: lost
+        assert arb.lost_renewals == 1
+        assert not arb.holder_valid("primary", 0.11)
+        assert arb.can_promote("standby", 0.10)     # horizon stayed at 0.1
+
+    def test_revoke_clamps_lease_and_horizon(self):
+        arb = self._arb()
+        arb.grant("primary", 0.0)
+        arb.revoke("primary", 0.02)
+        assert not arb.holder_valid("primary", 0.03)
+        assert arb.can_promote("standby", 0.02)
+
+    def test_terms_strictly_monotonic(self):
+        arb = self._arb(lease_s=0.01)
+        terms = []
+        t = 0.0
+        for holder in ("primary", "standby", "primary", "standby"):
+            t += 0.05                               # past every horizon
+            terms.append(arb.grant(holder, t))
+        assert terms == [1, 2, 3, 4]
+
+    def test_valid_leases_never_overlap(self):
+        arb = self._arb()
+        arb.grant("primary", 0.0)
+        arb.grant("standby", 0.2)                   # after horizon expiry
+        for t in (0.0, 0.05, 0.1, 0.15, 0.2, 0.25, 0.35):
+            assert len(arb.valid_holders(t)) <= 1
+
+
+class TestFencing:
+    def test_stale_term_command_is_fenced_and_recorded(self):
+        reg = FencingRegistry()
+        reg.term, reg.holder = 3, "standby"
+        from dataclasses import replace
+        stale = replace(_cmd(cmd_id=7), term=2)
+        fresh = replace(_cmd(cmd_id=8), term=3)
+        legacy = _cmd(cmd_id=9)                     # term 0: unleased bus
+        assert not reg.admit(stale, 1.0)
+        assert reg.admit(fresh, 1.0)
+        assert reg.admit(legacy, 1.0)
+        assert len(reg.fenced) == 1
+        assert reg.fenced[0].term == 2 and reg.fenced[0].granted_term == 3
+        assert reg.stale_applied == 0
+
+    def test_bus_fences_stale_sender_end_to_end(self):
+        from repro.core.mitigation import NullEngine
+        from repro.dpu.election import LeaderLease
+        eng = NullEngine()
+        reg = FencingRegistry()
+        reg.term = 5
+        bus = CommandBus(eng, np.random.default_rng(0),
+                         down=LinkParams(delay=1e-3),
+                         ack=LinkParams(delay=1e-3))
+        lease = LeaderLease("deposed")
+        lease.term = 4                              # believes an old term
+        bus.lease = lease
+        bus.fencing = reg
+        bus.send(_cmd(cmd_id=1, ts=0.0), 0.0)
+        for t in (1e-3, 2e-3, 3e-3):
+            bus.advance(t)
+        assert bus.stats.fenced == 1
+        assert bus.stats.applied == 0
+        assert eng.calls == []                      # zero double-actuation
+        assert reg.stale_applied == 0
+        assert bus.stats.acked == 1                 # nack closed retry state
+        assert bus.stats.live_acked == 0            # ...but is not liveness
+
+    def test_superseded_late_ack_is_not_liveness(self):
+        # satellite regression: a late straggler superseded by a newer
+        # applied command gets a nack that closes its retry state — it
+        # must NOT count as channel liveness (live_acked) and must NOT
+        # clear the sidecar's exhaustion latch
+        from repro.core.mitigation import NullEngine
+        eng = NullEngine()
+        bus = CommandBus(eng, np.random.default_rng(0),
+                         down=LinkParams(delay=1e-3),
+                         ack=LinkParams(delay=1e-3))
+        bus.send(_cmd(cmd_id=5, ts=0.0), 0.0)       # newest applies first
+        for t in (1e-3, 2e-3, 3e-3):
+            bus.advance(t)
+        assert bus.stats.applied == 1
+        live_before = bus.stats.live_acked
+        bus.send(_cmd(cmd_id=3, ts=0.05), 0.05)     # older id: superseded
+        for t in (0.051, 0.052, 0.053):
+            bus.advance(t)
+        assert bus.stats.superseded == 1
+        assert bus.stats.acked == 2
+        assert bus.stats.live_acked == live_before  # nack isn't liveness
+        # and the sidecar latch keyed on live acks stays latched
+        plane = TelemetryPlane(n_nodes=4, mitigate=False)
+        side = DPUSidecar(plane, DPUParams(ping_every=0.0), mitigate=False)
+        side.bus = bus
+        side._bus_dirty = True
+        side._acked_seen = bus.stats.live_acked
+        side._exhausted_seen = bus.stats.exhausted
+        side._self_telemetry()
+        assert side._bus_dirty                      # stale nack didn't clear
+
+
+def _mk_pair(wd_kw=None, primary_kw=None, standby_kw=None, mitigate=False):
+    plane = TelemetryPlane(n_nodes=4, mitigate=False)
+    side = DPUSidecar(plane, DPUParams(**(primary_kw or {})),
+                      mitigate=mitigate)
+    sb_plane = TelemetryPlane(n_nodes=4, mitigate=False)
+    standby = DPUSidecar(sb_plane, DPUParams(**(standby_kw or {})),
+                         mitigate=mitigate, seed=1)
+    wd = Watchdog(side, WatchdogParams(**(wd_kw or {})), mitigate=mitigate,
+                  standby=standby)
+    return side, standby, wd
+
+
+class TestHotStandbyPromotion:
+    def test_standby_shadows_without_leading(self):
+        side, standby, wd = _mk_pair()
+        _drive(wd, 1.0)
+        assert wd.state == Watchdog.NORMAL
+        assert wd.promotions == 0
+        assert standby.guard.last_seq > 0           # warm the whole time
+        assert wd.arbiter.registry.holder == "primary"
+        assert wd.arbiter.registry.term == 1
+
+    def test_primary_crash_promotes_warm_standby(self):
+        side, standby, wd = _mk_pair(primary_kw=dict(crash_at=0.5))
+        _drive(wd, 1.0)
+        assert wd.state == Watchdog.STANDBY
+        assert wd.promotions == 1
+        assert wd.failovers == 0                    # hot path, not degraded
+        assert wd.arbiter.registry.holder == "standby"
+        assert wd.arbiter.registry.term == 2
+        # promotion waited for the delivered lease horizon to expire
+        assert wd.arbiter.registry.stale_applied == 0
+
+    def test_primary_return_demotes_hysteretically(self):
+        side, standby, wd = _mk_pair(
+            primary_kw=dict(crash_at=0.5, restart_after=0.2))
+        _drive(wd, 1.5)
+        assert wd.state == Watchdog.NORMAL
+        assert wd.promotions == 1
+        assert wd.failbacks == 1
+        assert wd.arbiter.registry.holder == "primary"
+        assert wd.arbiter.registry.term == 3        # crash, promote, regrant
+
+    def test_both_dark_degrades_to_host_mode(self):
+        side, standby, wd = _mk_pair(
+            primary_kw=dict(crash_at=0.5),
+            standby_kw=dict(crash_at=0.5))
+        _drive(wd, 1.2)
+        assert wd.state == Watchdog.FALLBACK
+        assert wd.failovers == 1
+        assert wd.arbiter.registry.holder == "host"
+
+    def test_retention_stays_bounded(self):
+        # satellite regression: many tiny flushes per simulated second must
+        # not grow the retained window past the explicit cap
+        side, standby, wd = _mk_pair(wd_kw=dict(retain_max=64))
+        t = 0.0
+        for _ in range(500):
+            wd.observe_batch(_batch(1, ts0=t))
+            t += 1e-5                               # payload clock crawls
+        assert len(wd._retained) <= 64
+
+    def test_force_failover_does_not_restamp_ts(self):
+        # satellite regression: a redundant force landing mid-incident must
+        # not reset failover_ts — the dark-window evidence handover keys
+        # off the original failover instant
+        side, standby, wd = _mk_pair(primary_kw=dict(crash_at=0.3))
+        _drive(wd, 0.8)
+        assert wd.state != Watchdog.NORMAL
+        ts0 = wd.failover_ts
+        wd.force_failover(0.9)
+        assert wd.failover_ts == ts0

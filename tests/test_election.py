@@ -1,0 +1,104 @@
+"""Property-based safety tests for the leader-lease protocol
+(``repro.dpu.election``).
+
+The invariant the whole standby design rests on: **at most one sidecar
+holds a valid lease at the current term at any instant**, no matter how
+renewals, lost renewals (OOB partitions), revocations, grants, and time
+advances interleave.  The arbiter enforces it through delivered-horizon
+tracking — these tests hammer arbitrary interleavings against it.
+
+Runs under hypothesis when installed, else the seeded fallback
+(``proptest_fallback``) draws a fixed batch of examples.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # pragma: no cover
+    from proptest_fallback import given, settings, st
+
+from repro.dpu import ElectionArbiter, LeaseParams
+
+HOLDERS = ("primary", "standby", "host")
+
+# one protocol step: (op, holder index, time delta).  dt spans sub-lease
+# jitters up to multiple full lease horizons so expiry boundaries are hit.
+step_strategy = st.tuples(
+    st.sampled_from(["renew", "renew_lost", "revoke", "grant",
+                     "grant_lost", "tick"]),
+    st.integers(0, len(HOLDERS) - 1),
+    st.floats(0.0, 0.3),
+)
+
+
+def _apply(arb: ElectionArbiter, now: float, step) -> float:
+    op, hi, dt = step
+    now += dt
+    holder = HOLDERS[hi]
+    if op == "renew":
+        arb.renew(now)
+    elif op == "renew_lost":
+        arb.renew(now, delivered=False)
+    elif op == "revoke":
+        arb.revoke(holder, now)
+    elif op == "grant":
+        arb.grant(holder, now)
+    elif op == "grant_lost":
+        arb.grant(holder, now, delivered=False)
+    # "tick": time advances, nothing else
+    return now
+
+
+class TestLeaseSafety:
+    @given(st.lists(step_strategy, min_size=1, max_size=60))
+    @settings(max_examples=120, deadline=None)
+    def test_at_most_one_valid_holder_at_any_instant(self, steps):
+        arb = ElectionArbiter(LeaseParams(lease_s=0.12))
+        for h in HOLDERS:
+            arb.register(h)
+        now = 0.0
+        arb.grant("primary", now)
+        for step in steps:
+            now = _apply(arb, now, step)
+            # the invariant must hold at the instant of every state change
+            # AND just inside every holder's expiry boundary
+            instants = [now] + [
+                lease.lease_until - 1e-9
+                for lease in arb.leases.values()
+                if lease.lease_until > now
+            ]
+            for t in instants:
+                valid = arb.valid_holders(t)
+                assert len(valid) <= 1, (
+                    f"split brain at t={t:.4f}: {valid} "
+                    f"(term {arb.registry.term})")
+
+    @given(st.lists(step_strategy, min_size=1, max_size=60))
+    @settings(max_examples=60, deadline=None)
+    def test_terms_never_regress(self, steps):
+        arb = ElectionArbiter(LeaseParams())
+        for h in HOLDERS:
+            arb.register(h)
+        now, last_term = 0.0, 0
+        arb.grant("primary", now)
+        for step in steps:
+            now = _apply(arb, now, step)
+            assert arb.registry.term >= last_term
+            last_term = arb.registry.term
+            # no sidecar's local view may ever run ahead of the authority
+            for lease in arb.leases.values():
+                assert lease.term <= arb.registry.term
+
+    @given(st.lists(step_strategy, min_size=1, max_size=60))
+    @settings(max_examples=60, deadline=None)
+    def test_valid_holder_matches_registry(self, steps):
+        # whenever someone's lease is valid, it is the registry's holder:
+        # the actuator's fencing view and the lease view never disagree
+        arb = ElectionArbiter(LeaseParams())
+        for h in HOLDERS:
+            arb.register(h)
+        now = 0.0
+        arb.grant("primary", now)
+        for step in steps:
+            now = _apply(arb, now, step)
+            for h in arb.valid_holders(now):
+                assert h == arb.registry.holder

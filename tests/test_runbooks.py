@@ -27,25 +27,25 @@ from repro.sim import SCENARIOS, run_scenario
 
 
 class TestRegistry:
-    def test_37_rows(self):
+    def test_39_rows(self):
         # the paper's 28 rows (3a/3b/3c) + the DP-routing extensions (3d:
         # cross-replica + intra-replica hierarchical) + the DPU
         # self-diagnosis row (dpu) + the collective/rail/memory tier (3e:
         # per-collective straggler, rail congestion, HBM-bandwidth cliff)
         # + the monitoring-plane rows (mon: DPU outage, telemetry blackout,
-        # command partition)
-        assert len(ALL_RUNBOOKS) == 37
+        # command partition, standby shadow lag, split-brain fencing)
+        assert len(ALL_RUNBOOKS) == 39
         assert len(BY_TABLE["3a"]) == 9
         assert len(BY_TABLE["3b"]) == 10
         assert len(BY_TABLE["3c"]) == 9
         assert len(BY_TABLE["3d"]) == 2
         assert len(BY_TABLE["3e"]) == 3
         assert len(BY_TABLE["dpu"]) == 1
-        assert len(BY_TABLE["mon"]) == 3
+        assert len(BY_TABLE["mon"]) == 5
 
     def test_one_detector_per_row(self):
         dets = build_detectors()
-        assert len(dets) == 37
+        assert len(dets) == 39
         for entry in ALL_RUNBOOKS:
             assert entry.row_id in dets
             assert dets[entry.row_id].name == entry.row_id
@@ -61,7 +61,7 @@ class TestRegistry:
             assert entry.action in ACTIONS, entry.row_id
 
     def test_detector_count_matches(self):
-        assert len(ALL_DETECTORS) == 37
+        assert len(ALL_DETECTORS) == 39
 
     def test_sibling_rows_are_real_rows(self):
         from repro.core.runbooks import BY_ID
@@ -180,7 +180,8 @@ class TestMonNeverFalseFire:
     trips only its own row — plus the one declared cascade (a DPU restart
     really does leave a telemetry gap behind)."""
 
-    MON_ROWS = ("dpu_outage", "telemetry_blackout", "command_partition")
+    MON_ROWS = ("dpu_outage", "telemetry_blackout", "command_partition",
+                "standby_lag", "split_brain_fenced")
 
     @pytest.mark.parametrize("name", ["healthy", "healthy_replicated"])
     def test_silent_on_baselines(self, name):
@@ -218,7 +219,36 @@ class TestMonNeverFalseFire:
         allowed = {sc.row_id}
         if name == "dpu_outage":
             allowed.add("telemetry_blackout")
+        elif name == "standby_lag":
+            # the standby's own uplink blackout latches its (merged-in)
+            # blackout self-telemetry — same physical gap, second vantage
+            allowed.add("telemetry_blackout")
+        elif name == "split_brain_fenced":
+            # the downlink partition that blinds the corroborating probe
+            # also burns the primary's ping retries (its own obituary),
+            # and the OOB heartbeat silence reads as an outage
+            allowed.update({"command_partition", "dpu_outage"})
         assert fired & set(self.MON_ROWS) <= allowed
+
+    def test_silent_with_hot_standby_on(self):
+        # healthy cluster under the *redundant* monitoring-plane stack: a
+        # hot standby shadowing the tap, lease renewals every probe.  No
+        # findings, no promotion, no fencing, and the primary must still
+        # hold the original term at the end.
+        import dataclasses
+        from repro.dpu import DPUParams, WatchdogParams
+        sc = SCENARIOS["healthy"]
+        params = dataclasses.replace(
+            sc.params, control="dpu",
+            dpu=DPUParams(ping_every=0.02),
+            standby=DPUParams(), watchdog=WatchdogParams())
+        _, plane, _ = run_scenario(sc.fault, params, sc.workload)
+        assert {f.name for f in plane.findings} == set()
+        assert plane.failovers == 0
+        assert plane.promotions == 0
+        assert plane.arbiter.registry.term == 1
+        assert plane.arbiter.registry.holder == "primary"
+        assert len(plane.arbiter.registry.fenced) == 0
 
 
 class TestAttribution:
