@@ -210,11 +210,29 @@ def telemetry_perf() -> list[tuple]:
         derived += f";identical_findings={identical}"
         return (f"telemetry_perf/{label}", dt / n_events * 1e6, derived)
 
-    return [
+    rows = [
         row("batched", dt_batched),
         row("scalar", dt_scalar, speedup=True),
         row("scalar_prestaged", dt_prestaged, speedup=True),
     ]
+    # per-detector ns/event breakdown (sampled every-Nth window on an
+    # offset slot so it never sits inside the plane-wide timing windows);
+    # aggregated across the batched lane's planes
+    det_s: dict[str, float] = {}
+    det_n: dict[str, int] = {}
+    for p in planes_b:
+        for k, v in p.stats.det_seconds.items():
+            det_s[k] = det_s.get(k, 0.0) + v
+        for k, v in p.stats.det_events.items():
+            det_n[k] = det_n.get(k, 0) + v
+    for name in sorted(det_s):
+        n = det_n.get(name, 0)
+        if not n:
+            continue
+        ns = det_s[name] / n * 1e9
+        rows.append((f"telemetry_perf/detector/{name}", ns / 1e3,
+                     f"ns_per_event={ns:.0f};timed_events={n}"))
+    return rows
 
 
 def _table3(table: str, seed: int = 0) -> list[tuple]:
@@ -474,6 +492,47 @@ def mitigation_loop() -> list[tuple]:
     return rows
 
 
+def _ttm_columns(sim, sc, m, validate_report, bad, eps, ctx) -> str:
+    """Derived-column suffix with the traced TTM decomposition for one
+    dpu-mode cell, plus the gate bookkeeping: a fault scenario must carry
+    exactly one schema-valid incident report whose phases telescope back
+    to the scalar ``t_recover`` within ``eps`` (one detector poll); a
+    healthy cell must carry none."""
+    tracer = getattr(sim, "tracer", None)
+    incs = tracer.incidents if tracer is not None else []
+    if not sc.row_id:
+        if incs:
+            bad.append(f"{ctx}:healthy_incident")
+        return ""
+    if not incs:
+        bad.append(f"{ctx}:no_incident")
+        return ""
+    rep = incs[0].to_report()
+    errs = validate_report(rep)
+    if errs:
+        bad.append(f"{ctx}:schema:{errs[0]}")
+    t = rep["ttm"]
+
+    def _f(v):
+        return f"{v:.3f}" if v is not None else "nan"
+
+    if sim.fault.mitigated and m.mitigated_ts >= 0:
+        phases = [t[k] for k in ("t_detect", "t_attribute", "t_decide",
+                                 "t_bus_rtt", "t_apply")]
+        if any(p is None for p in phases):
+            bad.append(f"{ctx}:phase_missing")
+        else:
+            total = sum(phases)
+            t_rec = m.mitigated_ts - sc.fault.start
+            if abs(total - t_rec) > eps:
+                bad.append(f"{ctx}:sum:{total:.3f}!={t_rec:.3f}")
+    return (f";ttm_detect_s={_f(t['t_detect'])}"
+            f";ttm_attr_s={_f(t['t_attribute'])}"
+            f";ttm_decide_s={_f(t['t_decide'])}"
+            f";ttm_bus_s={_f(t['t_bus_rtt'])}"
+            f";ttm_apply_s={_f(t['t_apply'])}")
+
+
 def control_loop(seed: int = 0) -> list[tuple]:
     """Closed-loop topology comparison: ``dpu`` vs ``instant`` vs ``none``.
 
@@ -492,14 +551,30 @@ def control_loop(seed: int = 0) -> list[tuple]:
     ``actions``.  Scenario durations are extended by 1 s over canonical so
     slow-confirming rows fit their confirmation + actuation inside the run.
 
+    dpu cells additionally run with causal tracing attached and carry the
+    decomposed TTM columns (``ttm_detect_s``, ``ttm_attr_s``,
+    ``ttm_decide_s``, ``ttm_bus_s``, ``ttm_apply_s``) from the incident
+    report — the telescoped phases of ``t_recover_s``:
+
+      ttm_detect_s — fault injection to the first bound finding
+      ttm_attr_s   — finding to first attribution (same poll: 0)
+      ttm_decide_s — attribution to the recovering command's issue time
+                     (absorbs confirmation dwell + policy arbitration)
+      ttm_bus_s    — command issue to host delivery (modeled command-bus
+                     RTT incl. retries; 0 on bus-less paths)
+      ttm_apply_s  — delivery to fault neutralization (0 in the sim:
+                     applies are instantaneous)
+
     The summary row asserts the acceptance properties: dpu recovers every
     fault scenario with hit_rate 1.0, healthy runs take zero actions in
-    every mode, and time-to-mitigate under dpu is strictly greater than
-    instant wherever instant recovers at all.
+    every mode, time-to-mitigate under dpu is strictly greater than
+    instant wherever instant recovers at all, and every dpu cell's phases
+    sum back to ``t_recover_s`` within one detector poll interval.
     """
     import os
 
     from repro.core.runbooks import row_hit
+    from repro.obs import validate_report
     from repro.sim import SCENARIOS, run_scenario
 
     names = os.environ.get("CONTROL_LOOP_SCENARIOS")
@@ -511,16 +586,27 @@ def control_loop(seed: int = 0) -> list[tuple]:
     recover = {}
     hits = {}
     healthy_actions = 0
+    ttm_bad = []
+    # dpu cells run traced: the incident report's decomposed TTM phases
+    # (detect/attribute/decide/bus/apply) must telescope back to the
+    # scalar t_recover within one detector poll interval
+    TTM_SUM_EPS = 0.25
     for name in picked:
         sc = SCENARIOS[name].variant(seed=seed)
         for mode in ("none", "instant", "dpu"):
             params = dataclasses.replace(
-                sc.params, duration=sc.params.duration + 1.0, control=mode)
+                sc.params, duration=sc.params.duration + 1.0, control=mode,
+                trace=(mode == "dpu"))
             t0 = time.perf_counter()
             m, plane, sim = run_scenario(
                 dataclasses.replace(sc.fault), params, sc.workload,
                 mitigate=(mode != "none"))
             wall = (time.perf_counter() - t0) * 1e6
+            ttm_txt = ""
+            if mode == "dpu":
+                ttm_txt = _ttm_columns(
+                    sim, sc, m, validate_report, ttm_bad,
+                    TTM_SUM_EPS, f"control_loop:{name}")
             fired = {f.name for f in plane.findings}
             start = sc.fault.start if sc.row_id else 0.0
             if sc.row_id:
@@ -544,7 +630,7 @@ def control_loop(seed: int = 0) -> list[tuple]:
                 f"t_recover_s={m.mitigated_ts - start:.3f};"
                 f"recovered={int(sim.fault.mitigated)};"
                 f"p99_latency_s={m.p(0.99):.3f};"
-                f"actions={len(plane.actions)}"))
+                f"actions={len(plane.actions)}" + ttm_txt))
     faulted = [n for n in picked if SCENARIOS[n].row_id]
     dpu_recovered = all(recover[n]["dpu"][0] for n in faulted)
     dpu_hit = all(hits[n]["dpu"] for n in faulted)
@@ -558,17 +644,18 @@ def control_loop(seed: int = 0) -> list[tuple]:
         f"dpu_recovered_all={int(dpu_recovered)};"
         f"dpu_ttm_gt_instant={int(strictly_slower)};"
         f"instant_unrecovered={len(only_dpu)};"
-        f"healthy_fp_actions={healthy_actions}")
+        f"healthy_fp_actions={healthy_actions};"
+        f"ttm_decomposed_ok={int(not ttm_bad)}")
     rows.append(("control_loop/summary", 0.0, summary))
     # the acceptance properties are a GATE, not a printout: a regression on
     # any grid (smoke or the CI full registry) must exit nonzero
     if not (dpu_hit and dpu_recovered and strictly_slower
-            and healthy_actions == 0):
+            and healthy_actions == 0 and not ttm_bad):
         failed = sorted(n for n in faulted
                         if not (hits[n]["dpu"] and recover[n]["dpu"][0]))
         raise AssertionError(
             f"control_loop acceptance failed ({summary}); "
-            f"bad scenarios: {failed or 'ttm/healthy property'}")
+            f"bad scenarios: {failed or ttm_bad or 'ttm/healthy property'}")
     return rows
 
 
@@ -674,6 +761,17 @@ def chaos(seed: int = 0) -> list[tuple]:
     losing the monitoring plane mid-incident delays mitigation but never
     loses it.
 
+    Every Part-B cell runs with causal tracing attached and carries the
+    decomposed TTM columns (``ttm_detect_s``/``ttm_attr_s``/
+    ``ttm_decide_s``/``ttm_bus_s``/``ttm_apply_s`` — see
+    :func:`control_loop` for definitions); the summary's
+    ``{hot,deg}_t_*_mean`` fields attribute the hot-vs-degraded gap to
+    named phases: the hot path pays a command-bus RTT (``t_bus_rtt`` > 0)
+    that the in-process degraded fallback never does, while the degraded
+    path's extra latency lands in ``t_decide``/``t_detect`` (re-seeded
+    detector state after failover).  Phases must telescope back to the
+    scalar recovery time within one detector poll interval.
+
     Part B also runs every non-structural scenario a second time with a
     hot standby sidecar attached (``chaos/hot/*`` rows): the standby
     shadows the same tap and takes over under an OOB lease when the
@@ -750,8 +848,15 @@ def chaos(seed: int = 0) -> list[tuple]:
     # re-seeding it at failover; both together bound at one probe period
     # plus one poll — anything beyond that is a real regression
     TTM_EPS = 0.06
+    from repro.obs import validate_report
     faulted = [n for n, sc in SCENARIOS.items() if sc.row_id]
     ttm_deg_all, ttm_hot_all = [], []
+    # decomposed-phase accumulators: both modes run traced, so the
+    # hot-vs-degraded gap is attributable to named phases (the degraded
+    # path re-pays detection after failback; the hot path pays a
+    # command-bus RTT the in-process host fallback never does)
+    phase_sums = {"hot": {}, "deg": {}}
+    phase_cells = {"hot": 0, "deg": 0}
     for name in faulted:
         sc = SCENARIOS[name].variant(seed=seed)
         # scenarios whose fault targets the standby pair itself carry a
@@ -765,7 +870,7 @@ def chaos(seed: int = 0) -> list[tuple]:
                                         dpu_restart_after=0.4)
             params = dataclasses.replace(
                 sc.params, duration=sc.params.duration + 2.0,
-                control="dpu",
+                control="dpu", trace=True,
                 standby=(sc.params.standby if structural
                          else DPUParams() if mode == "hot" else None),
                 watchdog=WatchdogParams())
@@ -777,9 +882,20 @@ def chaos(seed: int = 0) -> list[tuple]:
             hit = row_hit(sc.row_id, fired)
             ttm = (m.mitigated_ts - start if m.mitigated_ts >= 0
                    else float("nan"))
-            per_mode[mode] = (ttm, hit, sim.fault.mitigated, plane, wall)
+            ttm_txt = _ttm_columns(sim, sc, m, validate_report, bad,
+                                   0.25, f"B:{mode}:{name}")
+            if sim.tracer is not None and sim.tracer.incidents \
+                    and sim.fault.mitigated:
+                for k, v in sim.tracer.incidents[0].to_report()[
+                        "ttm"].items():
+                    if v is not None:
+                        phase_sums[mode][k] = \
+                            phase_sums[mode].get(k, 0.0) + v
+                phase_cells[mode] += 1
+            per_mode[mode] = (ttm, hit, sim.fault.mitigated, plane, wall,
+                              ttm_txt)
         if "deg" in per_mode:
-            ttm, hit, rec, plane, wall = per_mode["deg"]
+            ttm, hit, rec, plane, wall, ttm_txt = per_mode["deg"]
             rows.append((
                 f"chaos/midcrash/{name}", wall,
                 f"hit={int(hit)};"
@@ -787,10 +903,10 @@ def chaos(seed: int = 0) -> list[tuple]:
                 f"recovered={int(rec)};"
                 f"restarts={plane.sidecar.restarts};"
                 f"failovers={plane.failovers};"
-                f"actions={len(plane.actions)}"))
+                f"actions={len(plane.actions)}" + ttm_txt))
             if not (hit and rec):
                 bad.append(f"B:{name}")
-        ttm_h, hit, rec, plane, wall = per_mode["hot"]
+        ttm_h, hit, rec, plane, wall, ttm_txt = per_mode["hot"]
         el = plane.arbiter.report()
         ttm_d = per_mode["deg"][0] if "deg" in per_mode else float("nan")
         rows.append((
@@ -801,7 +917,7 @@ def chaos(seed: int = 0) -> list[tuple]:
             f"recovered={int(rec)};"
             f"promotions={plane.promotions};"
             f"fenced={el['fenced']};"
-            f"stale_applied={el['stale_applied']}"))
+            f"stale_applied={el['stale_applied']}" + ttm_txt))
         if not (hit and rec and plane.promotions >= 1
                 and el["stale_applied"] == 0):
             bad.append(f"B:hot:{name}")
@@ -816,6 +932,10 @@ def chaos(seed: int = 0) -> list[tuple]:
     # its whole price of admission is the shadowed-warm detector state
     if not mean_h < mean_d:
         bad.append(f"B:ttm_mean:{mean_h:.3f}>={mean_d:.3f}")
+    phase_means = {
+        mode: {k: v / phase_cells[mode]
+               for k, v in sorted(phase_sums[mode].items())}
+        for mode in ("hot", "deg") if phase_cells[mode]}
 
     # -- part C: election safety on a healthy cluster ----------------------
     c_schedules = {
@@ -873,15 +993,131 @@ def chaos(seed: int = 0) -> list[tuple]:
                          and not plane.findings)
         if not ok:
             bad.append(f"C:{name}")
+    # per-phase attribution of the hot-vs-degraded TTM gap, straight from
+    # the traced incident reports (means over recovered cells per mode)
+    attr = "".join(
+        f";{mode}_{k}_mean={v:.3f}"
+        for mode in ("hot", "deg") for k, v in phase_means.get(
+            mode, {}).items() if k != "t_recover")
     rows.append(("chaos/summary", 0.0,
                  f"schedules={len(schedules)};"
                  f"midcrash_scenarios={len(faulted)};"
                  f"election_schedules={len(c_schedules)};"
                  f"ttm_hot_mean={mean_h:.3f};"
                  f"ttm_degraded_mean={mean_d:.3f};"
-                 f"gate_ok={int(not bad)}"))
+                 f"gate_ok={int(not bad)}" + attr))
     if bad:
         raise AssertionError(f"chaos lane acceptance failed: {bad}")
+    return rows
+
+
+def obs(seed: int = 0) -> list[tuple]:
+    """Observability lane: tracing overhead + incident-report round trip.
+
+    Part 1 (overhead gate): the telemetry_perf batched-ingest mix replays
+    twice — tracer/flight-recorder detached vs attached — min-of-3 each.
+    The gate: attaching observability costs < 5% events/sec AND changes
+    no finding (observe-only by construction; this is the perf half of
+    the golden-parity guard in ``tests/test_obs.py``).
+
+    Part 2 (incident round trip): one fault scenario runs closed-loop
+    (dpu mode) with tracing on; its incident report must be schema-valid,
+    its TTM phases must telescope back to the scalar recovery time, and
+    the report + the Prometheus metrics exposition are written to
+    ``artifacts/incident_report.json`` / ``artifacts/obs_metrics.prom``
+    (CI archives both).  The ``obs/incident`` row carries the decomposed
+    TTM columns (see :func:`control_loop` for definitions).
+    """
+    import json
+    import os
+
+    from repro.core import TelemetryPlane
+    from repro.obs import (
+        FlightRecorder,
+        Tracer,
+        collect_metrics,
+        validate_report,
+    )
+    from repro.sim import SCENARIOS, run_scenario
+
+    traces = _record_3a_traces()
+    n_events = sum(len(c) for _, chunks in traces for c in chunks)
+    bad = []
+
+    def _ingest(traced):
+        best, planes = float("inf"), None
+        for _ in range(3):
+            planes = [TelemetryPlane(n_nodes=4, mitigate=False,
+                                     tables=("3a",)) for _ in traces]
+            if traced:
+                for p in planes:
+                    p.tracer = Tracer(recorder=FlightRecorder())
+                    p.trace_source = "plane"
+                    p.recorder = p.tracer.recorder
+            t0 = time.perf_counter()
+            for plane, (_, chunks) in zip(planes, traces):
+                for c in chunks:
+                    plane.observe_batch(c)
+            best = min(best, time.perf_counter() - t0)
+        return best, planes
+
+    def _findings(planes):
+        return [(f.name, f.node, f.ts, f.severity, f.score)
+                for p in planes for f in p.findings]
+
+    dt_off, planes_off = _ingest(False)
+    dt_on, planes_on = _ingest(True)
+    overhead_pct = (dt_on - dt_off) / dt_off * 100.0
+    identical = int(_findings(planes_off) == _findings(planes_on))
+    if not identical:
+        bad.append("tracing changed findings")
+    if overhead_pct >= 5.0:
+        bad.append(f"tracing overhead {overhead_pct:.1f}% >= 5%")
+    rows = [(
+        "obs/tracing_overhead", dt_on / n_events * 1e6,
+        f"events={n_events};"
+        f"events_per_sec_off={n_events / dt_off:.0f};"
+        f"events_per_sec_on={n_events / dt_on:.0f};"
+        f"overhead_pct={overhead_pct:.2f};"
+        f"identical_findings={identical}")]
+
+    # -- part 2: one closed-loop incident, exported end to end -------------
+    sc = SCENARIOS["tp_straggler"].variant(seed=seed)
+    params = dataclasses.replace(
+        sc.params, duration=sc.params.duration + 1.0, control="dpu",
+        trace=True)
+    t0 = time.perf_counter()
+    m, plane, sim = run_scenario(dataclasses.replace(sc.fault), params,
+                                 sc.workload, mitigate=True)
+    wall = (time.perf_counter() - t0) * 1e6
+    ttm_txt = _ttm_columns(sim, sc, m, validate_report, bad, 0.25,
+                           "obs:incident")
+    if not sim.fault.mitigated:
+        bad.append("incident scenario did not recover")
+    incs = sim.tracer.incidents
+    rep = incs[0].to_report() if incs else {}
+    rows.append((
+        "obs/incident", wall,
+        f"incidents={len(incs)};"
+        f"closed={int(bool(rep.get('closed')))};"
+        f"timeline_events={len(rep.get('timeline', []))};"
+        f"recorder_frames={sim.recorder.occupancy()}" + ttm_txt))
+
+    os.makedirs("artifacts", exist_ok=True)
+    with open("artifacts/incident_report.json", "w") as fh:
+        json.dump(sim.tracer.reports(), fh, indent=1)
+    prom = collect_metrics(tracer=sim.tracer, plane=sim.plane.plane,
+                           sidecar=sim.plane,
+                           recorder=sim.recorder).render()
+    with open("artifacts/obs_metrics.prom", "w") as fh:
+        fh.write(prom)
+    n_samples = sum(1 for line in prom.splitlines()
+                    if line and not line.startswith("#"))
+    rows.append(("obs/metrics_exposition", 0.0,
+                 f"samples={n_samples};bytes={len(prom)};"
+                 f"gate_ok={int(not bad)}"))
+    if bad:
+        raise AssertionError(f"obs lane acceptance failed: {bad}")
     return rows
 
 
@@ -980,6 +1216,6 @@ def roofline_readout() -> list[tuple]:
 ALL_TABLES = [
     table1_archzoo, table2_signals, telemetry_perf, sim_perf, table3a,
     table3b, table3c, table3d, table3e, router_policies, mitigation_loop,
-    control_loop, collective, chaos, serving_engine, kernels_bench,
+    control_loop, collective, chaos, obs, serving_engine, kernels_bench,
     roofline_readout,
 ]

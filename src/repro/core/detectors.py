@@ -86,6 +86,13 @@ META_MON_FENCE = 11      # QUEUE_SAMPLE: stale-term commands fenced by the
 #                          host actuator since the last probe (size =
 #                          fenced delta, depth = current granted term;
 #                          node = -1); emitted only when the delta is > 0
+META_MON_RETAIN = 12     # QUEUE_SAMPLE: watchdog retained-tap-window gauge
+#                          (size = retained batch count, depth = payload
+#                          span covered in ms; node = -1) — emitted every
+#                          probe while the window is non-empty, so a
+#                          count-cap-starved replay window (and with it a
+#                          thin remirror_standby) is observable, not
+#                          inferred.  No detector consumes it today.
 
 
 def _ext_group(group: int) -> bool:

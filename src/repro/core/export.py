@@ -20,6 +20,41 @@ TITLES = {
 }
 
 
+def render_incident(report: dict) -> str:
+    """Render one incident report (see ``repro.obs.trace``) as a markdown
+    timeline table — the human-facing face of the flight recorder.
+
+    The table is phase-ordered causally within equal timestamps (detect
+    before decide before bus before apply), and a TTM decomposition
+    footer shows where the time-to-mitigate went.
+    """
+    ttm = report.get("ttm", {})
+    ms = report.get("milestones", {})
+    out = [f"## Incident {report['incident_id']} — row "
+           f"`{report['row']}`" + (" (recovered)" if report.get("closed")
+                                   else " (open)"), ""]
+    fs = ms.get("fault_start")
+    if fs is not None:
+        out.append(f"Fault injected at t={fs:.3f}s; first finding at "
+                   f"t={report['opened_ts']:.3f}s.")
+        out.append("")
+    out.append("| t (s) | phase | event | source | detail |")
+    out.append("|---|---|---|---|---|")
+    for ev in report.get("timeline", []):
+        detail = ", ".join(f"{k}={v}" for k, v in ev["detail"].items())
+        out.append(f"| {ev['ts']:.4f} | {ev['phase']} | {ev['name']} "
+                   f"| {ev['source']} | {detail} |")
+    phases = [(k, ttm.get(k)) for k in
+              ("t_detect", "t_attribute", "t_decide", "t_bus_rtt",
+               "t_apply", "t_recover")]
+    if any(v is not None for _, v in phases):
+        out.append("")
+        out.append("TTM decomposition: " + "  ".join(
+            f"{k}={v * 1000.0:.1f}ms" for k, v in phases
+            if v is not None))
+    return "\n".join(out) + "\n"
+
+
 def render() -> str:
     out = ["# Runbooks (generated from repro.core.runbooks)\n"]
     for table in DEFAULT_TABLES:

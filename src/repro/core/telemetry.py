@@ -41,6 +41,11 @@ class TelemetryStats:
     update_seconds: float = 0.0   # wall-time inside SAMPLED ingest windows
     timed_events: int = 0         # events covered by those windows
     poll_seconds: float = 0.0
+    # per-detector-family breakdown, from *separate* sampled windows
+    # (offset half a cadence from the plane-wide ones so the inner timer
+    # pairs never sit inside — and inflate — the plane-wide measurement)
+    det_seconds: dict = field(default_factory=dict)
+    det_events: dict = field(default_factory=dict)
 
     def ns_per_event(self) -> float:
         """Per-event detector-update cost, from sampled timing windows.
@@ -53,6 +58,19 @@ class TelemetryStats:
         if self.timed_events == 0:
             return 0.0
         return self.update_seconds / self.timed_events * 1e9
+
+    def ns_per_event_by_detector(self) -> dict:
+        """Per-detector-family cost (ns per event *that family saw*).
+
+        Same every-Nth sampling cadence as :meth:`ns_per_event`; one
+        slow detector no longer hides inside the plane-wide average.
+        """
+        out = {}
+        for name, secs in self.det_seconds.items():
+            n = self.det_events.get(name, 0)
+            if n:
+                out[name] = secs / n * 1e9
+        return out
 
 
 class DPUAgent:
@@ -90,6 +108,11 @@ class DPUAgent:
         self.detectors: dict[str, Detector] = build_detectors(cfg, tables)
         self.stream = EventStream(full_trace=full_trace)
         self.sample_every = max(sample_every, 1)
+        # per-detector breakdown windows sit half a cadence away from the
+        # plane-wide ones so their inner timer pairs never inflate the
+        # plane-wide figure (disabled when sample_every == 1: every
+        # window is already plane-timed)
+        self._det_slot = self.sample_every // 2
         self._batches = 0
         self._index_detectors()
         self.stats = TelemetryStats()
@@ -115,6 +138,10 @@ class DPUAgent:
                 for kind in det.interested:
                     self._fallback_by_kind.setdefault(kind, []).append(det)
         self._fallback_kinds = frozenset(self._fallback_by_kind)
+        # detector object -> runbook-row name, for the per-family
+        # timing breakdown (rebuilt with the detectors after a crash)
+        self._det_name: dict[int, str] = {
+            id(det): name for name, det in self.detectors.items()}
 
     def reset_detectors(self) -> None:
         """Rebuild every detector from scratch — the DPU-crash model:
@@ -124,13 +151,30 @@ class DPUAgent:
         self.detectors = build_detectors(self._cfg, self._tables)
         self._index_detectors()
 
+    def _update_timed(self, dets, ev: Event) -> None:
+        # per-detector breakdown window: one timer pair per update call
+        names = self._det_name
+        ds = self.stats.det_seconds
+        de = self.stats.det_events
+        for det in dets:
+            d0 = time.perf_counter()
+            det.update(ev)
+            dt = time.perf_counter() - d0
+            name = names[id(det)]
+            ds[name] = ds.get(name, 0.0) + dt
+            de[name] = de.get(name, 0) + 1
+
     def observe(self, ev: Event) -> None:
         stats = self.stats
-        timed = stats.events % self.sample_every == 0
+        slot = stats.events % self.sample_every
+        timed = slot == 0
         t0 = time.perf_counter() if timed else 0.0
         self.stream.emit(ev)
-        for det in self._by_kind.get(ev.kind, ()):
-            det.update(ev)
+        if not timed and slot == self._det_slot:
+            self._update_timed(self._by_kind.get(ev.kind, ()), ev)
+        else:
+            for det in self._by_kind.get(ev.kind, ()):
+                det.update(ev)
         stats.events += 1
         if timed:
             stats.update_seconds += time.perf_counter() - t0
@@ -141,21 +185,28 @@ class DPUAgent:
         if n == 0:
             return
         stats = self.stats
-        timed = self._batches % self.sample_every == 0
+        slot = self._batches % self.sample_every
+        timed = slot == 0
+        det_timed = not timed and slot == self._det_slot
         self._batches += 1
         t0 = time.perf_counter() if timed else 0.0
         self.stream.emit_batch(batch)
         if n < self.SMALL_BATCH:
             # per-event replay: cheaper than columnar below the crossover
             by_kind = self._by_kind
-            for ev in batch.iter_events():
-                for det in by_kind.get(ev.kind, ()):
-                    det.update(ev)
+            if det_timed:
+                for ev in batch.iter_events():
+                    self._update_timed(by_kind.get(ev.kind, ()), ev)
+            else:
+                for ev in batch.iter_events():
+                    for det in by_kind.get(ev.kind, ()):
+                        det.update(ev)
         else:
             kinds = batch.kind
             present = set(np.unique(kinds).tolist())
             single = len(present) == 1
             subs: dict[int, EventBatch] = {}
+            names = self._det_name
             for det in self._vec_dets:
                 for k in det.interested:
                     if k not in present:
@@ -164,12 +215,26 @@ class DPUAgent:
                     if sub is None:
                         sub = batch if single else batch.compress(kinds == k)
                         subs[k] = sub
-                    det.update_batch(sub)
+                    if det_timed:
+                        d0 = time.perf_counter()
+                        det.update_batch(sub)
+                        dt = time.perf_counter() - d0
+                        name = names[id(det)]
+                        stats.det_seconds[name] = \
+                            stats.det_seconds.get(name, 0.0) + dt
+                        stats.det_events[name] = \
+                            stats.det_events.get(name, 0) + len(sub)
+                    else:
+                        det.update_batch(sub)
             if self._fallback_kinds & present:
                 fbk = self._fallback_by_kind
-                for ev in batch.iter_events():
-                    for det in fbk.get(ev.kind, ()):
-                        det.update(ev)
+                if det_timed:
+                    for ev in batch.iter_events():
+                        self._update_timed(fbk.get(ev.kind, ()), ev)
+                else:
+                    for ev in batch.iter_events():
+                        for det in fbk.get(ev.kind, ()):
+                            det.update(ev)
         stats.events += n
         if timed:
             stats.update_seconds += time.perf_counter() - t0
@@ -217,6 +282,10 @@ class TelemetryPlane:
         self._last_seen: dict[tuple[str, int], float] = {}
         self.dedup_window = 1.0
         self._warming = False
+        # observability (observe-only; None = disabled, the default)
+        self.tracer = None
+        self.trace_source = ""
+        self.recorder = None
 
     # -- ingestion -------------------------------------------------------
 
@@ -239,6 +308,10 @@ class TelemetryPlane:
         if n == 0:
             return
         ts = batch.ts
+        if self.recorder is not None and not self._warming:
+            # flight recorder: one ring append per delivered frame
+            # (warm-start replays are historical, not fresh telemetry)
+            self.recorder.on_batch(float(ts[n - 1]), batch)
         start = 0
         while True:
             # first event (in wire order — batches need not be globally
@@ -299,7 +372,7 @@ class TelemetryPlane:
         ends at the replay edge, so live ingest continues seamlessly."""
         s = self.agent.stats
         snap = (s.events, s.findings, s.update_seconds, s.timed_events,
-                s.poll_seconds)
+                s.poll_seconds, dict(s.det_seconds), dict(s.det_events))
         self._warming = True
         try:
             for b in batches:
@@ -307,7 +380,7 @@ class TelemetryPlane:
         finally:
             self._warming = False
             (s.events, s.findings, s.update_seconds, s.timed_events,
-             s.poll_seconds) = snap
+             s.poll_seconds, s.det_seconds, s.det_events) = snap
 
     # -- control path ----------------------------------------------------
 
@@ -328,8 +401,15 @@ class TelemetryPlane:
         if not fresh:
             return []
         self.findings.extend(fresh)
+        tracer = self.tracer
+        if tracer is not None:
+            for f in fresh:
+                tracer.on_finding(f, self.trace_source)
         atts = self.attributor.observe(fresh)
         self.attributions.extend(atts)
+        if tracer is not None:
+            for a in atts:
+                tracer.on_attribution(a, self.trace_source)
         self.agent.stats.attributions += len(atts)
         if self.controller is not None:
             acts = self.controller.consider_all(atts)
@@ -357,4 +437,6 @@ class TelemetryPlane:
             "attributions_by_locus": by_locus,
             "actions": [(r.ts, r.action, r.node) for r in self.actions],
             "ns_per_event": self.stats.ns_per_event(),
+            "ns_per_event_by_detector":
+                self.stats.ns_per_event_by_detector(),
         }

@@ -102,6 +102,9 @@ class CommandBus:
         # stale-term deliveries.  Both None on a legacy single-DPU bus.
         self.lease = None
         self.fencing = None
+        # observability (observe-only; None = disabled)
+        self.tracer = None
+        self.trace_source = ""
         self._outstanding: dict[int, _Outstanding] = {}
         self._applied_ids: set[int] = set()
         # newest applied command id per (action, node): supersession check
@@ -120,6 +123,8 @@ class CommandBus:
             cmd = replace(cmd, term=self.lease.term)
         self.stats.sent += 1
         self._outstanding[cmd.cmd_id] = _Outstanding(cmd, 1, now)
+        if self.tracer is not None:
+            self.tracer.on_bus("send", cmd, now, self.trace_source)
         self.down.send(now, cmd)
 
     def drop_outstanding(self) -> int:
@@ -146,6 +151,9 @@ class CommandBus:
                 self.stats.acked += 1
                 if live:
                     self.stats.live_acked += 1
+                if self.tracer is not None:
+                    self.tracer.on_bus("ack", cmd, now, self.trace_source,
+                                       ok=ok, live=live)
                 if self.on_ack is not None:
                     self.on_ack(cmd, ok)
         self._retry(now)
@@ -159,6 +167,9 @@ class CommandBus:
             # learns; the FencedCommand record is the split-brain audit
             # trail (split_brain_fenced row).
             self.stats.fenced += 1
+            if self.tracer is not None:
+                self.tracer.on_bus("fenced", cmd, now, self.trace_source,
+                                   fence_term=self.fencing.term)
             self.ack.send(now, (cmd, False, False))
             return []
         if cmd.action == PING_ACTION:
@@ -174,11 +185,17 @@ class CommandBus:
             return []
         if now - cmd.ts > self.stale_after:
             self.stats.stale_dropped += 1
+            if self.tracer is not None:
+                self.tracer.on_bus("stale", cmd, now, self.trace_source,
+                                   age=now - cmd.ts)
             self.ack.send(now, (cmd, False, False))
             return []
         newest = self._newest_applied.get((cmd.action, cmd.node))
         if newest is not None and newest > cmd.cmd_id:
             self.stats.superseded += 1
+            if self.tracer is not None:
+                self.tracer.on_bus("superseded", cmd, now,
+                                   self.trace_source, newest=newest)
             self.ack.send(now, (cmd, False, False))
             return []
         # actuators that need wall time (e.g. ReplicaSet view refresh) read
@@ -190,6 +207,11 @@ class CommandBus:
             # counter staying zero is the at-most-one-actuator proof the
             # chaos lane asserts
             self.fencing.stale_applied += 1
+        if self.tracer is not None:
+            # before the actuator runs, so the synchronous apply hook can
+            # attribute its decided_ts to this command's issue time
+            self.tracer.on_bus("deliver", cmd, now, self.trace_source,
+                               attempt_age=now - cmd.ts)
         ok = (self.engine.apply_action(cmd.action, cmd.node, detail)
               if self.engine is not None else False)
         self._applied_ids.add(cmd.cmd_id)
@@ -222,10 +244,18 @@ class CommandBus:
                 self.stats.expired += 1
                 if st.attempt >= self.max_retries:
                     self.stats.exhausted += 1
+                if self.tracer is not None:
+                    self.tracer.on_bus(
+                        "expired", st.cmd, now, self.trace_source,
+                        attempts=st.attempt,
+                        exhausted=st.attempt >= self.max_retries)
                 if self.on_expired is not None:
                     self.on_expired(st.cmd, st.attempt >= self.max_retries)
                 continue
             st.attempt += 1
             st.last_sent = now
             self.stats.retries += 1
+            if self.tracer is not None:
+                self.tracer.on_bus("retry", st.cmd, now, self.trace_source,
+                                   attempt=st.attempt)
             self.down.send(now, st.cmd)

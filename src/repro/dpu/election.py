@@ -130,6 +130,8 @@ class ElectionArbiter:
         self.grants = 0
         self.renewals = 0
         self.lost_renewals = 0
+        # observability (observe-only; None = disabled)
+        self.tracer = None
 
     def register(self, holder: str) -> LeaderLease:
         lease = self.leases.get(holder)
@@ -182,6 +184,9 @@ class ElectionArbiter:
         self._horizon[holder] = min(self._horizon[holder], now)
         if self.leader == holder:
             self.leader = None
+        if self.tracer is not None:
+            self.tracer.on_transition("lease_revoke", now, "arbiter",
+                                      holder=holder, term=lease.term)
 
     def grant(self, holder: str, now: float,
               delivered: bool = True) -> int:
@@ -204,6 +209,11 @@ class ElectionArbiter:
         self.registry.holder = holder
         self.leader = holder
         self.grants += 1
+        if self.tracer is not None:
+            self.tracer.on_transition("lease_grant", now, "arbiter",
+                                      holder=holder,
+                                      term=self.registry.term,
+                                      delivered=delivered)
         lease = self.leases[holder]
         if delivered:
             lease.term = self.registry.term

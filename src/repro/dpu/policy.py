@@ -124,6 +124,9 @@ class PolicyEngine:
         # gap / DPU restart can never fire a command off stale state
         self.quarantine_until = float("-inf")
         self.quarantined = 0
+        # observability (observe-only; None = disabled)
+        self.tracer = None
+        self.trace_source = ""
 
     # -- chaos / hardening hooks -----------------------------------------
 
@@ -268,6 +271,18 @@ class PolicyEngine:
     def decide(self, now: float) -> list[Command]:
         """Arbitrate this round's candidates into at most one command per
         (conflict-group, node)."""
+        sup0 = len(self.suppressed)
+        cmds = self._decide(now)
+        tracer = self.tracer
+        if tracer is not None:
+            for reason, ts, action, node, row in self.suppressed[sup0:]:
+                tracer.on_suppressed(reason, ts, action, node, row,
+                                     self.trace_source)
+            for cmd in cmds:
+                tracer.on_command(cmd, self.trace_source)
+        return cmds
+
+    def _decide(self, now: float) -> list[Command]:
         if now < self.quarantine_until:
             for a in self._staged:
                 self.suppressed.append(

@@ -230,6 +230,27 @@ class DPUSidecar:
         self.lease = None
         self.recall_s = 1.3
         self._recent_atts: list = []
+        # observability (observe-only; None = disabled)
+        self.tracer = None
+        self.trace_source = ""
+
+    def attach_tracer(self, tracer, source: str,
+                      recorder=None) -> None:
+        """Thread one shared Tracer through every stage of this sidecar's
+        loop (plane findings/attributions, policy decisions, bus
+        lifecycle, crash/restart transitions).  Observe-only."""
+        self.tracer = tracer
+        self.trace_source = source
+        self.plane.tracer = tracer
+        self.plane.trace_source = source
+        if recorder is not None:
+            self.plane.recorder = recorder
+        if self.policy is not None:
+            self.policy.tracer = tracer
+            self.policy.trace_source = source
+        if self.bus is not None:
+            self.bus.tracer = tracer
+            self.bus.trace_source = source
 
     # -- producer-facing plane protocol -----------------------------------
 
@@ -340,6 +361,10 @@ class DPUSidecar:
         if self.bus is not None:
             self.bus.drop_outstanding()
         self._recent_atts.clear()     # recall buffer is DPU DRAM too
+        if self.tracer is not None:
+            self.tracer.on_transition(
+                "dpu_crash", now, self.trace_source,
+                lost_rows=self.crash_lost_rows)
 
     def _restart(self, now: float) -> None:
         self.crashed = False
@@ -350,6 +375,9 @@ class DPUSidecar:
         if self.policy is not None:
             self.policy.quarantine(now + self.params.quarantine_s)
         self._next_ping = now
+        if self.tracer is not None:
+            self.tracer.on_transition("dpu_restart", now, self.trace_source,
+                                      restarts=self.restarts)
 
     # -- the DPU's own cycle ----------------------------------------------
 

@@ -71,6 +71,7 @@ from repro.core.detectors import (
     META_MON_BUS,
     META_MON_FENCE,
     META_MON_HEARTBEAT,
+    META_MON_RETAIN,
     META_MON_STANDBY,
 )
 from repro.core.events import EventBatch, EventBatchBuilder, EventKind
@@ -141,6 +142,13 @@ class Watchdog:
         self.failbacks = 0
         self.failover_ts = -1.0
         self._retained: list[EventBatch] = []
+        # count-cap evictions: batches dropped while still inside the
+        # retain_s horizon.  Nonzero means the replay window is silently
+        # narrower than configured — exactly the condition the
+        # META_MON_RETAIN probe gauge makes observable
+        self.retain_evictions = 0
+        # observability (observe-only; None = disabled)
+        self.tracer = None
         self._next_probe = 0.0
         self._alive_since = -1.0      # first healthy probe after failover
         self._att_i = 0               # standby attributions already consumed
@@ -202,6 +210,7 @@ class Watchdog:
         # so an explicit count cap keeps the window bounded outright
         while len(self._retained) > self.params.retain_max:
             self._retained.pop(0)
+            self.retain_evictions += 1
         if self.fanout is not None:
             self.fanout.observe_batch(batch)
         else:
@@ -253,6 +262,20 @@ class Watchdog:
             self.standby_side.bind(engine)
         if self.fallback is not None:
             self.fallback.engine = engine
+
+    def attach_tracer(self, tracer, recorder=None) -> None:
+        """Thread one shared Tracer through every vantage the watchdog
+        supervises.  The flight recorder rides only on the primary
+        sidecar's plane (failover replays into the degraded plane are
+        historical traffic, not fresh frames).  Observe-only."""
+        self.tracer = tracer
+        self.sidecar.attach_tracer(tracer, "primary", recorder=recorder)
+        if self.standby_side is not None:
+            self.standby_side.attach_tracer(tracer, "standby")
+        self.standby.tracer = tracer
+        self.standby.trace_source = "fallback"
+        if self.arbiter is not None:
+            self.arbiter.tracer = tracer
 
     # -- actuations routed back from the host ------------------------------
 
@@ -391,6 +414,16 @@ class Watchdog:
         b.add(now, int(EventKind.QUEUE_SAMPLE), -1, -1, -1,
               1 if silent else 0, int(silence * 1000), -1, -1,
               META_MON_HEARTBEAT, -1)
+        if self._retained:
+            # retained-window gauge: occupancy (batches) + payload span
+            # (ms).  A span visibly below retain_s (count-cap evictions)
+            # is what makes a thin remirror_standby replay *observable*
+            # instead of inferred after the fact
+            span_ms = int((float(self._retained[-1].ts[-1])
+                           - float(self._retained[0].ts[-1])) * 1000.0)
+            b.add(now, int(EventKind.QUEUE_SAMPLE), -1, -1, -1,
+                  len(self._retained), span_ms, -1, -1,
+                  META_MON_RETAIN, -1)
         if bus_dark:
             b.add(now, int(EventKind.QUEUE_SAMPLE), -1, -1, -1,
                   bus.stats.exhausted, bus.stats.retries, -1, -1,
@@ -512,6 +545,9 @@ class Watchdog:
             return
         self.state = self.STANDBY
         self.promotions += 1
+        if self.tracer is not None:
+            self.tracer.on_transition("promote_standby", now, "watchdog",
+                                      term=term)
         self._alive_since = -1.0
         self._promote_ts = now
         self._satt_i = len(self.standby_side.plane.attributions)
@@ -537,6 +573,9 @@ class Watchdog:
             return
         self.state = self.NORMAL
         self.failbacks += 1
+        if self.tracer is not None:
+            self.tracer.on_transition("demote_standby", now, "watchdog",
+                                      term=term)
         self._alive_since = -1.0
         # a pending quorum escalation is lease state, not confirmation
         # state: its one-shot evidence (e.g. per-node findings that landed
@@ -583,6 +622,10 @@ class Watchdog:
     def _failover(self, now: float) -> None:
         self.state = self.FALLBACK
         self.failovers += 1
+        if self.tracer is not None:
+            self.tracer.on_transition(
+                "failover", now, "watchdog",
+                retained_batches=len(self._retained))
         self.failover_ts = now
         self._alive_since = -1.0
         self._dark_atts = []
@@ -599,6 +642,8 @@ class Watchdog:
     def _failback(self, now: float) -> None:
         self.state = self.NORMAL
         self.failbacks += 1
+        if self.tracer is not None:
+            self.tracer.on_transition("failback", now, "watchdog")
         self._alive_since = -1.0
         # the live tee stops here; without a reset the standby's detectors
         # would read the taper as cluster-wide starvation on the next probe
@@ -706,6 +751,12 @@ class Watchdog:
             "standby_findings": len(self.standby.findings),
             "fallback_actions": (len(self.fallback.log)
                                  if self.fallback else 0),
+            "retained_batches": len(self._retained),
+            "retained_span_s": (
+                float(self._retained[-1].ts[-1])
+                - float(self._retained[0].ts[-1])
+                if self._retained else 0.0),
+            "retain_evictions": self.retain_evictions,
         }
         if self.arbiter is not None:
             out["watchdog"]["promotions"] = self.promotions

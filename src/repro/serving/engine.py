@@ -49,6 +49,9 @@ class EngineConfig:
     control: str = "instant"
     dpu: "object | None" = None      # repro.dpu.DPUParams override
     dpu_seed: int = 0                # sidecar wire RNG (XORed with node)
+    # observe-only causal tracing (repro.obs): spans for every finding /
+    # policy decision / bus exchange / actuation on this engine's loop
+    trace: bool = False
 
 
 class InferenceEngine:
@@ -82,6 +85,21 @@ class InferenceEngine:
             self._sink = self.dpu
         elif self.plane is not None and self.plane.controller is not None:
             self.plane.controller.engine = self
+        # observability (observe-only; engine runs have no FaultSpec, so
+        # incidents open on the first finding and never auto-close)
+        self.tracer = None
+        self.recorder = None
+        if self.cfg.trace and self.plane is not None:
+            from repro.obs import FlightRecorder, Tracer
+            self.recorder = FlightRecorder()
+            self.tracer = Tracer(recorder=self.recorder)
+            if self.dpu is not None:
+                self.dpu.attach_tracer(self.tracer, "primary",
+                                       recorder=self.recorder)
+            else:
+                self.plane.tracer = self.tracer
+                self.plane.trace_source = "engine"
+                self.plane.recorder = self.recorder
         # stacked per-slot caches: leaf shape (slots, ...)
         single = model.init_cache(1, self.cfg.max_seq)
         self.slot_cache = jax.tree.map(
@@ -107,6 +125,11 @@ class InferenceEngine:
     # ------------------------------------------------------------------
 
     def apply_action(self, action: str, node: int, detail: dict) -> bool:
+        if self.tracer is not None:
+            # the live engine has no fault oracle, so no recovery flip —
+            # the apply is recorded on the open incident's span tree
+            self.tracer.on_apply(action, node, self.clock, False, False,
+                                 "engine")
         if action == "inflight_remap":
             self.sched.set_continuous(True)
             return True

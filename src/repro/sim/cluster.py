@@ -170,6 +170,14 @@ class SimParams:
     # warm standby; both dark -> degraded host mode.  None = no standby,
     # bit-identical to the single-sidecar topology.
     standby: DPUParams | None = None
+    # --- observability (repro.obs) ---
+    # When True, run_scenario threads one shared Tracer + FlightRecorder
+    # through every control-loop stage (findings, attribution, policy,
+    # bus, actuation, watchdog/election transitions) and exposes it as
+    # ``sim.tracer``.  Strictly observe-only: zero RNG draws, no event
+    # mutation — findings are bit-identical with this on or off (the
+    # golden-parity guard in tests/test_obs.py asserts it).
+    trace: bool = False
 
 
 @dataclass
@@ -467,6 +475,10 @@ class ClusterSim:
         # pumps its cycle once per round (uplink delivery, budget drain,
         # policy decisions, command/ack exchange)
         self._ctrl = plane if hasattr(plane, "advance") else None
+        # shared Tracer (repro.obs) when params.trace; attached by
+        # run_scenario after construction.  Observe-only.
+        self.tracer = None
+        self.recorder = None
         self._t = 0.0                  # current round's host-clock time
         self._flood = self.fault.telemetry_flood > 0
         self._flood_tmpl: tuple | None = None
@@ -492,10 +504,15 @@ class ClusterSim:
         from repro.core.runbooks import BY_ID
         entry = BY_ID.get(self.fault.row_id)
         matched = entry is not None and entry.action == action
+        newly = matched and not self.fault.mitigated
         if matched:
             if not self.fault.mitigated:
                 m.mitigated_ts = self._t
             self.fault.mitigated = True
+        if self.tracer is not None:
+            # recovery confirmation: the apply that flips ``mitigated``
+            # closes the open incident and pins its TTM milestones
+            self.tracer.on_apply(action, node, self._t, matched, newly)
         # actions with a concrete actuation in the sim help regardless of
         # whether they were the prescribed row action
         if action == "inflight_remap":
@@ -2013,6 +2030,14 @@ def run_scenario(fault: FaultSpec,
                             mitigate=mitigate, standby=standby)
         sim = ClusterSim(params, workload, fault, ctrl)
         ctrl.bind(sim)
+        if params.trace:
+            tracer, recorder = _build_tracer(fault)
+            if params.watchdog is not None:
+                ctrl.attach_tracer(tracer, recorder=recorder)
+            else:
+                side.attach_tracer(tracer, "primary", recorder=recorder)
+            sim.tracer = tracer
+            sim.recorder = recorder
         metrics = sim.run()
         return metrics, (ctrl if params.watchdog is not None else plane), sim
     if mode not in ("none", "instant"):
@@ -2023,5 +2048,24 @@ def run_scenario(fault: FaultSpec,
     sim = ClusterSim(params, workload, fault, plane)
     if mitigate and plane.controller is not None:
         plane.controller.engine = sim
+    if params.trace:
+        tracer, recorder = _build_tracer(fault)
+        plane.tracer = tracer
+        plane.trace_source = "plane"
+        plane.recorder = recorder
+        sim.tracer = tracer
+        sim.recorder = recorder
     metrics = sim.run()
     return metrics, plane, sim
+
+
+def _build_tracer(fault: FaultSpec):
+    """One shared Tracer + FlightRecorder per traced run (lazy import:
+    the obs layer must never be on the untraced hot path)."""
+    from repro.obs import FlightRecorder, Tracer
+    recorder = FlightRecorder()
+    tracer = Tracer(
+        fault_start=fault.start if fault.row_id else None,
+        fault_row=fault.row_id or None,
+        recorder=recorder)
+    return tracer, recorder

@@ -42,6 +42,7 @@ class SweepJob:
     scalar_synth: bool = False
     tables: tuple[str, ...] = DEFAULT_TABLES
     mitigate: bool = False
+    trace: bool = False
 
 
 @dataclass
@@ -52,6 +53,7 @@ class SweepConfig:
     scalar_synth: bool = False
     tables: tuple[str, ...] = DEFAULT_TABLES
     mitigate: bool = False
+    trace: bool = False                        # attach causal tracing
 
     def jobs(self) -> list[SweepJob]:
         from repro.sim.faults import SCENARIOS
@@ -61,7 +63,8 @@ class SweepConfig:
         if unknown:
             raise ValueError(f"unknown scenarios: {unknown}")
         return [SweepJob(scenario=n, seed=s, scalar_synth=self.scalar_synth,
-                         tables=self.tables, mitigate=self.mitigate)
+                         tables=self.tables, mitigate=self.mitigate,
+                         trace=self.trace)
                 for n in names for s in self.seeds]
 
 
@@ -81,6 +84,8 @@ class SweepResult:
     tokens_out: int
     p99_latency: float
     p99_ttft: float
+    incidents: list = field(default_factory=list)  # incident reports
+    #                        (plain dicts; only with SweepConfig.trace)
 
     @property
     def events_per_sec(self) -> float:
@@ -113,6 +118,29 @@ class SweepReport:
         """Findings on explicitly-healthy baselines."""
         return sum(sum(r.findings.values()) for r in self.results
                    if not r.row_id)
+
+    def incident_problems(self) -> list[str]:
+        """Traced-sweep gate (call only when ``SweepConfig.trace`` was
+        set): every fault cell must carry exactly one schema-valid
+        incident report — one trace context per fault episode — and
+        every healthy cell must carry none."""
+        from repro.obs import validate_report
+        probs: list[str] = []
+        for r in self.results:
+            cell = f"{r.scenario}/seed{r.seed}"
+            if not r.row_id:
+                if r.incidents:
+                    probs.append(f"{cell}: healthy cell opened "
+                                 f"{len(r.incidents)} incident(s)")
+                continue
+            if len(r.incidents) != 1:
+                probs.append(f"{cell}: expected exactly one incident, "
+                             f"got {len(r.incidents)}")
+            for rep in r.incidents:
+                errs = validate_report(rep)
+                if errs:
+                    probs.append(f"{cell}: invalid report: {errs[0]}")
+        return probs
 
     def summary(self) -> dict:
         per_scenario = {}
@@ -149,9 +177,12 @@ def _run_job(job: SweepJob) -> SweepResult:
 
     sc = SCENARIOS[job.scenario].variant(seed=job.seed,
                                          scalar_synth=job.scalar_synth)
+    params = sc.params
+    if job.trace:
+        params = dataclasses.replace(params, trace=True)
     t0 = time.perf_counter()
-    metrics, plane, _sim = run_scenario(
-        dataclasses.replace(sc.fault), sc.params, sc.workload,
+    metrics, plane, sim = run_scenario(
+        dataclasses.replace(sc.fault), params, sc.workload,
         mitigate=job.mitigate, tables=job.tables)
     wall = time.perf_counter() - t0
     findings: dict[str, int] = {}
@@ -160,12 +191,15 @@ def _run_job(job: SweepJob) -> SweepResult:
     hit = (sc.row_id in findings) if sc.row_id else True
     latency = (metrics.first_finding_ts - sc.fault.start
                if metrics.first_finding_ts >= 0 else -1.0)
+    incidents = (sim.tracer.reports()
+                 if getattr(sim, "tracer", None) is not None else [])
     return SweepResult(
         scenario=job.scenario, row_id=sc.row_id, seed=job.seed, hit=hit,
         findings=findings, detect_latency=latency,
         events=plane.stats.events, wall_s=wall,
         completed=metrics.completed, tokens_out=metrics.tokens_out,
-        p99_latency=metrics.p(0.99), p99_ttft=metrics.p_ttft(0.99))
+        p99_latency=metrics.p(0.99), p99_ttft=metrics.p_ttft(0.99),
+        incidents=incidents)
 
 
 def _default_workers() -> int:
@@ -208,6 +242,10 @@ def main(argv: list[str] | None = None) -> int:
                     help="use the per-event reference synthesis path")
     ap.add_argument("--mitigate", action="store_true",
                     help="attach the closed-loop mitigation controller")
+    ap.add_argument("--trace", action="store_true",
+                    help="attach causal tracing + flight recorder; "
+                         "gates one schema-valid incident report per "
+                         "fault cell (always on under --smoke)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized grid: one row per family, 1 seed, "
                          "2 workers")
@@ -223,6 +261,9 @@ def main(argv: list[str] | None = None) -> int:
         # and the five monitoring-plane chaos rows (DPU outage, telemetry
         # blackout, command partition, standby shadow lag, split-brain
         # fencing)
+        # smoke runs traced: the incident gate below asserts one
+        # schema-valid flight-recorder report per fault cell, zero on
+        # healthy — the observability layer's own CI acceptance check
         cfg = SweepConfig(
             scenarios=("healthy", "tp_straggler", "hot_replica",
                        "stale_router_view", "hierarchical_routing_skew",
@@ -231,16 +272,23 @@ def main(argv: list[str] | None = None) -> int:
                        "telemetry_blackout", "command_partition",
                        "standby_lag", "split_brain_fenced"),
             seeds=(0,), workers=args.workers or 2,
-            scalar_synth=args.scalar_synth, mitigate=args.mitigate)
+            scalar_synth=args.scalar_synth, mitigate=args.mitigate,
+            trace=True)
     else:
         cfg = SweepConfig(
             scenarios=(tuple(args.scenarios.split(","))
                        if args.scenarios else None),
             seeds=tuple(int(s) for s in args.seeds.split(",")),
             workers=args.workers, scalar_synth=args.scalar_synth,
-            mitigate=args.mitigate)
+            mitigate=args.mitigate, trace=args.trace)
     report = run_sweep(cfg)
     summary = report.summary()
+    incident_problems: list[str] = []
+    if cfg.trace:
+        incident_problems = report.incident_problems()
+        summary["incidents"] = sum(len(r.incidents)
+                                   for r in report.results)
+        summary["incident_problems"] = incident_problems
     print(json.dumps(summary, indent=2))
     if args.json:
         out_dir = os.path.dirname(args.json)
@@ -250,9 +298,11 @@ def main(argv: list[str] | None = None) -> int:
                    "cells": [vars(r) for r in report.results]}
         with open(args.json, "w") as fh:
             json.dump(payload, fh, indent=2)
-    # a sweep that misses detections or trips healthy false positives is a
-    # regression signal for CI
-    ok = report.hit_rate() == 1.0 and report.false_positives() == 0
+    # a sweep that misses detections, trips healthy false positives, or
+    # (traced) yields malformed/missing incident reports is a regression
+    # signal for CI
+    ok = (report.hit_rate() == 1.0 and report.false_positives() == 0
+          and not incident_problems)
     return 0 if ok else 1
 
 
