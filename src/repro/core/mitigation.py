@@ -9,8 +9,8 @@ The controller consumes attributions (``core.attribution``) and issues typed
 *actions* against anything implementing ``EngineControls`` — the live JAX
 serving engine, the trainer, and the cluster simulator all implement it.
 Every runbook row's "Mitigation Directives" column maps to one action key
-(``runbooks.RunbookEntry.action``); an import-time assertion below keeps the
-two registries in lockstep.  The controller adds per-(action, node)
+(``runbooks.RunbookEntry.action``); the ``repro.lint.wiring`` static pass
+keeps the two registries in lockstep.  The controller adds per-(action, node)
 hysteresis and a cooldown so a single noisy finding doesn't thrash the
 engine.
 
@@ -100,11 +100,11 @@ ACTIONS: dict[str, str] = {
 
 # keep the two registries in lockstep: every runbook row must actuate
 # through a key the controller (and the DPU policy engine) understands.
-# BY_ID is imported above, so a row added with an unregistered action fails
-# at import time, not at actuation time.
-_orphan_actions = sorted({e.action for e in BY_ID.values()} - set(ACTIONS))
-assert not _orphan_actions, (
-    f"runbook rows reference actions missing from ACTIONS: {_orphan_actions}")
+# ACTIONS <-> runbook sync (rows only reference registered actions; every
+# action is emitted by some row) is enforced statically by
+# repro.lint.wiring.check_wiring — the wiring-action rule — gated in CI
+# and in tests/test_runbooks.py, replacing the import-time assert that
+# used to live here.
 
 
 @dataclass(frozen=True)

@@ -326,7 +326,8 @@ class PolicyEngine:
         return cmds
 
 
-# import-time consistency: the arbitration layer may only group actions the
-# controller registry knows about
-_unknown = [a for a in CONFLICT_GROUPS if a not in ACTIONS]
-assert not _unknown, f"CONFLICT_GROUPS references unknown actions: {_unknown}"
+# CONFLICT_GROUPS ⊆ ACTIONS (the arbitration layer may only group actions
+# the controller registry knows about) is enforced statically by
+# repro.lint.wiring.check_wiring — the wiring-action rule — gated in CI
+# and in tests/test_runbooks.py, replacing the import-time assert that
+# used to live here.

@@ -1,0 +1,20 @@
+"""repro.lint — determinism auditor + registry-wiring static analyzer.
+
+Two halves: :mod:`repro.lint.purity` walks the control-loop package ASTs
+for nondeterminism (wall-clock reads, unseeded RNG, mutable defaults,
+unguarded tracer/recorder hooks); :mod:`repro.lint.wiring` statically
+verifies the runbook registry's full detector/scenario/golden/
+attribution/action chain.  Run ``python -m repro.lint``; suppress with
+``# repro-lint: allow(<rule>): <reason>``.
+"""
+
+from repro.lint.cli import run_lint
+from repro.lint.findings import RULES, LintFinding, LintReport
+from repro.lint.purity import lint_source
+from repro.lint.wiring import (EXPECTED_TABLE_COUNTS, check_wiring,
+                               expected_rows)
+
+__all__ = [
+    "RULES", "LintFinding", "LintReport", "run_lint", "lint_source",
+    "check_wiring", "EXPECTED_TABLE_COUNTS", "expected_rows",
+]

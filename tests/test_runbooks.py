@@ -27,25 +27,38 @@ from repro.sim import SCENARIOS, run_scenario
 
 
 class TestRegistry:
-    def test_39_rows(self):
-        # the paper's 28 rows (3a/3b/3c) + the DP-routing extensions (3d:
-        # cross-replica + intra-replica hierarchical) + the DPU
-        # self-diagnosis row (dpu) + the collective/rail/memory tier (3e:
-        # per-collective straggler, rail congestion, HBM-bandwidth cliff)
-        # + the monitoring-plane rows (mon: DPU outage, telemetry blackout,
-        # command partition, standby shadow lag, split-brain fencing)
-        assert len(ALL_RUNBOOKS) == 39
-        assert len(BY_TABLE["3a"]) == 9
-        assert len(BY_TABLE["3b"]) == 10
-        assert len(BY_TABLE["3c"]) == 9
-        assert len(BY_TABLE["3d"]) == 2
-        assert len(BY_TABLE["3e"]) == 3
-        assert len(BY_TABLE["dpu"]) == 1
-        assert len(BY_TABLE["mon"]) == 5
+    """Registry size and wiring now live in one place:
+    ``repro.lint.wiring`` (EXPECTED_TABLE_COUNTS + check_wiring).  These
+    tests assert against that single source rather than re-hardcoding
+    counts; the per-link invariants (detector bijection, scenario
+    back-references, action registration, sibling realness, golden
+    fixtures, smoke coverage) are all folded into the wiring pass."""
+
+    def test_row_counts_match_declared(self):
+        # the paper's 28 rows (3a/3b/3c) + the DP-routing extensions (3d)
+        # + the DPU self-diagnosis row + the collective/rail/memory tier
+        # (3e) + the monitoring-plane rows (mon) — per-table numbers are
+        # declared once, in repro.lint.wiring.EXPECTED_TABLE_COUNTS
+        from repro.lint.wiring import EXPECTED_TABLE_COUNTS, expected_rows
+        assert len(ALL_RUNBOOKS) == expected_rows()
+        for table, n in EXPECTED_TABLE_COUNTS.items():
+            assert len(BY_TABLE[table]) == n, table
+
+    def test_wiring_chain_is_clean(self):
+        # the full static chain: detector class <-> row, >=1 scenario,
+        # golden fixture, attribution rule, registered action,
+        # CONFLICT_GROUPS ⊆ ACTIONS, real siblings, smoke-grid coverage
+        # (modulo the exclusion pragmas in sim/faults.py, which
+        # python -m repro.lint accounts for; here we only allow
+        # smoke-coverage findings, everything else must be empty)
+        from repro.lint.wiring import check_wiring
+        hard = [f for f in check_wiring() if f.rule != "smoke-coverage"]
+        assert not hard, "\n".join(f.format() for f in hard)
 
     def test_one_detector_per_row(self):
+        from repro.lint.wiring import expected_rows
         dets = build_detectors()
-        assert len(dets) == 39
+        assert len(dets) == expected_rows()
         for entry in ALL_RUNBOOKS:
             assert entry.row_id in dets
             assert dets[entry.row_id].name == entry.row_id
@@ -56,19 +69,9 @@ class TestRegistry:
             assert entry.scenario in SCENARIOS, entry.row_id
             assert SCENARIOS[entry.scenario].row_id == entry.row_id
 
-    def test_every_row_has_action(self):
-        for entry in ALL_RUNBOOKS:
-            assert entry.action in ACTIONS, entry.row_id
-
     def test_detector_count_matches(self):
-        assert len(ALL_DETECTORS) == 39
-
-    def test_sibling_rows_are_real_rows(self):
-        from repro.core.runbooks import BY_ID
-        for entry in ALL_RUNBOOKS:
-            for sib in entry.sibling_rows:
-                assert sib in BY_ID, f"{entry.row_id} -> {sib}"
-                assert sib != entry.row_id
+        from repro.lint.wiring import expected_rows
+        assert len(ALL_DETECTORS) == expected_rows()
 
     def test_row_hit_accepts_declared_siblings_only(self):
         from repro.core.runbooks import row_hit
@@ -85,7 +88,7 @@ class TestRegistry:
                                {"decode_early_stop_skew"})
 
     def test_every_runbook_action_is_registered(self):
-        # the import-time assertion in core.mitigation enforces this too;
+        # enforced statically by repro.lint.wiring (wiring-action rule);
         # this test documents the invariant where row authors will look
         orphans = {e.action for e in ALL_RUNBOOKS} - set(ACTIONS)
         assert not orphans, f"runbook actions missing from ACTIONS: {orphans}"
